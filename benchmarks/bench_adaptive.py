@@ -1,0 +1,60 @@
+"""Eq. 18 — adaptive per-layer compression-ratio selection.
+
+Shows the selection rule on (a) the paper's hardware and a CNN-like layer
+profile, and (b) TPU v5e ICI with llama3-8b's real layer sizes — the
+adaptive property: big-comm/small-compute layers get high ratios, layers
+whose communication hides easily get low (or dense) ratios.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, header
+from repro.configs import base
+from repro.core import adaptive, comm_model as cm
+from repro.launch import train as TR
+
+
+def run() -> int:
+    header("Eq.18 — adaptive ratio selection (paper hardware)")
+    # CNN-ish profile: many mid-size conv layers + one fat FC at the end.
+    # P=4 keeps the latency term small enough that the selection actually
+    # moves with layer size (at P=16 on 1GbE every layer needs the cap).
+    layers = [adaptive.LayerProfile(f"conv{i}", d=300_000,
+                                    backward_flops=60e9) for i in range(8)]
+    layers.append(adaptive.LayerProfile("fc", d=20_000_000,
+                                        backward_flops=10e9))
+    ratios = adaptive.choose_ratios(layers, p=4, hw=cm.ETH_1GBPS)
+    for name, c in ratios.items():
+        emit(f"eq18/eth/{name}/ratio", c, "")
+    assert ratios["fc"] >= max(ratios[f"conv{i}"] for i in range(8)), \
+        "fat layer must be compressed at least as hard"
+    emit("eq18/eth/fat_layer_compressed_hardest", 1,
+         f"fc c={ratios['fc']}, conv c={ratios['conv0']}")
+    assert min(ratios.values()) < 1000.0, \
+        "selection must differentiate (not everything at the cap)"
+    emit("eq18/eth/ratios_differentiate", 1,
+         f"range [{min(ratios.values())}, {max(ratios.values())}]")
+
+    header("Eq.18 — adaptive ratios for llama3-8b layer sizes on v5e ICI")
+    cfg = base.get_config("llama3_8b")
+    sds, _ = TR.model_shapes_and_axes(cfg)
+    flat = jax.tree.leaves(sds)
+    # leaf sizes in backprop order approximation: reverse init order
+    prof = []
+    for i, leaf in enumerate(reversed(flat)):
+        d = int(1)
+        for s in leaf.shape:
+            d *= s
+        prof.append(adaptive.LayerProfile(f"leaf{i}", d=d,
+                                          backward_flops=4.0 * d * 4096))
+    ratios = adaptive.choose_ratios(prof[:12], p=256, hw=cm.TPU_V5E_ICI)
+    vals = sorted(set(ratios.values()))
+    emit("eq18/tpu/distinct_ratios", len(vals), f"{vals}")
+    emit("eq18/tpu/min_ratio", min(ratios.values()),
+         "ICI so fast most layers can go dense/low-c")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

@@ -1,0 +1,95 @@
+"""Fig. 3 / Table 1 — convergence parity: Dense vs SLGS vs LAGS at the same
+number of steps and hyper-parameters, on learnable synthetic tasks with a
+known loss floor.
+
+Also validates Corollary 2's qualitative prediction: a larger c_max gives a
+larger terminal gap at a fixed step budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.configs import base
+from repro.data import synthetic
+from repro.models import cnn as CNN
+from repro.models import transformer as T
+from repro.training import train_loop as TL
+
+P = 8
+STEPS = 60
+
+
+def _lm(seed=0):
+    cfg = dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"),
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(seed), cfg)
+    data = synthetic.MarkovLM(vocab=cfg.vocab, seed=3)
+
+    def loss_fn(p, b):
+        return T.loss_fn(p, cfg, b, chunk=16, loss_chunk=16)
+
+    return params, loss_fn, data
+
+
+def run() -> int:
+    header("Fig.3/Table 1 — convergence parity Dense vs SLGS vs LAGS")
+    bad = 0
+
+    # --- language model ----------------------------------------------------
+    params, loss_fn, data = _lm()
+    floor = data.entropy()
+    emit("convergence/lm/optimal_ce_floor", floor, "Markov chain entropy")
+    finals = {}
+    for method in ("dense", "slgs", "lags"):
+        tcfg = TL.TrainConfig(method=method, compression_ratio=8.0, lr=0.3)
+        tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+        hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16), STEPS,
+                      log_every=1)
+        finals[method] = hist[-1]["loss"]
+        emit(f"convergence/lm/{method}/final_loss", hist[-1]["loss"],
+             f"start {hist[0]['loss']:.3f}, {STEPS} steps, c=8")
+    gap = finals["lags"] - finals["dense"]
+    emit("convergence/lm/lags_minus_dense", gap,
+         "paper Table 1: sparsified ~= dense")
+    bad += 0 if gap < 0.5 else 1
+
+    # --- Corollary 2: larger c_max => larger terminal gap -------------------
+    gaps = []
+    for c in (4.0, 32.0, 256.0):
+        tcfg = TL.TrainConfig(method="lags", compression_ratio=c, lr=0.3)
+        tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+        hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16), STEPS)
+        # run() with log_every=0 returns []; re-run final loss measurement
+        tr2 = tr
+        hist = tr2.run(lambda t: data.worker_batches(t, P, 8, 16), 1,
+                       log_every=1)
+        gaps.append((c, hist[-1]["loss"]))
+        emit(f"convergence/lm/lags_c{int(c)}/loss_after_{STEPS+1}_steps",
+             hist[-1]["loss"], "Cor.2: higher c_max converges slower")
+    monotone = gaps[0][1] <= gaps[-1][1] + 0.05
+    emit("convergence/lm/cor2_monotone_in_cmax", int(monotone),
+         f"losses {[round(g[1], 3) for g in gaps]}")
+    bad += 0 if monotone else 1
+
+    # --- CNN (paper's Cifar analogue) ---------------------------------------
+    cfg = base.get_smoke_config("paper_cnn_cifar")
+    cnn_params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
+    blobs = synthetic.Blobs(n_classes=cfg.n_classes, image_size=16)
+    for method in ("dense", "lags"):
+        tcfg = TL.TrainConfig(method=method, compression_ratio=16.0, lr=0.05)
+        tr = TL.SimTrainer(lambda p, b: CNN.cnn_loss(p, cfg, b), cnn_params,
+                           tcfg, n_workers=P)
+        hist = tr.run(lambda t: blobs.worker_batches(t, P, 8), 40,
+                      log_every=1)
+        emit(f"convergence/cnn/{method}/final_loss", hist[-1]["loss"],
+             f"start {hist[0]['loss']:.3f}")
+    return bad
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

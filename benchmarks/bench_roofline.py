@@ -1,0 +1,76 @@
+"""§Roofline — reads the dry-run artifacts (launch/dryrun.py --out) and
+prints the per-(arch x shape) roofline table: the three time terms, the
+dominant bottleneck, MODEL_FLOPS / HLO_FLOPS utility ratio, and a one-line
+what-would-move-it note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, header
+from repro.configs import base
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT_GLOB = os.path.join(_ROOT, "artifacts", "**", "dryrun_*.json")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global useful FLOPs: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill), 2·N_active·batch (decode: one token per sequence)."""
+    cfg = base.get_config(arch)
+    shape = base.INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def hint(r: dict) -> str:
+    dom = r["roofline"]["dominant"]
+    if dom == "collective":
+        return "cut collective bytes: sparser exchange / reduce-scatter EF"
+    if dom == "memory":
+        return "cut HBM traffic: remat policy / fuse EF+select / bf16 resid"
+    return "raise MXU util: larger per-chip tiles / fewer pad ops"
+
+
+def run() -> int:
+    paths = sorted(glob.glob(ARTIFACT_GLOB, recursive=True)
+                   + glob.glob(os.path.join(_ROOT, "artifacts",
+                                            "dryrun_*.json")))
+    if not paths:
+        header("Roofline — NO ARTIFACTS (run: python -m repro.launch.dryrun"
+               " --all --out artifacts)")
+        emit("roofline/artifacts_found", 0, "skipped")
+        return 0
+    header("Roofline — per (arch x shape x mesh) from compiled dry-runs")
+    n_rows = 0
+    for path in paths:
+        with open(path) as f:
+            results = json.load(f)
+        for r in results:
+            if r.get("status") != "ok":
+                continue
+            rf = r["roofline"]
+            arch, shape = r["arch"], r["shape"]
+            chips = r["n_chips"]
+            mf = model_flops(arch, shape)
+            useful = mf / chips / max(rf["hlo_flops_per_dev"], 1.0)
+            tag = f"{arch}/{shape}/{r['mesh']}"
+            emit(f"roofline/{tag}/t_compute_s", rf["t_compute"], "")
+            emit(f"roofline/{tag}/t_memory_s", rf["t_memory"], "")
+            emit(f"roofline/{tag}/t_collective_s", rf["t_collective"], "")
+            emit(f"roofline/{tag}/dominant", rf["dominant"], hint(r))
+            emit(f"roofline/{tag}/model_flops_ratio", useful,
+                 f"6ND={mf:.3g} global; >1 => HLO undercounts (scan)")
+            n_rows += 1
+    emit("roofline/rows", n_rows, f"{len(paths)} artifact files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

@@ -1,0 +1,31 @@
+"""Eq. 19 — the pipelining speedup bound S_max, swept over the
+communication-to-computation ratio r = t_c / t_b, plus its properties
+(peak at r = 1; cap 1 + t_b/(t_f + t_b))."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.core import comm_model as cm
+
+
+def run() -> int:
+    header("Eq.19 — pipeline speedup bound sweep")
+    t_f, t_b = 1.0, 2.0
+    rows = []
+    for r in (0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 10.0):
+        t_c = r * t_b
+        s = cm.pipeline_speedup_bound(t_f, t_b, t_c)
+        rows.append((r, s))
+        emit(f"eq19/smax_at_r_{r}", s, f"t_f={t_f} t_b={t_b}")
+    peak_r = max(rows, key=lambda x: x[1])[0]
+    cap = cm.max_speedup_cap(t_f, t_b)
+    emit("eq19/peak_at_r", peak_r, "paper: highest speedup near r=1")
+    emit("eq19/cap", cap, "1 + t_b/(t_f+t_b)")
+    ok = (peak_r == 1.0) and all(s <= cap + 1e-9 for _, s in rows)
+    emit("eq19/properties_hold", int(ok), "peak@r=1 and bounded by cap")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

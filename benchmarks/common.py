@@ -1,0 +1,30 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall-clock seconds per call (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """One CSV row: name,value,derived."""
+    if isinstance(value, float):
+        value = f"{value:.6g}"
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def header(title: str) -> None:
+    print(f"\n# === {title} ===", flush=True)

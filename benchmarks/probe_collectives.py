@@ -1,0 +1,90 @@
+"""Hillclimb profiler: lower one (arch x shape), rank every collective op
+in the optimized HLO by bytes, print shape + source metadata.
+
+  PYTHONPATH=src python -m benchmarks.probe_collectives --arch llama3-8b \
+      --shape train_4k [--mode dense] [--multi-pod] [--hlo-out f.txt]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+import sys
+
+from repro.launch import dryrun as DR
+from repro.launch import mesh as M
+
+
+OP_RE = re.compile(
+    r"%?([\w.-]*)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/]+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--hlo-out", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = M.make_production_mesh(multi_pod=args.multi_pod)
+    import jax
+    from repro.configs import base
+    from repro.launch import specs as SP, train as TR, serve as SV
+    cfg = base.get_config(args.arch.replace("-", "_"))
+    shape = base.INPUT_SHAPES[args.shape]
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step, state_specs, meta = TR.make_train_step(
+                cfg, mesh, method=args.mode)
+            bsd = SP.train_batch_specs(cfg, shape)
+            bps = TR.batch_pspec(bsd, mesh, M.data_axis_names(mesh))
+            from jax.sharding import NamedSharding
+            batch = jax.tree.map(
+                lambda sd, sp: jax.ShapeDtypeStruct(
+                    sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
+                bsd, bps,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            lowered = step.lower(state_specs, batch)
+        elif shape.kind == "prefill":
+            fn, a = SV.make_prefill_step(cfg, mesh, shape)
+            lowered = fn.lower(*a)
+        else:
+            fn, a = SV.make_serve_step(cfg, mesh, shape)
+            lowered = fn.lower(*a)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    if args.hlo_out:
+        with open(args.hlo_out, "w") as f:
+            f.write(hlo)
+        print(f"# wrote {len(hlo)} chars to {args.hlo_out}")
+
+    rows = []
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = OP_RE.match(ls)
+        if not m or m.group(4) == "-done":
+            continue
+        name, type_str, kind, _ = m.groups()
+        nbytes = DR._shape_bytes(type_str)
+        meta_m = META_RE.search(ls)
+        rows.append((nbytes, kind, type_str[:60],
+                     (meta_m.group(1) if meta_m else "")[:110]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"# {args.arch} x {args.shape} mode={args.mode or cfg.train_mode}: "
+          f"{len(rows)} collective ops, {total / 2**30:.2f} GiB/dev total")
+    cost = compiled.cost_analysis()
+    print(f"# cost: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+    for nbytes, kind, t, metastr in rows[:args.top]:
+        print(f"{nbytes / 2**20:10.1f} MiB  {kind:20s} {t:60s}  {metastr}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Render the EXPERIMENTS.md roofline table (markdown) from dry-run JSON.
+
+  PYTHONPATH=src python -m benchmarks.render_roofline artifacts/dryrun_all_singlepod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.bench_roofline import model_flops
+
+
+def fmt(x, digits=4):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x:.1e}"
+    return f"{x:.{digits}g}"
+
+
+def main(paths):
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            for r in json.load(f):
+                if r.get("status") == "skipped":
+                    rows.append((r["arch"], r["shape"], None, r["reason"]))
+                    continue
+                if r.get("status") != "ok":
+                    rows.append((r["arch"], r["shape"], None,
+                                 f"ERROR {r.get('error', '?')[:40]}"))
+                    continue
+                rf = r["roofline"]
+                mf = model_flops(r["arch"], r["shape"])
+                ratio = mf / r["n_chips"] / max(rf["hlo_flops_per_dev"], 1.0)
+                rows.append((r["arch"], r["shape"], r["mesh"], {
+                    "tc": rf["t_compute"], "tm": rf["t_memory"],
+                    "tl": rf["t_collective"], "dom": rf["dominant"],
+                    "ratio": ratio,
+                    "peak_gb": (r["bytes_per_device"]["peak"] or 0) / 2**30,
+                }))
+    print("| arch | shape | mesh | t_compute s | t_memory s | "
+          "t_collective s | dominant | 6ND/HLO | peak GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, mesh, d in rows:
+        if mesh is None:
+            print(f"| {arch} | {shape} | — | — | — | — | skip | — | — |"
+                  f"  <!-- {d} -->")
+            continue
+        print(f"| {arch} | {shape} | {mesh} | {fmt(d['tc'])} | {fmt(d['tm'])}"
+              f" | {fmt(d['tl'])} | **{d['dom']}** | {d['ratio']:.2f} | "
+              f"{d['peak_gb']:.2f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

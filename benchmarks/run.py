@@ -1,0 +1,45 @@
+"""Benchmark driver — one bench per paper table/figure.
+
+  bench_assumption      Fig. 2   delta^(l) <= 1 during LAGS training
+  bench_convergence     Fig. 3 / Table 1   Dense vs SLGS vs LAGS parity
+  bench_iteration_time  Table 2  alpha-beta wall-clock model (paper + TPU)
+  bench_speedup_bound   Eq. 19   pipeline speedup bound properties
+  bench_adaptive        Eq. 18   per-layer ratio selection
+  bench_kernels         Sec. 5   top-k selection cost (TPU-native analogue)
+  bench_roofline        (system) roofline table from dry-run artifacts
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run             # all
+  PYTHONPATH=src python -m benchmarks.run assumption  # one
+Output: ``name,value,derived`` CSV rows; exit code = number of failed
+validation checks.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = ("speedup_bound", "adaptive", "iteration_time", "kernels",
+           "assumption", "convergence", "roofline")
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    names = argv or list(BENCHES)
+    bad = 0
+    t0 = time.time()
+    for name in names:
+        name = name.removeprefix("bench_")
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t1 = time.time()
+        rc = mod.run()
+        print(f"# bench_{name}: rc={rc} ({time.time() - t1:.1f}s)",
+              flush=True)
+        bad += rc
+    print(f"# total: {time.time() - t0:.1f}s, failed checks: {bad}",
+          flush=True)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

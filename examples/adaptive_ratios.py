@@ -1,0 +1,58 @@
+"""Eq. 18 in practice: pick per-layer compression ratios for llama3-8b from
+the communication-to-computation ratio, on two networks (the paper's 1 Gbps
+Ethernet and TPU v5e ICI), then bucket the resulting sparse messages (§5).
+
+  PYTHONPATH=src python examples/adaptive_ratios.py
+"""
+import jax
+
+from repro.configs import base
+from repro.core import adaptive, bucketing, comm_model as cm
+from repro.launch import train as TR
+
+
+def profile_layers(arch: str, seq_tokens: int = 4096 * 8):
+    """Backprop-ordered per-leaf (name, d, backward_flops) for an arch."""
+    cfg = base.get_config(arch)
+    sds, _ = TR.model_shapes_and_axes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(sds)[0]
+    out = []
+    for path, leaf in reversed(flat):  # reverse init order ~ backprop order
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        d = int(1)
+        for s in leaf.shape:
+            d *= s
+        # backward matmul flops ~ 4 * d * tokens (fwd 2dN, bwd 4dN)
+        out.append(adaptive.LayerProfile(name, d=d,
+                                         backward_flops=4.0 * d * seq_tokens))
+    return cfg, out
+
+
+def main():
+    cfg, layers = profile_layers("llama3_8b")
+    print(f"{cfg.name}: {len(layers)} learnable tensors, "
+          f"{sum(l.d for l in layers) / 1e9:.2f}B params")
+    for hw, p in ((cm.ETH_1GBPS, 16), (cm.TPU_V5E_ICI, 256)):
+        ratios = adaptive.choose_ratios(layers, p=p, hw=hw)
+        ks = [max(1, int(l.d / ratios[l.name])) for l in layers]
+        buckets = bucketing.assign_buckets(ks, target_bytes=1 << 20)
+        stats = bucketing.bucket_stats(buckets)
+        dense_bytes = 4 * sum(l.d for l in layers)
+        sparse_bytes = 8 * sum(ks)
+        print(f"\n--- {hw.name} (P={p}) ---")
+        shown = 0
+        for l in layers:
+            if shown < 6 and l.d > 1e6:
+                print(f"  {l.name[:60]:60s} d={l.d / 1e6:7.1f}M "
+                      f"c={ratios[l.name]:6.0f}")
+                shown += 1
+        print(f"  traffic: dense {dense_bytes / 1e9:.2f} GB -> sparse "
+              f"{sparse_bytes / 1e6:.1f} MB "
+              f"({dense_bytes / sparse_bytes:.0f}x reduction)")
+        print(f"  buckets: {stats['n_buckets']} "
+              f"(mean {stats['mean_bytes'] / 1e6:.2f} MB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: LAGS-SGD vs Dense-SGD on a tiny language model.
+
+Runs in ~1 minute on CPU.  Demonstrates the public API surface:
+configs -> model init -> SimTrainer with the LAGS exchange -> the
+Assumption-1 delta metric (Eq. 20) recorded live.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import base
+from repro.data import synthetic
+from repro.models import transformer as T
+from repro.training import train_loop as TL
+
+P = 4          # simulated workers
+STEPS = 40
+
+
+def main():
+    cfg = dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"),
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    data = synthetic.MarkovLM(vocab=cfg.vocab, seed=3)
+    print(f"model: {cfg.name} (reduced), {sum(x.size for x in jax.tree.leaves(params)):,} params")
+    print(f"task: first-order Markov LM, optimal CE = {data.entropy():.3f} nats")
+
+    def loss_fn(p, b):
+        return T.loss_fn(p, cfg, b, chunk=16, loss_chunk=16)
+
+    for method in ("dense", "lags"):
+        tcfg = TL.TrainConfig(method=method, compression_ratio=8.0, lr=0.3,
+                              measure_delta=(method == "lags"))
+        tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+        hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16), STEPS,
+                      log_every=10)
+        for h in hist:
+            extra = (f"  delta_max={h['delta_max']:.3f} (Assumption 1 "
+                     f"holds: {h['delta_max'] <= 1.0})"
+                     if "delta_max" in h else "")
+            print(f"[{method:5s}] step {h['step']:3d}  "
+                  f"loss {h['loss']:.4f}{extra}")
+    print("done — both methods converge toward the entropy floor; "
+          "LAGS ships ~1/8 of the gradients.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""End-to-end distributed training driver.
+
+Trains a ~100M-parameter llama-family model with LAGS-SGD on a multi-device
+host mesh (data x model), using the SAME production path as the dry-run:
+``repro.launch.train.make_train_step`` (partial-auto shard_map, block-LAGS
+sparse exchange with error feedback), synthetic Markov-LM data, periodic
+checkpointing and a JSONL metrics log.
+
+  PYTHONPATH=src python examples/train_e2e.py --steps 300          # ~100M
+  PYTHONPATH=src python examples/train_e2e.py --preset small --steps 50
+
+NOTE: sets XLA_FLAGS before importing jax to get an 8-device host platform.
+"""
+import os
+
+if "--help" not in __import__("sys").argv:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt
+from repro.configs import base
+from repro.data import synthetic
+from repro.launch import mesh as M
+from repro.launch import train as TR
+
+
+PRESETS = {
+    # ~103M params: 12 x (GQA 768 + SwiGLU 2048) + 16k vocab tied embed
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab=16384, head_dim=64),
+    # ~4M params: CI-speed
+    "small": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                  d_ff=512, vocab=2048, head_dim=32),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="100m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.25)
+    ap.add_argument("--ratio", type=float, default=100.0)
+    ap.add_argument("--method", default="lags_dp",
+                    choices=["lags_dp", "lags_hier", "dense"])
+    ap.add_argument("--data-par", type=int, default=4)
+    ap.add_argument("--model-par", type=int, default=2)
+    ap.add_argument("--out", default="artifacts/train_e2e")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"), **PRESETS[args.preset],
+        dtype="float32", param_dtype="float32",
+        train_mode=args.method, compression_ratio=args.ratio)
+    mesh = M.make_host_mesh(data=args.data_par, model=args.model_par)
+    data = synthetic.MarkovLM(vocab=cfg.vocab, seed=11)
+
+    step_fn, state_specs, meta = TR.make_train_step(
+        cfg, mesh, lr=args.lr, ratio=args.ratio,
+        chunk=min(1024, args.seq), loss_chunk=min(512, args.seq),
+        donate=False)
+    state, _ = TR.init_state(cfg, mesh)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} preset={args.preset}: {n_params / 1e6:.1f}M "
+          f"params | mesh {mesh.devices.shape} {mesh.axis_names} | "
+          f"mode={meta['mode']} workers={meta['n_workers']} "
+          f"c={args.ratio}", flush=True)
+
+    os.makedirs(args.out, exist_ok=True)
+    log_path = os.path.join(args.out, "metrics.jsonl")
+    t_start = time.time()
+    with open(log_path, "a") as log:
+        for t in range(args.steps):
+            batch = data.batch(t, args.global_batch, args.seq)
+            with jax.set_mesh(mesh):
+                state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            row = {"step": t, "loss": loss,
+                   "elapsed_s": round(time.time() - t_start, 1)}
+            log.write(json.dumps(row) + "\n")
+            log.flush()
+            if t % 10 == 0 or t == args.steps - 1:
+                print(f"step {t:4d}  loss {loss:.4f}  "
+                      f"({row['elapsed_s']}s)", flush=True)
+            if args.ckpt_every and t and t % args.ckpt_every == 0:
+                ckpt.save(os.path.join(args.out, f"ckpt_{t}"),
+                          {"params": state["params"], "step": state["step"]})
+    ckpt.save(os.path.join(args.out, "ckpt_final"),
+              {"params": state["params"], "step": state["step"]})
+    print(f"done: {args.steps} steps, log at {log_path}")
+
+
+if __name__ == "__main__":
+    main()

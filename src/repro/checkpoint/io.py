@@ -1,0 +1,51 @@
+"""Checkpointing: pytree <-> .npz with a JSON-encoded treedef.
+
+No orbax in this environment; numpy + the keypath API are enough for a
+faithful save/restore with shape/dtype validation on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"keys": sorted(flat), "metadata": metadata or {}}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(npz.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    out = []
+    for path_, leaf in zip(paths, leaves_like):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        arr = npz[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

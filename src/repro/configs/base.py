@@ -1,0 +1,156 @@
+"""Architecture + run configuration.
+
+Every assigned architecture ships one module ``src/repro/configs/<id>.py``
+exposing ``CONFIG`` (the exact full-size spec, source cited) and
+``smoke_config()`` (a reduced same-family variant: <=2 layers, d_model<=512,
+<=4 experts) for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+
+_SHAPE_CACHE: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None      # default: d_model // n_heads
+    activation: str = "silu"
+    gated_ffn: bool = True
+    norm: str = "rmsnorm"
+    rope_theta: float = 500000.0
+    # attention pattern
+    sliding_window: int | None = None
+    local_global_period: int | None = None   # gemma3: 6 (5 local : 1 global)
+    # moe
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_period: int = 1              # MoE every `moe_period`-th layer
+    # hybrid (jamba): one attn layer per `attn_period`, rest mamba
+    attn_period: int | None = None
+    # xlstm: repeating block kinds
+    xlstm_pattern: tuple[str, ...] | None = None
+    # enc-dec (audio)
+    n_encoder_layers: int = 0
+    # modality frontend stub: number of prepended embedding tokens (vlm)
+    frontend: str | None = None      # None | vision | audio
+    n_frontend_tokens: int = 0
+    tie_embeddings: bool = True
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    # distribution / LAGS defaults
+    train_mode: str = "lags_dp"      # lags_dp | lags_hier | dense
+    moe_shard: str = "ffn"           # "ffn": shard expert d_ff over TP
+                                     # "experts": shard the expert dim
+    compression_ratio: float = 1000.0
+    compressor: str = "topk_hier"
+    # provenance
+    source: str = ""
+    # long-context capability: sub-quadratic decode at 500k?
+    supports_long_context: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def _shape_tree(self):
+        """(ShapeDtypeStruct pytree, logical-axes pytree) — exact, via
+        ``jax.eval_shape`` over the real init (no allocation).  Cached per
+        config because the roofline/benchmarks call the counts repeatedly."""
+        import jax
+        from repro.models import transformer as T
+        if self not in _SHAPE_CACHE:
+            box = {}
+
+            def initf(k):
+                p, a = T.init_model(k, self)
+                box["axes"] = a
+                return p
+
+            sds = jax.eval_shape(initf, jax.random.PRNGKey(0))
+            _SHAPE_CACHE[self] = (sds, box["axes"])
+        return _SHAPE_CACHE[self]
+
+    def param_count(self) -> int:
+        """Exact parameter count (derived from the model's own init)."""
+        import jax
+        import math
+        sds, _ = self._shape_tree()
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(sds))
+
+    def active_param_count(self) -> int:
+        """MoE: only top_k of n_experts are active per token.  Expert
+        weights are identified by the 'experts' logical axis."""
+        if not self.n_experts:
+            return self.param_count()
+        import jax
+        import math
+        sds, axes = self._shape_tree()
+        is_ax = lambda a: isinstance(a, tuple) and all(
+            isinstance(x, (str, type(None))) for x in a)
+        total = 0.0
+        for sd, ax in zip(jax.tree.leaves(sds),
+                          jax.tree.leaves(axes, is_leaf=is_ax)):
+            n = math.prod(sd.shape)
+            if "experts" in ax:
+                n = n * self.moe_top_k / self.n_experts
+            total += n
+        return int(total)
+
+
+ARCH_IDS = [
+    "llava_next_mistral_7b",
+    "nemotron_4_340b",
+    "seamless_m4t_large_v2",
+    "llama3_8b",
+    "granite_moe_3b_a800m",
+    "gemma3_27b",
+    "olmoe_1b_7b",
+    "xlstm_1_3b",
+    "jamba_v0_1_52b",
+    "tinyllama_1_1b",
+]
+
+PAPER_IDS = ["paper_cnn_cifar", "paper_lstm_ptb"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config()
+
+
+# -------------------- input shapes (assigned) ------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,19 @@
+"""Core of the paper: layer-wise adaptive gradient sparsification (LAGS)."""
+from repro.core import (  # noqa: F401
+    adaptive,
+    assumption,
+    bucketing,
+    comm_model,
+    compressors,
+    convergence,
+    error_feedback,
+    lags,
+)
+from repro.core.lags import (  # noqa: F401
+    DenseExchange,
+    HierLAGSExchange,
+    LAGSExchange,
+    SLGSExchange,
+    ks_from_ratio,
+    ks_from_ratios_tree,
+)

@@ -1,0 +1,52 @@
+"""Empirical verification of Assumption 1 — the delta^(l) metric of Eq. 20.
+
+    delta^(l) = || sum_p x^{p,(l)} - sum_p TopK(x^{p,(l)}, k) ||^2
+              / || sum_p x^{p,(l)} - RandK(sum_p x^{p,(l)}, k) ||^2
+
+Assumption 1 holds when delta^(l) <= 1.  The paper measures this on every
+layer during training (Fig. 2); our training loop can record it each step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressors as C
+
+
+def delta_metric(xs: jax.Array, k: int, key: jax.Array,
+                 n_rand: int = 4) -> jax.Array:
+    """xs: (P, d) per-worker accumulated vectors for one layer.
+
+    The RandK denominator is a random variable; Eq. 8's RHS is an
+    expectation, so we average ``n_rand`` draws."""
+    p, d = xs.shape
+    agg = xs.sum(0)
+
+    def topk_one(x):
+        return C.sparsify_from(C.topk_exact_compress, x, min(k, d))
+
+    topk_agg = jax.vmap(topk_one)(xs).sum(0)
+    num = jnp.sum((agg - topk_agg) ** 2)
+
+    def rand_den(kk):
+        r = C.randk_dense(agg, min(k, d), kk)
+        return jnp.sum((agg - r) ** 2)
+
+    keys = jax.random.split(key, n_rand)
+    den = jax.vmap(rand_den)(keys).mean()
+    # Closed form of the expectation (Stich et al. 2018): (1 - k/d) ||agg||^2
+    den_closed = (1.0 - min(k, d) / d) * jnp.sum(agg ** 2)
+    den = 0.5 * (den + den_closed)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def delta_metric_tree(per_worker_acc, ks, key) -> dict:
+    """Compute delta^(l) for every leaf; leaves shaped (P, ...)."""
+    flat, treedef = jax.tree.flatten(per_worker_acc)
+    flat_k = treedef.flatten_up_to(ks)
+    out = []
+    for i, (x, k) in enumerate(zip(flat, flat_k)):
+        xs = x.reshape(x.shape[0], -1)
+        out.append(delta_metric(xs, int(k), jax.random.fold_in(key, i)))
+    return treedef.unflatten(out)

@@ -1,0 +1,47 @@
+"""Small-message merging (§5, first optimization).
+
+Layer-wise sparsified tensors can be tiny; collectives with tiny payloads
+are latency-bound.  The paper buffers sparsified gradients and flushes when
+the buffer fills or the first layer's gradients arrive.  XLA programs are
+static, so we compute the bucketing *at trace time* from the per-layer k's:
+consecutive layers (in backprop order) are grouped until the bucket reaches
+``target_bytes``.  One sparse all-gather is issued per bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    layer_indices: tuple[int, ...]   # indices into the backprop-ordered layer list
+    nbytes: int
+
+
+def assign_buckets(ks: Sequence[int], target_bytes: int = 1 << 20,
+                   bytes_per_elem: int = 8) -> list[Bucket]:
+    """Greedy size-targeted grouping of backprop-ordered layers."""
+    buckets: list[Bucket] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    for i, k in enumerate(ks):
+        nb = int(k) * bytes_per_elem
+        if cur and cur_bytes + nb > target_bytes:
+            buckets.append(Bucket(tuple(cur), cur_bytes))
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nb
+    if cur:
+        buckets.append(Bucket(tuple(cur), cur_bytes))
+    return buckets
+
+
+def bucket_stats(buckets: Sequence[Bucket]) -> dict:
+    sizes = [b.nbytes for b in buckets]
+    return {
+        "n_buckets": len(buckets),
+        "min_bytes": min(sizes) if sizes else 0,
+        "max_bytes": max(sizes) if sizes else 0,
+        "mean_bytes": sum(sizes) / len(sizes) if sizes else 0,
+    }

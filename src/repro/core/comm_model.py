@@ -1,0 +1,96 @@
+"""α–β communication cost model + the paper's pipelining speedup bound (Eq. 19).
+
+Two hardware profiles ship by default:
+
+  * ``ETH_1GBPS`` — the paper's testbed (16 nodes, 1 Gbps Ethernet), used to
+    reproduce Table 2.
+  * ``TPU_V5E_ICI`` — the target for this system (v5e-class ICI), used by
+    the adaptive ratio selection (Eq. 18) for the assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    alpha: float          # per-message latency, seconds
+    beta: float           # seconds per byte (1 / bandwidth)
+    flops: float          # peak FLOP/s per worker (for compute-time estimates)
+    hbm_bw: float = 819e9  # bytes/s
+
+
+ETH_1GBPS = Hardware(name="eth_1gbps", alpha=50e-6, beta=1.0 / 0.125e9,
+                     flops=10.77e12)  # P102-100 ~10.77 TFLOP/s fp32
+TPU_V5E_ICI = Hardware(name="tpu_v5e", alpha=1e-6, beta=1.0 / 50e9,
+                       flops=197e12)
+
+
+def allreduce_time(nbytes: float, p: int, hw: Hardware) -> float:
+    """Ring all-reduce: 2(P-1) messages of n/P bytes."""
+    if p <= 1 or nbytes <= 0:
+        return 0.0
+    return 2 * (p - 1) * (hw.alpha + (nbytes / p) * hw.beta)
+
+
+def allgather_time(nbytes_per_worker: float, p: int, hw: Hardware) -> float:
+    """Ring all-gather of ``nbytes_per_worker`` contributed by each worker."""
+    if p <= 1 or nbytes_per_worker <= 0:
+        return 0.0
+    return (p - 1) * (hw.alpha + nbytes_per_worker * hw.beta)
+
+
+def sparse_allgather_time(d: int, c: float, p: int, hw: Hardware,
+                          bytes_per_elem: int = 8) -> float:
+    """Sparse exchange of a layer with d params compressed by ratio c.
+
+    Each worker ships k = d/c (value, index) pairs (4B fp + 4B int32)."""
+    k = max(1.0, d / c)
+    return allgather_time(k * bytes_per_elem, p, hw)
+
+
+def pipeline_speedup_bound(t_f: float, t_b: float, t_c: float) -> float:
+    """Eq. 19 — maximum speedup of LAGS over SLGS at equal compression.
+
+    S_max = 1 + 1 / ( t_f / min(t_c, t_b) + max(r, 1/r) ),  r = t_c / t_b.
+    """
+    if t_b <= 0 or t_c <= 0:
+        return 1.0
+    r = t_c / t_b
+    return 1.0 + 1.0 / (t_f / min(t_c, t_b) + max(r, 1.0 / r))
+
+
+def iteration_time_slgs(t_f: float, t_b: float, t_c: float) -> float:
+    """SLGS: communication starts only after the whole backward pass."""
+    return t_f + t_b + t_c
+
+
+def iteration_time_lags(t_f: float, t_b_layers, t_c_layers) -> float:
+    """Wait-free pipelined iteration time.
+
+    Layers are indexed in *backprop order* (deepest first).  Layer i's
+    communication may start as soon as its backward compute is done, and
+    communications are serialized on the wire.  Classic pipeline recurrence:
+
+      done_comp_i = t_f + sum_{j<=i} t_b[j]
+      done_comm_i = max(done_comm_{i-1}, done_comp_i) + t_c[i]
+    """
+    assert len(t_b_layers) == len(t_c_layers)
+    t = t_f
+    comm_done = t_f
+    for tb, tc in zip(t_b_layers, t_c_layers):
+        t += tb
+        comm_done = max(comm_done, t) + tc
+    return comm_done
+
+
+def max_speedup_cap(t_f: float, t_b: float) -> float:
+    """The 1 + t_b/(t_f+t_b) cap mentioned below Eq. 19."""
+    return 1.0 + t_b / (t_f + t_b)
+
+
+def layer_backward_time(flops_layer: float, hw: Hardware, efficiency: float = 0.45) -> float:
+    """Estimate a layer's backward time from its FLOPs at a given MFU."""
+    return flops_layer / (hw.flops * efficiency)

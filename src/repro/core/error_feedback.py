@@ -1,0 +1,27 @@
+"""Per-layer error-feedback (gradient residual) state — Algorithm 1 lines 7–8.
+
+The residual is kept in the *same* pytree structure and sharding as the
+parameters/gradients, one residual vector per learnable tensor.  Units are
+parameter-delta (the learning rate is folded in BEFORE sparsification, as in
+the paper: acc_t = eps_{t-1} + alpha * G).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params, dtype=jnp.float32):
+    """Zero residuals shaped/sharded like ``params``."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def accumulate(residuals, updates, lr):
+    """acc_t^{p,(l)} = eps_{t-1}^{p,(l)} + alpha_{t-1} G^p(v)^{(l)}   (line 7)."""
+    return jax.tree.map(lambda e, g: e + lr * g.astype(e.dtype), residuals, updates)
+
+
+def split(acc, sparse_dense):
+    """eps_t = acc_t - TopK(acc_t, k)   (line 8), given the dense sparsified
+    form TopK(acc) for each leaf."""
+    return jax.tree.map(lambda a, s: a - s, acc, sparse_dense)

@@ -1,0 +1,103 @@
+"""Deterministic synthetic data pipelines.
+
+For convergence experiments we need a *learnable* task, not uniform noise:
+
+  * ``MarkovLM`` — sequences from a fixed random first-order Markov chain;
+    optimal CE = the chain's conditional entropy, so loss curves have a
+    meaningful floor and Dense/SLGS/LAGS can be compared against it.
+  * ``blobs`` — Gaussian-blob classification for the CNN (paper's Cifar
+    analogue).
+
+Sharding: ``worker_batches`` deterministically derives per-worker batches
+from (seed, step, worker) so distributed and simulated runs see identical
+data without any host-side state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovLM:
+    vocab: int
+    seed: int = 0
+    concentration: float = 0.3  # lower = sharper transitions = lower entropy
+
+    def transition_matrix(self) -> jax.Array:
+        key = jax.random.PRNGKey(self.seed)
+        logits = jax.random.normal(key, (self.vocab, self.vocab)) \
+            / self.concentration
+        return jax.nn.softmax(logits, axis=-1)
+
+    def entropy(self) -> float:
+        """Conditional entropy of the chain = optimal CE (nats)."""
+        tm = self.transition_matrix()
+        # stationary distribution via power iteration
+        pi = jnp.full((self.vocab,), 1.0 / self.vocab)
+        for _ in range(200):
+            pi = pi @ tm
+        h = -(tm * jnp.log(tm + 1e-30)).sum(-1)
+        return float((pi * h).sum())
+
+    def sample(self, key, batch: int, seq_len: int) -> jax.Array:
+        tm = self.transition_matrix()
+        k0, k1 = jax.random.split(key)
+        first = jax.random.randint(k0, (batch,), 0, self.vocab)
+
+        def step(tok, k):
+            nxt = jax.random.categorical(k, jnp.log(tm[tok] + 1e-30))
+            return nxt, nxt
+
+        keys = jax.random.split(k1, seq_len - 1)
+        _, rest = jax.lax.scan(step, first, keys)
+        return jnp.concatenate([first[None], rest], 0).T  # (B, S)
+
+    def batch(self, step: int, batch: int, seq_len: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+        toks = self.sample(key, batch, seq_len + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def worker_batches(self, step: int, n_workers: int, per_worker: int,
+                       seq_len: int) -> dict:
+        """Leaves shaped (P, per_worker, ...) — simulation layout."""
+        b = self.batch(step, n_workers * per_worker, seq_len)
+        return jax.tree.map(
+            lambda x: x.reshape(n_workers, per_worker, *x.shape[1:]), b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Blobs:
+    """K-class Gaussian blobs rendered as (H, W, C) images for the CNN."""
+    n_classes: int = 10
+    image_size: int = 32
+    channels: int = 3
+    seed: int = 0
+    noise: float = 0.6
+
+    def centers(self) -> jax.Array:
+        key = jax.random.PRNGKey(self.seed)
+        return jax.random.normal(
+            key, (self.n_classes, self.image_size, self.image_size,
+                  self.channels))
+
+    def batch(self, step: int, batch: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 7), step)
+        k0, k1 = jax.random.split(key)
+        y = jax.random.randint(k0, (batch,), 0, self.n_classes)
+        x = self.centers()[y] + self.noise * jax.random.normal(
+            k1, (batch, self.image_size, self.image_size, self.channels))
+        return {"images": x, "labels": y}
+
+    def worker_batches(self, step: int, n_workers: int, per_worker: int) -> dict:
+        b = self.batch(step, n_workers * per_worker)
+        return jax.tree.map(
+            lambda x: x.reshape(n_workers, per_worker, *x.shape[1:]), b)
+
+
+def lm_input_batch(key, batch: int, seq_len: int, vocab: int) -> dict:
+    """Uniform-random tokens (for throughput/lowering, not convergence)."""
+    toks = jax.random.randint(key, (batch, seq_len + 1), 0, vocab)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

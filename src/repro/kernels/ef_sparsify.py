@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused error-feedback accumulate + threshold sparsify.
+
+Algorithm 1 lines 7–8 touch each gradient element three times when written
+naively (read g + read e → write acc; read acc → write selected; read acc,
+selected → write residual).  Fused, each element is read once (g, e) and
+written once (selected, residual) — a single HBM stream at exactly the
+4-array bandwidth floor:
+
+    acc      = e + lr · g
+    selected = acc · [|acc| ≥ thr]          # TopK-as-threshold (Eq. 4)
+    residual = acc − selected               # error feedback
+
+``thr`` is the k-th magnitude produced by the (cheap, candidate-sized)
+stage-2 selection of `block_topk`, so the fused pass realizes the whole
+per-layer sparsify-with-memory update in one pass over the layer.
+
+Tiling: the flat vector is viewed as (rows, 1024) f32 — 1024 = 8·128 fills
+one VREG row naturally; grid over row-tiles of ``tm`` rows.  lr and thr
+ride in SMEM as (1, 1) scalars via PrefetchScalarGridSpec-free plain
+inputs with a (1, 1) BlockSpec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024  # 8 sublanes * 128 lanes of f32
+
+
+def _ef_kernel(lr_ref, thr_ref, g_ref, e_ref, sel_ref, res_ref):
+    lr = lr_ref[0, 0]
+    thr = thr_ref[0, 0]
+    acc = e_ref[...] + lr * g_ref[...].astype(jnp.float32)
+    keep = jnp.abs(acc) >= thr
+    sel = jnp.where(keep, acc, 0.0)
+    sel_ref[...] = sel
+    res_ref[...] = acc - sel
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def ef_accum_sparsify_pallas(g: jax.Array, e: jax.Array, lr, thr, *,
+                             tm: int = 64, interpret: bool = True):
+    """Fused EF update on flat vectors.
+
+    g: (d,) any float dtype; e: (d,) f32; lr, thr: scalars.
+    Returns (selected (d,) f32, residual (d,) f32).
+    """
+    d = g.shape[0]
+    rows = -(-d // LANE)
+    rows_pad = -(-rows // tm) * tm
+    dp = rows_pad * LANE
+    gp = jnp.pad(g, (0, dp - d)).reshape(rows_pad, LANE)
+    # pad e with +inf magnitude guard? zeros are fine: 0 never selected
+    ep = jnp.pad(e.astype(jnp.float32), (0, dp - d)).reshape(rows_pad, LANE)
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
+    grid = (rows_pad // tm,)
+    sel, res = pl.pallas_call(
+        _ef_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((tm, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((tm, LANE), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tm, LANE), lambda i: (i, 0)),
+                   pl.BlockSpec((tm, LANE), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32),
+                   jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32)],
+        interpret=interpret,
+    )(lr2, thr2, gp, ep)
+    return sel.reshape(-1)[:d], res.reshape(-1)[:d]

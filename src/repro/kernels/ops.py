@@ -1,0 +1,56 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute under ``interpret=True`` —
+the kernel body runs in Python per grid step, validating the exact TPU
+program.  On a real TPU backend set ``interpret=False`` (auto-detected).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_topk as _bt
+from repro.kernels import ef_sparsify as _ef
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def block_topk(blocks: jax.Array, r: int, *, tm: int = 8):
+    """Per-row top-r by magnitude: (values, local int32 indices)."""
+    return _bt.block_topk_pallas(blocks, r, tm=tm, interpret=_interpret())
+
+
+def ef_accum_sparsify(g: jax.Array, e: jax.Array, lr, thr, *, tm: int = 64):
+    """Fused acc = e + lr*g; selected = acc·[|acc|≥thr]; residual = acc−sel."""
+    return _ef.ef_accum_sparsify_pallas(g, e, lr, thr, tm=tm,
+                                        interpret=_interpret())
+
+
+def hier_topk_threshold(x: jax.Array, k: int, *, block_size: int = 4096,
+                        r: int = 4, tm: int = 8):
+    """Stage 1+2 of hierarchical top-k, returning the selection THRESHOLD
+    (the k-th candidate magnitude) for use by the fused EF kernel.
+
+    Returns (thr, (cand_vals, cand_idx)).  Exact whenever no block holds
+    more than r of the true top-k; otherwise a slightly-high threshold —
+    the resulting under-selection stays in the error-feedback residual,
+    covered by the paper's framework.
+    """
+    d = x.shape[0]
+    n_blocks = -(-d // block_size)
+    pad = n_blocks * block_size - d
+    xp = jnp.pad(x, (0, pad))
+    blocks = xp.reshape(n_blocks, block_size)
+    r_eff = min(r, block_size)
+    cand_vals, cand_local = block_topk(blocks, r_eff, tm=tm)
+    base = jnp.arange(n_blocks, dtype=jnp.int32)[:, None] * block_size
+    cand_idx = (base + cand_local).reshape(-1)
+    cand_flat = cand_vals.reshape(-1)
+    kk = min(k, cand_flat.shape[0])
+    top_mag = jax.lax.top_k(jnp.abs(cand_flat), kk)[0]
+    thr = top_mag[-1]
+    return thr, (cand_flat, cand_idx)

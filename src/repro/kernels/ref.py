@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels in this package.
+
+Every kernel must match its oracle to allclose over a sweep of shapes and
+dtypes (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(blocks: jax.Array, r: int):
+    """Top-r-by-magnitude per row.
+
+    blocks: (n_blocks, block_size).
+    Returns (values (n_blocks, r) carrying sign, local indices (n_blocks, r)
+    int32), ordered by descending magnitude; ties broken by lower index
+    (matching jax.lax.top_k's stable tie-break on the magnitudes).
+    """
+    mag = jnp.abs(blocks)
+    _, idx = jax.lax.top_k(mag, r)
+    vals = jnp.take_along_axis(blocks, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def ef_accum_sparsify_ref(g: jax.Array, e: jax.Array, lr, thr):
+    """Fused error-feedback accumulate + magnitude-threshold sparsify.
+
+    acc      = e + lr * g          (Algorithm 1 line 7)
+    selected = acc * [|acc| >= thr]   (TopK as a threshold op, Eq. 4)
+    residual = acc - selected         (Algorithm 1 line 8)
+
+    g, e: same-shape arrays (e in f32); lr, thr: scalars.
+    Returns (selected, residual), both f32.
+    """
+    acc = e + lr * g.astype(e.dtype)
+    keep = jnp.abs(acc) >= thr
+    selected = jnp.where(keep, acc, 0.0)
+    return selected, acc - selected

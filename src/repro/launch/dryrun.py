@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, print memory/cost analysis, dump roofline
+artifacts.
+
+MUST be run as a module (``PYTHONPATH=src python -m repro.launch.dryrun``);
+the XLA_FLAGS line above executes before any jax import so ``make_mesh``
+can build the 512-device placeholder meshes on this CPU-only container.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.launch import mesh as M
+from repro.launch import serve as SV
+from repro.launch import specs as SP
+from repro.launch import train as TR
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e-class target)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\s*(?:\.\d+)?\s*=\s*"
+    r"((?:\([^)]*\)|[a-z0-9_\[\],{}\/ ]+))", re.I)
+
+SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|f64|s64|u64|pred|f8\w*)"
+                      r"\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "f64": 8, "s64": 8, "u64": 8, "pred": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        b = DTYPE_BYTES.get(dt, 2 if dt.startswith("f8") else 4)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO, by kind.
+
+    Uses the op RESULT type printed on the defining line — for all-gather
+    that's the gathered (post-collective) size, for reduce-scatter the
+    scattered size; a consistent, slightly conservative proxy for bytes
+    moved per device.  `-start`/`-done` pairs are counted once (on -start;
+    bare sync ops counted directly)."""
+    out: dict[str, int] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(
+            r"%?([\w.-]*)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/]+))\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?", ls)
+        if not m:
+            continue
+        name, type_str, kind, phase = m.groups()
+        if phase == "-done":
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(type_str)
+    return out
+
+
+def roofline(cost: dict, coll: dict, n_chips: int, seconds_scale: int = 1):
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    bytes_coll = float(sum(coll.values()))
+    # cost_analysis is per-program = per-device under SPMD
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = bytes_coll / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dom,
+            "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": bytes_hbm,
+            "collective_bytes_per_dev": bytes_coll,
+            "collective_breakdown": coll}
+
+
+def lower_one(arch: str, shape_name: str, mesh, *, mode_override=None):
+    cfg = base.get_config(arch)
+    shape = base.INPUT_SHAPES[shape_name]
+    if not SP.supports_shape(cfg, shape):
+        return {"status": "skipped",
+                "reason": "full-quadratic attention at 500k context"}
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step, state_specs, meta = TR.make_train_step(
+                cfg, mesh, method=mode_override)
+            bsd = SP.train_batch_specs(cfg, shape)
+            manual = meta["manual"] or M.data_axis_names(mesh)
+            bps = TR.batch_pspec(bsd, mesh, M.data_axis_names(mesh))
+            from jax.sharding import NamedSharding
+            batch = jax.tree.map(
+                lambda sd, sp: jax.ShapeDtypeStruct(
+                    sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
+                bsd, bps,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            lowered = step.lower(state_specs, batch)
+            extra = {"train_mode": meta["mode"],
+                     "lags_workers": meta["n_workers"]}
+        elif shape.kind == "prefill":
+            fn, args = SV.make_prefill_step(cfg, mesh, shape)
+            lowered = fn.lower(*args)
+            extra = {}
+        else:  # decode
+            fn, args = SV.make_serve_step(cfg, mesh, shape)
+            lowered = fn.lower(*args)
+            extra = {}
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_chips = mesh.devices.size
+    rf = roofline(cost or {}, coll, n_chips)
+    return {
+        "status": "ok", "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_chips": n_chips,
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": rf,
+        "times": {"lower_s": round(t_lower, 1),
+                  "compile_s": round(t_compile, 1)},
+        **extra,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default=None, help="override train_mode")
+    ap.add_argument("--out", default=None, help="JSON artifact directory")
+    args = ap.parse_args(argv)
+
+    mesh = M.make_production_mesh(multi_pod=args.multi_pod)
+    combos = []
+    if args.all:
+        for a in base.ARCH_IDS:
+            for s in base.INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch.replace("-", "_"), args.shape))
+
+    results = []
+    for arch, shape in combos:
+        tag = f"{arch} × {shape} × {'multi' if args.multi_pod else 'single'}-pod"
+        try:
+            r = lower_one(arch, shape, mesh, mode_override=args.mode)
+        except Exception as e:
+            traceback.print_exc()
+            r = {"status": "error", "arch": arch, "shape": shape,
+                 "error": f"{type(e).__name__}: {e}"}
+        r.setdefault("arch", arch)
+        r.setdefault("shape", shape)
+        results.append(r)
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            print(f"[OK] {tag}: peak={r['bytes_per_device']['peak']} "
+                  f"compute={rf['t_compute']:.4f}s memory={rf['t_memory']:.4f}s "
+                  f"coll={rf['t_collective']:.4f}s dom={rf['dominant']} "
+                  f"(lower {r['times']['lower_s']}s, "
+                  f"compile {r['times']['compile_s']}s)", flush=True)
+        elif r["status"] == "skipped":
+            print(f"[SKIP] {tag}: {r['reason']}", flush=True)
+        else:
+            print(f"[FAIL] {tag}: {r['error']}", flush=True)
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        pod = "multipod" if args.multi_pod else "singlepod"
+        name = "all" if args.all else f"{combos[0][0]}_{combos[0][1]}"
+        path = os.path.join(args.out, f"dryrun_{name}_{pod}.json")
+        with open(path, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {path}")
+
+    n_bad = sum(1 for r in results if r["status"] == "error")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

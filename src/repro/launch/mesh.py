@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+IMPORTANT: functions only — importing this module must never touch jax
+device state.  The dry-run sets XLA_FLAGS before importing anything.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(data: int = 4, model: int = 2, pod: int = 1):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def data_axis_names(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def lags_axis_names(mesh, train_mode: str) -> tuple[str, ...]:
+    """Mesh axes acting as LAGS 'workers' (sparse-exchange axes)."""
+    if train_mode == "lags_dp":
+        return data_axis_names(mesh)
+    if train_mode == "lags_hier":
+        return tuple(a for a in mesh.axis_names if a == "pod")
+    return ()
+
+
+def n_workers(mesh, axes: tuple[str, ...]) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n

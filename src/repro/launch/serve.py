@@ -1,0 +1,136 @@
+"""Serving launch: jit'd prefill / decode steps with production shardings.
+
+No gradients → no LAGS here; these paths exist because the assigned input
+shapes include inference-prefill and decode, and the dry-run must prove the
+cache/params distribution lowers.  Everything is GSPMD auto:
+
+  * params — TP over 'model'; additionally FSDP over 'data' when the
+    model-sharded copy would not fit a 16 GB v5e HBM (nemotron, jamba,
+    gemma3: `needs_fsdp_serving`).
+  * KV caches — batch over ('pod','data'), sequence over 'model'
+    (flash-decoding style); ring caches for sliding-window layers;
+    O(1) SSM/xLSTM states sharded batch over data, inner over 'model'.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base
+from repro.launch import mesh as M
+from repro.launch import specs as SP
+from repro.launch import train as TR
+from repro.models import transformer as T
+from repro.serving import engine
+from repro.sharding import rules
+
+HBM_BYTES = 16 * 1024**3  # v5e
+
+
+def needs_fsdp_serving(cfg, mesh) -> bool:
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    bytes_per_dev = cfg.param_count() * jnp.dtype(cfg.param_dtype).itemsize / tp
+    return bytes_per_dev > 0.5 * HBM_BYTES
+
+
+def serve_cfg(cfg, shape_name: str):
+    """Long-context serving mode: gemma3's global layers fall back to the
+    sliding window (documented deviation) so 500k decode is O(window)."""
+    if shape_name == "long_500k" and cfg.local_global_period:
+        return dataclasses.replace(cfg, local_global_period=None)
+    return cfg
+
+
+def serve_param_specs(cfg, mesh):
+    params_sds, axes = TR.model_shapes_and_axes(cfg)
+    fsdp = "data" if needs_fsdp_serving(cfg, mesh) else None
+    from repro.launch.train import _tp_priority
+    pspecs = rules.tree_specs(params_sds, axes, mesh, tp_axis="model",
+                              fsdp_axis=fsdp, tp_priority=_tp_priority(cfg))
+    return params_sds, pspecs
+
+
+def state_specs(cfg, mesh, shape: base.InputShape):
+    """ShapeDtypeStructs (with shardings) for decode: params + caches."""
+    cfg = serve_cfg(cfg, shape.name)
+    params_sds, pspecs = serve_param_specs(cfg, mesh)
+    data_axes = M.data_axis_names(mesh)
+    cache_dt = jnp.dtype(cfg.dtype)
+    enc_len = SP.audio_frames(shape.seq_len) if cfg.frontend == "audio" else 0
+    states_sds = jax.eval_shape(
+        lambda: engine.init_states(cfg, shape.global_batch, shape.seq_len,
+                                   cache_dt, enc_len=enc_len))
+    st_axes = engine.states_axes(cfg)
+    st_specs = rules.tree_specs(states_sds, st_axes, mesh, tp_axis="model",
+                                data_axes=data_axes)
+
+    def with_sh(sd, spec):
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    params = jax.tree.map(with_sh, params_sds, pspecs, is_leaf=is_sds)
+    states = jax.tree.map(with_sh, states_sds, st_specs, is_leaf=is_sds)
+    return {"params": params, "states": states}, cfg
+
+
+def make_serve_step(cfg, mesh, shape: base.InputShape, *, chunk: int = 2048):
+    """One-token decode step against a seq_len cache.  Returns
+    (jit'd fn(params, token, states, pos) -> (logits, states), arg specs)."""
+    sds, cfg2 = state_specs(cfg, mesh, shape)
+
+    def fn(params, token, states, pos):
+        return engine.serve_step(params, cfg2, token, states, pos,
+                                 chunk=chunk)
+
+    tok = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32,
+        sharding=NamedSharding(mesh, batch_spec(shape, mesh)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    args = (sds["params"], tok, sds["states"], pos)
+    return jax.jit(fn, donate_argnums=(2,)), args
+
+
+def batch_spec(shape, mesh) -> P:
+    data_axes = M.data_axis_names(mesh)
+    n = math.prod(dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                  for a in data_axes)
+    if shape.global_batch % n == 0 and n > 1:
+        lead = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(lead, None)
+    return P(None, None)
+
+
+def make_prefill_step(cfg, mesh, shape: base.InputShape, *,
+                      chunk: int = 1024):
+    """Prompt prefill: returns (jit'd fn(params, batch) -> (logits, states),
+    arg specs)."""
+    params_sds, pspecs = serve_param_specs(cfg, mesh)
+    bsd = SP.train_batch_specs(cfg, shape)
+    data_axes = M.data_axis_names(mesh)
+    lead = data_axes if len(data_axes) > 1 else (data_axes[0]
+                                                 if data_axes else None)
+    is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    bsh = jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype,
+            sharding=NamedSharding(
+                mesh, P(lead, *([None] * (len(sd.shape) - 1))))),
+        bsd, is_leaf=is_sds)
+    psh = jax.tree.map(
+        lambda sd, sp: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
+        params_sds, pspecs, is_leaf=is_sds)
+
+    def fn(params, batch):
+        return engine.prefill(params, cfg, batch["tokens"],
+                              frontend_embeds=batch.get("frontend_embeds"),
+                              chunk=chunk)
+
+    return jax.jit(fn), (psh, bsh)

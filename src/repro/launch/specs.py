@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch × shape).
+
+No device allocation — the dry-run lowers against these.  The modality
+frontends are STUBS per the brief: for VLM archs ``frontend_embeds`` are
+precomputed patch embeddings (anyres tiling: n_frontend_tokens prepended),
+for audio enc-dec they are conv-subsampled frame embeddings (seq_len // 4
+frames, ~4x subsampling).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+
+
+def audio_frames(seq_len: int) -> int:
+    return max(seq_len // 4, 1)
+
+
+def train_batch_specs(cfg: base.ModelConfig, shape: base.InputShape):
+    """Global-shape train/prefill batch: {"tokens", "labels"?, "frontend_embeds"?}."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb_dt = jnp.dtype(cfg.dtype)
+    out: dict = {}
+    if cfg.frontend == "vision":
+        n_f = min(cfg.n_frontend_tokens, s // 2)
+        out["tokens"] = jax.ShapeDtypeStruct((b, s - n_f), i32)
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, n_f, cfg.d_model), emb_dt)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s - n_f), i32)
+    elif cfg.frontend == "audio":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, audio_frames(s), cfg.d_model), emb_dt)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return out
+
+
+def decode_batch_specs(cfg: base.ModelConfig, shape: base.InputShape):
+    """One-token decode inputs: {"token": (B, 1), "pos": scalar}."""
+    b = shape.global_batch
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def concrete_batch(cfg: base.ModelConfig, shape: base.InputShape, key=None):
+    """Materialized batch matching train_batch_specs (tests/examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = train_batch_specs(cfg, shape)
+    kt, kf = jax.random.split(key)
+    out = {}
+    for name, sd in specs.items():
+        if name == "frontend_embeds":
+            out[name] = jax.random.normal(kf, sd.shape, sd.dtype)
+        else:
+            out[name] = jax.random.randint(kt, sd.shape, 0, cfg.vocab)
+    return out
+
+
+def supports_shape(cfg: base.ModelConfig, shape: base.InputShape) -> bool:
+    """long_500k only for sub-quadratic archs (SSM/hybrid/sliding-window)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True

@@ -1,0 +1,55 @@
+"""Feed-forward blocks: gated (SwiGLU) and plain (GELU / squared-ReLU)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    if gated:
+        params = {
+            "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+            "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+            "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+        }
+        axes = {
+            "w_gate": ("embed", "ffn"),
+            "w_up": ("embed", "ffn"),
+            "w_down": ("ffn", "embed"),
+        }
+    else:
+        params = {
+            "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+            "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+        }
+        axes = {"w_up": ("embed", "ffn"), "w_down": ("ffn", "embed")}
+    return params, axes
+
+
+def ffn_forward(p, x, activation: str = "silu"):
+    # preferred_element_type = activation dtype so the TP partial-sum
+    # all-reduce runs in bf16, not the f32 accumulator (halves the TP
+    # collective bytes; the MXU still accumulates f32 inside each shard)
+    pet = x.dtype
+    act = L.ACTIVATIONS[activation]
+    tp_dim = x.ndim - 1
+    up = L.pin_act(jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype),
+                              preferred_element_type=pet), tp_dim)
+    if "w_gate" in p:
+        gate = L.pin_act(
+            jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype),
+                       preferred_element_type=pet), tp_dim)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = L.pin_act(h, tp_dim)
+    return L.pin_act(jnp.einsum("...f,fd->...d", h,
+                                p["w_down"].astype(x.dtype),
+                                preferred_element_type=pet))

@@ -1,0 +1,140 @@
+"""Mamba-style selective SSM block (for the Jamba hybrid).
+
+Training/prefill uses the parallel form of the diagonal linear recurrence
+via ``jax.lax.associative_scan`` (h_t = a_t * h_{t-1} + b_t is associative);
+decode keeps an O(1) recurrent state (conv tail + SSM state), which is what
+makes long_500k decoding natural for SSM/hybrid architectures.
+
+Layout: d_inner = expand * d_model (expand=2), d_state = 16, d_conv = 4.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+D_STATE = 16
+D_CONV = 4
+EXPAND = 2
+
+
+def init_mamba(key, d_model: int, dtype):
+    d_inner = EXPAND * d_model
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(d_inner)
+    params = {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2 * d_inner), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (D_CONV, d_inner), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": jax.random.normal(ks[2], (d_inner, dt_rank + 2 * D_STATE),
+                                    dtype) * si,
+        "dt_proj_w": jax.random.normal(ks[3], (dt_rank, d_inner), dtype)
+        * (1.0 / math.sqrt(dt_rank)),
+        "dt_proj_b": jnp.log(jnp.exp(jnp.linspace(0.001, 0.1, d_inner)) - 1.0
+                             ).astype(dtype),
+        # A is stored as log(-A); A = -exp(A_log) (negative-real diagonal)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, D_STATE + 1, dtype=jnp.float32),
+                                  (d_inner, 1))).astype(dtype),
+        "D": jnp.ones((d_inner,), dtype),
+        "out_proj": jax.random.normal(ks[4], (d_inner, d_model), dtype) * si,
+    }
+    axes = {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_proj_w": (None, "inner"),
+        "dt_proj_b": ("inner",),
+        "A_log": ("inner", None),
+        "D": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+    return params, axes
+
+
+def _ssm_params(p, x):
+    """x: (B, S, d_inner) -> dt (B,S,d_inner), Bm/Cm (B,S,N)."""
+    dt_rank = p["dt_proj_w"].shape[0]
+    proj = jnp.einsum("bsi,ir->bsr", x, p["x_proj"].astype(x.dtype))
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + D_STATE], axis=-1)
+    dt = jnp.einsum("bsr,ri->bsi", dt, p["dt_proj_w"].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_proj_b"].astype(jnp.float32))
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width D_CONV.  x: (B,S,I).  ``state``: (B,D_CONV-1,I)
+    tail of the previous sequence (decode); returns (y, new_state)."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], D_CONV - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, S+3, I)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(D_CONV))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(D_CONV - 1):]
+    return y, new_state
+
+
+def mamba_forward(p, x, *, chunk: int = 0):
+    """Parallel selective scan.  x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    xi = jax.nn.silu(xi)
+    dt, Bm, Cm = _ssm_params(p, xi)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (I, N)
+    xf = xi.astype(jnp.float32)
+    # discretize: a = exp(dt*A) (B,S,I,N); b_in = dt * Bm * x
+    a = jnp.exp(dt[..., None] * A[None, None])                 # (B,S,I,N)
+    b_in = dt[..., None] * Bm[:, :, None, :] * xf[..., None]   # (B,S,I,N)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    y = jnp.einsum("bsin,bsn->bsi", h, Cm) + xf * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bsi,id->bsd", y.astype(x.dtype),
+                      p["out_proj"].astype(x.dtype))
+
+
+def init_mamba_state(batch: int, d_model: int, dtype):
+    d_inner = EXPAND * d_model
+    return {
+        "conv": jnp.zeros((batch, D_CONV - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, D_STATE), jnp.float32),
+    }
+
+
+def mamba_state_axes():
+    return {"conv": ("cache_batch", None, "inner"),
+            "ssm": ("cache_batch", "inner", None)}
+
+
+def mamba_decode(p, x, state):
+    """One-token recurrent step.  x: (B, 1, D)."""
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], state["conv"])
+    xi = jax.nn.silu(xi)
+    dt, Bm, Cm = _ssm_params(p, xi)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xf = xi.astype(jnp.float32)[:, 0]                           # (B, I)
+    dt0, Bm0, Cm0 = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    a = jnp.exp(dt0[..., None] * A[None])                       # (B,I,N)
+    h = state["ssm"] * a + dt0[..., None] * Bm0[:, None, :] * xf[..., None]
+    y = jnp.einsum("bin,bn->bi", h, Cm0) + xf * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
+    out = jnp.einsum("bi,id->bd", y.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    return out[:, None], {"conv": conv_state.astype(state["conv"].dtype),
+                          "ssm": h}

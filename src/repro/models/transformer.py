@@ -1,0 +1,316 @@
+"""Composable decoder / encoder-decoder stacks covering all six assigned
+architecture families (dense, moe, ssm, hybrid, vlm, audio).
+
+A model is a sequence of per-layer ``BlockSpec``s derived from the config.
+Layers are grouped into the smallest repeating *period* (uniform models:
+period 1; gemma3: 6 = 5 local + 1 global; jamba: 8; xlstm: 2) and executed
+as a ``lax.scan`` over periods with the period body unrolled — this keeps
+HLO size O(period), not O(n_layers), which matters when lowering 96-layer
+models for 80 dry-run combinations.  A non-divisible tail is unrolled.
+
+Params layout:
+  {"embed": ..., "blocks": [stack_0, ..., stack_{p-1}]  (leading n_periods),
+   "tail": [layer pytrees], "final_norm": ..., "lm_head"?: ...,
+   "encoder": {... same structure ...}?  (enc-dec only)}
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str            # attn | mamba | mlstm | slstm
+    ffn: str             # dense | moe | none
+    window: int | None   # sliding window (None = full)
+    cross_attn: bool = False
+
+
+def build_blockspecs(cfg) -> list[BlockSpec]:
+    """Per-layer block specs for the *decoder* stack."""
+    specs = []
+    for i in range(cfg.n_layers):
+        kind = "attn"
+        if cfg.attn_period:  # hybrid (jamba): 1 attn per period, rest mamba
+            kind = "attn" if (i % cfg.attn_period) == (cfg.attn_period // 2) \
+                else "mamba"
+        if cfg.xlstm_pattern:
+            kind = cfg.xlstm_pattern[i % len(cfg.xlstm_pattern)]
+        ffn = "dense"
+        if kind in ("mlstm", "slstm"):
+            ffn = "none"  # xLSTM blocks carry their own projections
+        elif cfg.n_experts:
+            ffn = "moe" if (i % cfg.moe_period) == (cfg.moe_period - 1) \
+                or cfg.moe_period == 1 else "dense"
+        window = None
+        if cfg.sliding_window:
+            if cfg.local_global_period:
+                is_global = (i % cfg.local_global_period
+                             == cfg.local_global_period - 1)
+                window = None if is_global else cfg.sliding_window
+            else:
+                window = cfg.sliding_window
+        specs.append(BlockSpec(kind=kind, ffn=ffn, window=window,
+                               cross_attn=bool(cfg.n_encoder_layers)))
+    return specs
+
+
+def find_period(specs: list[BlockSpec]) -> int:
+    n = len(specs)
+    for p in range(1, n + 1):
+        n_periods = n // p
+        if n_periods == 0:
+            break
+        ok = all(specs[i] == specs[i % p] for i in range(n_periods * p))
+        if ok and n_periods >= 1 and (n - n_periods * p) < p:
+            return p
+    return n
+
+
+def head_dim(cfg) -> int:
+    return cfg.head_dim or cfg.d_model // cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, spec: BlockSpec, dtype):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {}
+    ax: dict[str, Any] = {}
+    hd = head_dim(cfg)
+    if spec.kind == "attn":
+        p["ln_attn"], ax["ln_attn"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["attn"], ax["attn"] = A.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, dtype)
+        if spec.cross_attn:
+            p["ln_cross"], ax["ln_cross"] = L.init_norm(cfg.norm, cfg.d_model,
+                                                        dtype)
+            p["cross"], ax["cross"] = A.init_attention(
+                ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, dtype)
+    elif spec.kind == "mamba":
+        p["ln_attn"], ax["ln_attn"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["mamba"], ax["mamba"] = S.init_mamba(ks[0], cfg.d_model, dtype)
+    elif spec.kind == "mlstm":
+        p["ln_attn"], ax["ln_attn"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["mlstm"], ax["mlstm"] = X.init_mlstm(ks[0], cfg.d_model,
+                                               cfg.n_heads, dtype)
+    elif spec.kind == "slstm":
+        p["ln_attn"], ax["ln_attn"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["slstm"], ax["slstm"] = X.init_slstm(ks[0], cfg.d_model,
+                                               cfg.n_heads, dtype)
+    if spec.ffn == "dense":
+        p["ln_ffn"], ax["ln_ffn"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["ffn"], ax["ffn"] = F.init_ffn(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                                         gated=cfg.gated_ffn)
+    elif spec.ffn == "moe":
+        p["ln_ffn"], ax["ln_ffn"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["moe"], ax["moe"] = M.init_moe(ks[2], cfg.d_model, cfg.d_ff,
+                                         cfg.n_experts, dtype,
+                                         gated=cfg.gated_ffn)
+    return p, ax
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_axes(ax):
+    """Prepend the 'layers' stacking axis (never sharded)."""
+    return jax.tree.map(lambda a: ("layers",) + tuple(a),
+                        ax, is_leaf=lambda a: isinstance(a, tuple))
+
+
+def _init_stack(key, cfg, specs, dtype):
+    """Init a layer stack, grouped into (blocks period stacks, tail)."""
+    p = find_period(specs)
+    n = len(specs)
+    n_periods = n // p
+    keys = jax.random.split(key, n)
+    all_layers = [_init_block(keys[i], cfg, specs[i], dtype) for i in range(n)]
+    blocks, blocks_ax = [], []
+    for j in range(p):
+        trees = [all_layers[t * p + j][0] for t in range(n_periods)]
+        blocks.append(_stack(trees))
+        blocks_ax.append(_stack_axes(all_layers[j][1]))
+    tail = [all_layers[i][0] for i in range(n_periods * p, n)]
+    tail_ax = [all_layers[i][1] for i in range(n_periods * p, n)]
+    return ({"blocks": blocks, "tail": tail},
+            {"blocks": blocks_ax, "tail": tail_ax},
+            p, n_periods)
+
+
+def init_model(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_dec, k_enc, k_head, k_fin = jax.random.split(key, 5)
+    specs = build_blockspecs(cfg)
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["embed"], axes["embed"] = L.init_embedding(
+        k_embed, cfg.vocab, cfg.d_model, dtype)
+    dec, dec_ax, p, n_periods = _init_stack(k_dec, cfg, specs, dtype)
+    params["decoder"], axes["decoder"] = dec, dec_ax
+    params["final_norm"], axes["final_norm"] = L.init_norm(
+        cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"], axes["lm_head"] = L.init_linear(
+            k_head, cfg.d_model, cfg.vocab, dtype, axes=("embed", "vocab"))
+    if cfg.n_encoder_layers:
+        enc_specs = [BlockSpec(kind="attn", ffn="dense", window=None,
+                               cross_attn=False)] * cfg.n_encoder_layers
+        enc, enc_ax, _, _ = _init_stack(k_enc, cfg, enc_specs, dtype)
+        params["encoder"], axes["encoder"] = enc, enc_ax
+        params["enc_norm"], axes["enc_norm"] = L.init_norm(
+            cfg.norm, cfg.d_model, dtype)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward (training / encoding)
+# ---------------------------------------------------------------------------
+
+def _apply_block(bp, spec: BlockSpec, x, cfg, *, memory=None,
+                 chunk: int = 1024):
+    aux = jnp.float32(0.0)
+    h = L.apply_norm(cfg.norm, x, bp["ln_attn"])
+    if spec.kind == "attn":
+        window = spec.window if spec.window else None
+        h = A.attention_forward(bp["attn"], h, n_kv_heads=cfg.n_kv_heads,
+                                rope_theta=cfg.rope_theta, window=window,
+                                chunk=chunk)
+    elif spec.kind == "mamba":
+        h = S.mamba_forward(bp["mamba"], h)
+    elif spec.kind == "mlstm":
+        h = X.mlstm_forward(bp["mlstm"], h, n_heads=cfg.n_heads)
+    elif spec.kind == "slstm":
+        h = X.slstm_forward(bp["slstm"], h, n_heads=cfg.n_heads)
+    x = x + h
+    if spec.cross_attn and memory is not None and spec.kind == "attn":
+        h = L.apply_norm(cfg.norm, x, bp["ln_cross"])
+        h = A.cross_attention_forward(bp["cross"], h, memory,
+                                      n_kv_heads=cfg.n_kv_heads, chunk=chunk)
+        x = x + h
+    if spec.ffn == "dense":
+        h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        x = x + F.ffn_forward(bp["ffn"], h, cfg.activation)
+    elif spec.ffn == "moe":
+        h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        out, aux = M.moe_forward_auto(bp["moe"], h, top_k=cfg.moe_top_k,
+                                      activation=cfg.activation)
+        x = x + out
+    return x, aux
+
+
+def _run_stack(stack_params, specs, x, cfg, *, memory=None,
+               chunk: int = 1024, remat: bool = True):
+    p = find_period(specs)
+    n_periods = len(specs) // p
+
+    def period_body(carry, block_slices):
+        x, aux = carry
+        for j in range(p):
+            x, a = _apply_block(block_slices[j], specs[j], x, cfg,
+                                memory=memory, chunk=chunk)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    aux0 = jnp.float32(0.0)
+    if n_periods:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0),
+                                   tuple(stack_params["blocks"]))
+    else:
+        aux = aux0
+    for i, tp in enumerate(stack_params["tail"]):
+        x, a = _apply_block(tp, specs[n_periods * p + i], x, cfg,
+                            memory=memory, chunk=chunk)
+        aux = aux + a
+    return x, aux
+
+
+def forward(params, cfg, tokens, *, frontend_embeds=None, chunk: int = 1024,
+            remat: bool = True):
+    """Decoder-only / VLM / enc-dec forward to final hidden states.
+
+    tokens: (B, S_text) int32.
+    frontend_embeds: (B, N, D) — VLM image patches (prepended to the token
+    embeddings) or audio frames (encoder input for enc-dec models).
+    Returns (hidden (B, S_total, D), aux_loss).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, dtype)
+    memory = None
+    aux_total = jnp.float32(0.0)
+    if cfg.n_encoder_layers:
+        assert frontend_embeds is not None, "enc-dec needs encoder input"
+        enc_specs = [BlockSpec("attn", "dense", None, False)] * cfg.n_encoder_layers
+        mem = frontend_embeds.astype(dtype)
+        mem, aux = _run_stack(params["encoder"], enc_specs, mem, cfg,
+                              chunk=chunk, remat=remat)
+        memory = L.apply_norm(cfg.norm, mem, params["enc_norm"])
+        aux_total += aux
+    elif frontend_embeds is not None:  # VLM: prepend patch embeddings
+        x = jnp.concatenate([frontend_embeds.astype(dtype), x], axis=1)
+    specs = build_blockspecs(cfg)
+    x, aux = _run_stack(params["decoder"], specs, x, cfg, memory=memory,
+                        chunk=chunk, remat=remat)
+    aux_total += aux
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    return x, aux_total
+
+
+def logits_fn(params, cfg, hidden):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], hidden)
+    return jnp.einsum("...d,dv->...v", hidden.astype(jnp.float32),
+                      params["lm_head"]["w"].astype(jnp.float32))
+
+
+def loss_fn(params, cfg, batch, *, chunk: int = 1024, remat: bool = True,
+            loss_chunk: int = 512, aux_weight: float = 0.01):
+    """Mean next-token cross-entropy.  ``batch``: dict with "tokens" (B,S)
+    and "labels" (B,S) (already shifted; label -1 = masked), optionally
+    "frontend_embeds".  The vocab projection + CE runs in sequence chunks so
+    the (B, S, V) f32 logits tensor is never alive at once (vocab up to
+    262k)."""
+    hidden, aux = forward(params, cfg, batch["tokens"],
+                          frontend_embeds=batch.get("frontend_embeds"),
+                          chunk=chunk, remat=remat)
+    labels = batch["labels"]
+    s_text = labels.shape[1]
+    hidden = hidden[:, -s_text:]  # VLM: loss only on the text positions
+
+    b, s, d = hidden.shape
+    lc = min(loss_chunk, s)
+    n_chunks = s // lc
+    hid_c = hidden[:, :n_chunks * lc].reshape(b, n_chunks, lc, d)
+    lab_c = labels[:, :n_chunks * lc].reshape(b, n_chunks, lc)
+
+    def ce_chunk(carry, xs):
+        h, y = xs
+        logits = L.pin_act(logits_fn(params, cfg, h), 2)  # (B, lc, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        loss = ((logz - gold) * mask).sum()
+        return (carry[0] + loss, carry[1] + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        ce_chunk, (jnp.float32(0.0), jnp.float32(0.0)),
+        (hid_c.transpose(1, 0, 2, 3), lab_c.transpose(1, 0, 2)))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}

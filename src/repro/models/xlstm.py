@@ -1,0 +1,217 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable in
+principle; here a stabilized recurrent scan) and sLSTM (scalar memory with
+true hidden-state recurrence).
+
+Both are linear-time in sequence length with O(1) decode state — this is
+what makes xlstm-1.3b a natural long_500k architecture.  Training/prefill
+run the recurrence with ``lax.scan`` over time; decode is a single cell
+step.  Exponential gating uses the papers' max-stabilizer ``m``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+MLSTM_EXPAND = 2
+SLSTM_PROJ = 4 / 3
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype):
+    d_inner = MLSTM_EXPAND * d_model
+    hd = d_inner // n_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(d_inner)
+    params = {
+        "up_proj": jax.random.normal(ks[0], (d_model, 2 * d_inner), dtype) * s,
+        "wq": jax.random.normal(ks[1], (d_inner, n_heads, hd), dtype) * si,
+        "wk": jax.random.normal(ks[2], (d_inner, n_heads, hd), dtype) * si,
+        "wv": jax.random.normal(ks[3], (d_inner, n_heads, hd), dtype) * si,
+        "w_igate": jax.random.normal(ks[4], (d_inner, n_heads), dtype) * si * 0.1,
+        "b_igate": jnp.full((n_heads,), -10.0, dtype),
+        "w_fgate": jax.random.normal(ks[5], (d_inner, n_heads), dtype) * si * 0.1,
+        "b_fgate": jnp.full((n_heads,), 3.0, dtype),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+        "down_proj": jax.random.normal(ks[6], (d_inner, d_model), dtype) * si,
+    }
+    axes = {
+        "up_proj": ("embed", "inner"),
+        "wq": ("inner", "heads", "head_dim"),
+        "wk": ("inner", "heads", "head_dim"),
+        "wv": ("inner", "heads", "head_dim"),
+        "w_igate": ("inner", None),
+        "b_igate": (None,),
+        "w_fgate": ("inner", None),
+        "b_fgate": (None,),
+        "out_norm": ("inner",),
+        "down_proj": ("inner", "embed"),
+    }
+    return params, axes
+
+
+def _mlstm_cell(state, inputs):
+    """One time step.  state: C (B,H,dk,dv), n (B,H,dk), m (B,H).
+    inputs: q,k,v (B,H,hd), i_raw,f_raw (B,H)."""
+    C, n, m, = state
+    q, k, v, i_raw, f_raw = inputs
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_scan(p, xi, n_heads: int, state=None):
+    """xi: (B, S, d_inner) in f32. Returns (h (B,S,d_inner), final state)."""
+    b, s, d_inner = xi.shape
+    hd = d_inner // n_heads
+    scale = 1.0 / math.sqrt(hd)
+    q = jnp.einsum("bsi,ihk->bshk", xi, p["wq"].astype(jnp.float32)) * scale
+    k = jnp.einsum("bsi,ihk->bshk", xi, p["wk"].astype(jnp.float32))
+    v = jnp.einsum("bsi,ihk->bshk", xi, p["wv"].astype(jnp.float32))
+    i_raw = jnp.einsum("bsi,ih->bsh", xi, p["w_igate"].astype(jnp.float32)) \
+        + p["b_igate"].astype(jnp.float32)
+    f_raw = jnp.einsum("bsi,ih->bsh", xi, p["w_fgate"].astype(jnp.float32)) \
+        + p["b_fgate"].astype(jnp.float32)
+    if state is None:
+        state = (jnp.zeros((b, n_heads, hd, hd), jnp.float32),
+                 jnp.zeros((b, n_heads, hd), jnp.float32),
+                 jnp.zeros((b, n_heads), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_raw, f_raw))
+    state, hs = jax.lax.scan(_mlstm_cell, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d_inner)
+    return h, state
+
+
+def mlstm_forward(p, x, *, n_heads: int, state=None, return_state=False):
+    """x: (B, S, D)."""
+    b, s, d = x.shape
+    uz = jnp.einsum("bsd,di->bsi", x, p["up_proj"].astype(x.dtype))
+    u, z = jnp.split(uz, 2, axis=-1)
+    h, new_state = _mlstm_scan(p, u.astype(jnp.float32), n_heads, state)
+    h = L.rms_norm(h, p["out_norm"])
+    h = h * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", h.astype(x.dtype),
+                     p["down_proj"].astype(x.dtype))
+    if return_state:
+        return out, new_state
+    return out
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int):
+    d_inner = MLSTM_EXPAND * d_model
+    hd = d_inner // n_heads
+    return (jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            jnp.zeros((batch, n_heads, hd), jnp.float32),
+            jnp.zeros((batch, n_heads), jnp.float32))
+
+
+def mlstm_state_axes():
+    return (("cache_batch", None, "head_dim", None),
+            ("cache_batch", None, "head_dim"),
+            ("cache_batch", None))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int, dtype):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d_model)
+    sh = 1.0 / math.sqrt(hd)
+    d_up = int(SLSTM_PROJ * d_model)
+    params = {
+        # input projections for gates i, f, z, o : (D, H, hd)
+        "w_gates": jax.random.normal(ks[0], (4, d_model, n_heads, hd), dtype) * s,
+        "b_gates": jnp.zeros((4, n_heads, hd), dtype),
+        # head-local recurrent matrices
+        "r_gates": jax.random.normal(ks[1], (4, n_heads, hd, hd), dtype) * sh,
+        "out_norm": jnp.zeros((d_model,), dtype),
+        "up_proj": jax.random.normal(ks[2], (d_model, 2 * d_up), dtype) * s,
+        "down_proj": jax.random.normal(ks[3], (d_up, d_model), dtype)
+        * (1.0 / math.sqrt(d_up)),
+    }
+    axes = {
+        "w_gates": (None, "embed", "heads", "head_dim"),
+        "b_gates": (None, "heads", "head_dim"),
+        "r_gates": (None, "heads", "head_dim", None),
+        "out_norm": ("embed",),
+        "up_proj": ("embed", "ffn"),
+        "down_proj": ("ffn", "embed"),
+    }
+    return params, axes
+
+
+def _slstm_cell(state, gates_x, r_gates):
+    """state: c, n, m, h  each (B, H, hd). gates_x: (4, B, H, hd)."""
+    c, n, m, h = state
+    rec = jnp.einsum("bhk,ghkl->gbhl", h, r_gates)
+    gi, gf, gz, go = gates_x + rec
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    i_g = jnp.exp(gi - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def _slstm_scan(p, x, n_heads: int, state=None):
+    b, s, d = x.shape
+    hd = d // n_heads
+    xf = x.astype(jnp.float32)
+    gates = jnp.einsum("bsd,gdhk->gbshk", xf,
+                       p["w_gates"].astype(jnp.float32)) \
+        + p["b_gates"].astype(jnp.float32)[:, None, None]
+    if state is None:
+        z = jnp.zeros((b, n_heads, hd), jnp.float32)
+        state = (z, z, jnp.zeros((b, n_heads, hd), jnp.float32), z)
+    r = p["r_gates"].astype(jnp.float32)
+    xs = jnp.moveaxis(gates, 2, 0)            # (S, 4, B, H, hd)
+    state, hs = jax.lax.scan(lambda st, g: _slstm_cell(st, g, r), state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    return h, state
+
+
+def slstm_forward(p, x, *, n_heads: int, state=None, return_state=False):
+    h, new_state = _slstm_scan(p, x, n_heads, state)
+    h = L.rms_norm(h, p["out_norm"])
+    uz = jnp.einsum("bsd,du->bsu", h.astype(x.dtype),
+                    p["up_proj"].astype(x.dtype))
+    u, z = jnp.split(uz, 2, axis=-1)
+    out = jnp.einsum("bsu,ud->bsd", jax.nn.gelu(u) * jax.nn.sigmoid(z),
+                     p["down_proj"].astype(x.dtype))
+    if return_state:
+        return out, new_state
+    return out
+
+
+def init_slstm_state(batch: int, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return (z, z, z, z)
+
+
+def slstm_state_axes():
+    a = ("cache_batch", None, "head_dim")
+    return (a, a, a, a)

@@ -1,0 +1,80 @@
+"""Optimizers from scratch (no optax): SGD(+momentum), AdamW.
+
+Two usage modes, matching DESIGN.md:
+
+  * "paper" mode (faithful Algorithm 1): the learning rate is folded into
+    the update BEFORE the sparsified exchange, and the optimizer consumes a
+    parameter-delta: SGD -> ``p - delta``; momentum -> heavy-ball on deltas
+    (the DGC "momentum correction" variant is a beyond-paper option).
+  * "standard" mode: the exchange ships raw gradients and the optimizer
+    applies its own lr (AdamW path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    """Consumes pre-scaled deltas (paper mode) or raw grads with lr."""
+    momentum: float = 0.0
+    nesterov: bool = False
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(self, deltas, state, params=None, lr: float | jax.Array = 1.0):
+        """Returns (applied_deltas, new_state); caller does p - applied."""
+        scaled = jax.tree.map(lambda d: lr * d.astype(jnp.float32), deltas)
+        if self.momentum == 0.0:
+            return scaled, state
+        new_m = jax.tree.map(lambda m, d: self.momentum * m + d, state, scaled)
+        if self.nesterov:
+            out = jax.tree.map(lambda m, d: self.momentum * m + d, new_m, scaled)
+        else:
+            out = new_m
+        return out, new_m
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree.map(jnp.zeros_like, z),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr: float | jax.Array = 1e-3):
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1)
+                          * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        bc1 = 1 - self.b1 ** c.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** c.astype(jnp.float32)
+
+        def delta(m, v, p):
+            d = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                d = d + self.weight_decay * p.astype(jnp.float32)
+            return lr * d
+
+        out = jax.tree.map(delta, mu, nu, params)
+        return out, {"mu": mu, "nu": nu, "count": c}
+
+
+def apply_deltas(params, deltas):
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
+        params, deltas)

@@ -1,0 +1,310 @@
+"""Serving path: prefill (build caches) and single-token decode.
+
+``decode_32k`` / ``long_500k`` dry-run shapes lower ``serve_step`` — ONE new
+token against a cache of ``seq_len`` — so the cache layouts here determine
+the decode roofline.  Sliding-window attention layers use ring caches of the
+window size; SSM/xLSTM layers carry O(1) state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models import xlstm as X
+
+
+def _attn_capacity(spec: T.BlockSpec, capacity: int) -> int:
+    if spec.window:
+        return min(capacity, spec.window)
+    return capacity
+
+
+def init_layer_state(cfg, spec: T.BlockSpec, batch: int, capacity: int,
+                     dtype, enc_len: int = 0):
+    hd = T.head_dim(cfg)
+    if spec.kind == "attn":
+        st = {"self": A.init_cache(batch, _attn_capacity(spec, capacity),
+                                   cfg.n_kv_heads, hd, dtype)}
+        if spec.cross_attn:
+            st["cross"] = A.init_cache(batch, max(enc_len, 1),
+                                       cfg.n_kv_heads, hd, dtype)
+        return st
+    if spec.kind == "mamba":
+        return S.init_mamba_state(batch, cfg.d_model, dtype)
+    if spec.kind == "mlstm":
+        return X.init_mlstm_state(batch, cfg.d_model, cfg.n_heads)
+    if spec.kind == "slstm":
+        return X.init_slstm_state(batch, cfg.d_model, cfg.n_heads)
+    raise ValueError(spec.kind)
+
+
+def init_states(cfg, batch: int, capacity: int, dtype, enc_len: int = 0):
+    """Stacked per-period states mirroring the params layout."""
+    specs = T.build_blockspecs(cfg)
+    p = T.find_period(specs)
+    n_periods = len(specs) // p
+
+    def stacked(j):
+        one = init_layer_state(cfg, specs[j], batch, capacity, dtype, enc_len)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape).copy(), one)
+
+    blocks = [stacked(j) for j in range(p)]
+    tail = [init_layer_state(cfg, specs[i], batch, capacity, dtype, enc_len)
+            for i in range(n_periods * p, len(specs))]
+    return {"blocks": blocks, "tail": tail}
+
+
+def layer_state_axes(cfg, spec: T.BlockSpec):
+    if spec.kind == "attn":
+        ax = {"self": A.cache_axes()}
+        if spec.cross_attn:
+            ax["cross"] = A.cache_axes()
+        return ax
+    if spec.kind == "mamba":
+        return S.mamba_state_axes()
+    if spec.kind == "mlstm":
+        return X.mlstm_state_axes()
+    if spec.kind == "slstm":
+        return X.slstm_state_axes()
+    raise ValueError(spec.kind)
+
+
+def states_axes(cfg):
+    """Logical-axis tree mirroring ``init_states``' structure."""
+    specs = T.build_blockspecs(cfg)
+    p = T.find_period(specs)
+    n_periods = len(specs) // p
+    is_ax = lambda a: isinstance(a, tuple) and all(
+        isinstance(x, (str, type(None))) for x in a)
+
+    def stacked(j):
+        one = layer_state_axes(cfg, specs[j])
+        return jax.tree.map(lambda a: ("layers",) + tuple(a), one,
+                            is_leaf=is_ax)
+
+    return {"blocks": [stacked(j) for j in range(p)],
+            "tail": [layer_state_axes(cfg, specs[i])
+                     for i in range(n_periods * p, len(specs))]}
+
+
+# ---------------------------------------------------------------------------
+# per-block decode
+# ---------------------------------------------------------------------------
+
+def _decode_block(bp, spec: T.BlockSpec, x, state, pos, cfg,
+                  chunk: int = 2048):
+    h = L.apply_norm(cfg.norm, x, bp["ln_attn"])
+    if spec.kind == "attn":
+        window = spec.window if spec.window else None
+        h, new_self = A.decode_attention(
+            bp["attn"], h, state["self"], pos, n_kv_heads=cfg.n_kv_heads,
+            rope_theta=cfg.rope_theta, window=window, chunk=chunk)
+        new_state = dict(state, self=new_self)
+        x = x + h
+        if spec.cross_attn:
+            h = L.apply_norm(cfg.norm, x, bp["ln_cross"])
+            kvh = cfg.n_kv_heads
+            q = jnp.einsum("bsd,dhk->bshk", h, bp["cross"]["wq"].astype(h.dtype))
+            b, s, nh, hd = q.shape
+            q = q.reshape(b, s, kvh, nh // kvh, hd)
+            o = A.chunked_attention(
+                q, state["cross"]["k"].astype(h.dtype),
+                state["cross"]["v"].astype(h.dtype),
+                q_positions=jnp.zeros((1,), jnp.int32),
+                k_positions=jnp.zeros((state["cross"]["k"].shape[1],),
+                                      jnp.int32),
+                causal=False, chunk=chunk)
+            o = o.reshape(b, s, nh, hd)
+            h = jnp.einsum("bshk,hkd->bsd", o, bp["cross"]["wo"].astype(h.dtype))
+            x = x + h
+    elif spec.kind == "mamba":
+        h, new_state = S.mamba_decode(bp["mamba"], h, state)
+        x = x + h
+    elif spec.kind == "mlstm":
+        h, new_state = X.mlstm_forward(bp["mlstm"], h, n_heads=cfg.n_heads,
+                                       state=state, return_state=True)
+        x = x + h
+    elif spec.kind == "slstm":
+        h, new_state = X.slstm_forward(bp["slstm"], h, n_heads=cfg.n_heads,
+                                       state=state, return_state=True)
+        x = x + h
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn == "dense":
+        from repro.models import ffn as F
+        h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        x = x + F.ffn_forward(bp["ffn"], h, cfg.activation)
+    elif spec.ffn == "moe":
+        from repro.models import moe as M
+        h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        out, _ = M.moe_forward_auto(bp["moe"], h, top_k=cfg.moe_top_k,
+                                    activation=cfg.activation)
+        x = x + out
+    return x, new_state
+
+
+def serve_step(params, cfg, token, states, pos, *, chunk: int = 2048):
+    """One-token decode.  token: (B, 1) int32; pos: scalar int32 (absolute
+    position being generated).  Returns (logits (B, V), new states)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], token, dtype)
+    specs = T.build_blockspecs(cfg)
+    p = T.find_period(specs)
+    n_periods = len(specs) // p
+
+    def body(x, xs):
+        block_slices, state_slices = xs
+        new_states = []
+        for j in range(p):
+            x, ns = _decode_block(block_slices[j], specs[j], x,
+                                  state_slices[j], pos, cfg, chunk)
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    if n_periods:
+        x, new_blocks = jax.lax.scan(
+            body, x, (tuple(params["decoder"]["blocks"]),
+                      tuple(states["blocks"])))
+    else:
+        new_blocks = tuple()
+    new_tail = []
+    for i, tp in enumerate(params["decoder"]["tail"]):
+        x, ns = _decode_block(tp, specs[n_periods * p + i], x,
+                              states["tail"][i], pos, cfg, chunk)
+        new_tail.append(ns)
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = T.logits_fn(params, cfg, x)[:, 0]
+    return logits, {"blocks": list(new_blocks), "tail": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _prefill_block(bp, spec: T.BlockSpec, x, pos0, cfg, memory=None,
+                   chunk: int = 1024):
+    h = L.apply_norm(cfg.norm, x, bp["ln_attn"])
+    if spec.kind == "attn":
+        window = spec.window if spec.window else None
+        h, cache = A.prefill_attention(bp["attn"], h,
+                                       n_kv_heads=cfg.n_kv_heads,
+                                       rope_theta=cfg.rope_theta,
+                                       window=window, chunk=chunk)
+        state = {"self": cache}
+        x = x + h
+        if spec.cross_attn and memory is not None:
+            h = L.apply_norm(cfg.norm, x, bp["ln_cross"])
+            h2 = A.cross_attention_forward(bp["cross"], h, memory,
+                                           n_kv_heads=cfg.n_kv_heads,
+                                           chunk=chunk)
+            x = x + h2
+            k = jnp.einsum("bsd,dhk->bshk", memory,
+                           bp["cross"]["wk"].astype(memory.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", memory,
+                           bp["cross"]["wv"].astype(memory.dtype))
+            state["cross"] = {"k": k, "v": v}
+    elif spec.kind == "mamba":
+        # recurrent prefill state: run the parallel form for outputs, then a
+        # short scan for the final state is avoided by reusing the parallel
+        # hidden — here we recompute the final state cheaply via decode-free
+        # formula: use the last position of the associative scan.
+        h, state = _mamba_prefill(bp["mamba"], h)
+        x = x + h
+    elif spec.kind == "mlstm":
+        h, state = X.mlstm_forward(bp["mlstm"], h, n_heads=cfg.n_heads,
+                                   return_state=True)
+        x = x + h
+    elif spec.kind == "slstm":
+        h, state = X.slstm_forward(bp["slstm"], h, n_heads=cfg.n_heads,
+                                   return_state=True)
+        x = x + h
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn == "dense":
+        from repro.models import ffn as F
+        h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        x = x + F.ffn_forward(bp["ffn"], h, cfg.activation)
+    elif spec.ffn == "moe":
+        from repro.models import moe as M
+        h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        out, _ = M.moe_forward_auto(bp["moe"], h, top_k=cfg.moe_top_k,
+                                    activation=cfg.activation)
+        x = x + out
+    return x, state
+
+
+def _mamba_prefill(p, x):
+    """Parallel mamba forward that also returns the final (conv, ssm) state."""
+    b, s, d = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_conv, conv_state = S._causal_conv(xi, p["conv_w"], p["conv_b"])
+    xi_act = jax.nn.silu(xi_conv)
+    dt, Bm, Cm = S._ssm_params(p, xi_act)
+    A_ = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xf = xi_act.astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A_[None, None])
+    b_in = dt[..., None] * Bm[:, :, None, :] * xf[..., None]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h_all = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    y = jnp.einsum("bsin,bsn->bsi", h_all, Cm) \
+        + xf * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", y.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype))
+    state = {"conv": conv_state.astype(xi.dtype), "ssm": h_all[:, -1]}
+    return out, state
+
+
+def prefill(params, cfg, tokens, *, frontend_embeds=None, chunk: int = 1024):
+    """Run the prompt, return (last-position logits (B, V), states)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, dtype)
+    memory = None
+    if cfg.n_encoder_layers:
+        assert frontend_embeds is not None
+        enc_specs = [T.BlockSpec("attn", "dense", None, False)] \
+            * cfg.n_encoder_layers
+        mem = frontend_embeds.astype(dtype)
+        mem, _ = T._run_stack(params["encoder"], enc_specs, mem, cfg,
+                              chunk=chunk, remat=False)
+        memory = L.apply_norm(cfg.norm, mem, params["enc_norm"])
+    elif frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(dtype), x], axis=1)
+    specs = T.build_blockspecs(cfg)
+    p = T.find_period(specs)
+    n_periods = len(specs) // p
+
+    def body(x, block_slices):
+        new_states = []
+        for j in range(p):
+            x, st = _prefill_block(block_slices[j], specs[j], x, 0, cfg,
+                                   memory=memory, chunk=chunk)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    if n_periods:
+        x, blocks = jax.lax.scan(body, x,
+                                 tuple(params["decoder"]["blocks"]))
+    else:
+        blocks = tuple()
+    tail = []
+    for i, tp in enumerate(params["decoder"]["tail"]):
+        x, st = _prefill_block(tp, specs[n_periods * p + i], x, 0, cfg,
+                               memory=memory, chunk=chunk)
+        tail.append(st)
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = T.logits_fn(params, cfg, x[:, -1:])[:, 0]
+    return logits, {"blocks": list(blocks), "tail": tail}

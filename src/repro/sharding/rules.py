@@ -1,0 +1,105 @@
+"""Logical-axis -> physical-mesh-axis resolution.
+
+Model code annotates every parameter/cache leaf with logical axis names
+(("embed", "heads", "head_dim"), ...).  This module turns those into
+``PartitionSpec``s for a concrete mesh, with divisibility-aware fallbacks:
+
+  * tensor parallelism ('model'): the first logical axis in TP_PRIORITY
+    present on the leaf whose dim is divisible by the tp size gets 'model'.
+    E.g. granite's 24 heads don't divide 16 -> head_dim (64) is sharded
+    instead; olmoe's 64 experts divide 16 -> expert-parallel.
+  * FSDP ('data' in dense/hier modes): folded onto the largest remaining
+    divisible dim (weight-shard-gather is GSPMD's job on auto axes).
+  * decode caches: batch over the data axes, sequence over 'model'
+    (flash-decoding style), uniformly across architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# NOTE: "expert_ffn" outranks "experts": sharding expert weights on d_ff
+# keeps the (E, C, D) dispatch buffers unsharded, so the token scatter is
+# local and the expert einsums partition over (ffn x data-groups) — GSPMD
+# cannot partition a scatter over a sharded expert dim (EXPERIMENTS §Perf
+# target 3).  "experts" stays as a last-resort fallback.
+TP_PRIORITY = ("vocab", "expert_ffn", "ffn", "inner", "heads",
+               "kv_heads", "head_dim", "cache_seq", "experts")
+# expert-sharded variant (cfg.moe_shard == "experts"): scatter dispatch
+# pays a buffer replication per MoE layer but avoids the down-proj psum —
+# measured cheaper when E divides the TP axis and capacity is large.
+TP_PRIORITY_EXPERTS = ("experts", "vocab", "ffn", "expert_ffn", "inner",
+                       "heads", "kv_heads", "head_dim", "cache_seq")
+FSDP_CANDIDATES = ("embed", "vocab", "ffn", "inner", "expert_ffn", "heads",
+                   "head_dim")
+
+
+def spec_for_leaf(shape: Sequence[int], axes: Sequence[Any],
+                  mesh_axis_sizes: dict[str, int], *, tp_axis: str = "model",
+                  fsdp_axis: str | None = None,
+                  data_axes: tuple[str, ...] = (),
+                  tp_priority: tuple = TP_PRIORITY) -> P:
+    """Resolve one leaf's logical axes to a PartitionSpec."""
+    assert len(shape) == len(axes), (shape, axes)
+    spec: list[Any] = [None] * len(shape)
+    used_mesh: set[str] = set()
+
+    # batch-like axes first (caches/activations)
+    for i, a in enumerate(axes):
+        if a == "cache_batch" and data_axes:
+            n = 1
+            for ax in data_axes:
+                n *= mesh_axis_sizes[ax]
+            if shape[i] % n == 0:
+                spec[i] = tuple(data_axes)
+                used_mesh.update(data_axes)
+
+    # tensor parallelism
+    tp = mesh_axis_sizes.get(tp_axis, 1)
+    if tp > 1 and tp_axis not in used_mesh:
+        for name in tp_priority:
+            done = False
+            for i, a in enumerate(axes):
+                if a == name and spec[i] is None and shape[i] % tp == 0:
+                    spec[i] = tp_axis
+                    used_mesh.add(tp_axis)
+                    done = True
+                    break
+            if done:
+                break
+
+    # fsdp
+    if fsdp_axis and fsdp_axis not in used_mesh:
+        fs = mesh_axis_sizes.get(fsdp_axis, 1)
+        if fs > 1:
+            best = None
+            for name in FSDP_CANDIDATES:
+                for i, a in enumerate(axes):
+                    if a == name and spec[i] is None and shape[i] % fs == 0:
+                        best = i
+                        break
+                if best is not None:
+                    break
+            if best is not None:
+                spec[best] = fsdp_axis
+    return P(*spec)
+
+
+def tree_specs(params, axes_tree, mesh, *, tp_axis="model", fsdp_axis=None,
+               data_axes=(), tp_priority=TP_PRIORITY):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda p, a: spec_for_leaf(p.shape, a, sizes, tp_axis=tp_axis,
+                                   fsdp_axis=fsdp_axis, data_axes=data_axes,
+                                   tp_priority=tp_priority),
+        params, axes_tree, is_leaf=lambda a: isinstance(a, tuple)
+        and all(isinstance(x, (str, type(None))) for x in a))
+
+
+def tree_shardings(params, axes_tree, mesh, **kw):
+    from jax.sharding import NamedSharding
+    specs = tree_specs(params, axes_tree, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,145 @@
+"""Training loop glue: per-worker gradients -> LAGS/SLGS/Dense exchange ->
+optimizer.  Two execution modes:
+
+  * ``SimTrainer`` — simulates P workers on one device (leading P axis on
+    batches and residuals); used by convergence experiments and tests.
+    Numerically identical to the distributed path (verified in tests).
+  * the distributed ``make_train_step`` lives in ``repro.launch.train`` and
+    wraps the same exchange objects in a partial-auto ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assumption, lags
+from repro.optim import optimizers as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    method: str = "lags"          # dense | slgs | lags
+    compression_ratio: float = 250.0
+    compressor: str = "topk_exact"
+    lr: float = 0.1
+    momentum: float = 0.0
+    # DGC-style momentum correction (Lin et al. 2018), the paper's own
+    # suggested fix for the sparsification accuracy gap (Sec. 6): momentum
+    # is applied PER WORKER BEFORE sparsification, so the EF residual
+    # accumulates velocity, not raw gradient.
+    momentum_correction: float = 0.0
+    measure_delta: bool = False   # record the Eq. 20 assumption metric
+    lr_schedule: Callable[[jax.Array], jax.Array] | None = None
+
+
+def make_exchange(tcfg: TrainConfig, params):
+    if tcfg.method == "dense":
+        return lags.DenseExchange()
+    if tcfg.method == "slgs":
+        d_total = sum(int(x.size) for x in jax.tree.leaves(params))
+        k_total = max(1, int(round(d_total / tcfg.compression_ratio)))
+        return lags.SLGSExchange(k_total=k_total,
+                                 compressor_name=tcfg.compressor)
+    if tcfg.method == "lags":
+        ks = lags.ks_from_ratio(params, tcfg.compression_ratio)
+        return lags.LAGSExchange(ks=ks, compressor_name=tcfg.compressor)
+    raise ValueError(tcfg.method)
+
+
+class SimTrainer:
+    """P simulated workers; batches arrive with a leading (P,) axis."""
+
+    def __init__(self, loss_fn, params, tcfg: TrainConfig, n_workers: int):
+        self.loss_fn = loss_fn
+        self.tcfg = tcfg
+        self.n_workers = n_workers
+        self.exchange = make_exchange(tcfg, params)
+        self.optimizer = opt.SGD(momentum=tcfg.momentum)
+        per_worker_like = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, jnp.float32),
+            params)
+        self._step = jax.jit(self._build_step())
+        self.state = {
+            "params": params,
+            "ef": (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                per_worker_like)
+                   if tcfg.method != "dense" else ()),
+            "mom": (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                 per_worker_like)
+                    if tcfg.momentum_correction else ()),
+            "opt": self.optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step):
+        if self.tcfg.lr_schedule is not None:
+            return self.tcfg.lr_schedule(step)
+        return jnp.float32(self.tcfg.lr)
+
+    def _build_step(self):
+        loss_fn = self.loss_fn
+        exchange = self.exchange
+        optimizer = self.optimizer
+        measure = self.tcfg.measure_delta
+        method = self.tcfg.method
+
+        def step(state, batch):
+            params = state["params"]
+            lr = self._lr(state["step"])
+
+            def one_worker(b):
+                (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, b)
+                return loss, g
+
+            losses, grads = jax.vmap(one_worker)(batch)  # grads: (P, ...)
+            mc = self.tcfg.momentum_correction
+            if mc:
+                # per-worker velocity BEFORE sparsification (DGC)
+                new_mom = jax.tree.map(lambda m, g: mc * m + lr * g,
+                                       state["mom"], grads)
+                updates = new_mom
+            else:
+                new_mom = state["mom"]
+                updates = jax.tree.map(lambda g: lr * g, grads)
+
+            metrics = {"loss": losses.mean(), "lr": lr}
+            if measure and method == "lags":
+                accs = jax.tree.map(lambda e, u: e + u, state["ef"], updates)
+                deltas = assumption.delta_metric_tree(
+                    accs, exchange.ks, jax.random.fold_in(
+                        jax.random.PRNGKey(17), state["step"]))
+                flat = jnp.stack(jax.tree.leaves(deltas))
+                metrics["delta_max"] = flat.max()
+                metrics["delta_mean"] = flat.mean()
+                metrics["delta_per_leaf"] = flat   # order = tree.leaves
+
+            mean_update, new_ef = exchange.exchange(updates, state["ef"], None)
+            deltas, new_opt = optimizer.update(mean_update, state["opt"],
+                                               params, lr=1.0)
+            new_params = opt.apply_deltas(params, deltas)
+            return {
+                "params": new_params, "ef": new_ef, "mom": new_mom,
+                "opt": new_opt, "step": state["step"] + 1,
+            }, metrics
+
+        return step
+
+    def run(self, data_fn, n_steps: int, log_every: int = 0):
+        """data_fn(step) -> per-worker batch pytree with leading (P,) axis."""
+        history = []
+        for t in range(n_steps):
+            batch = data_fn(t)
+            self.state, metrics = self._step(self.state, batch)
+            if log_every and (t % log_every == 0 or t == n_steps - 1):
+                import numpy as _np
+                row = {}
+                for k, v in metrics.items():
+                    a = _np.asarray(v)
+                    row[k] = a.tolist() if a.ndim else float(a)
+                history.append(row | {"step": t})
+        return history

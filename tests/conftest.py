@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — unit/smoke tests must see
+the real single CPU device; multi-device tests run in subprocesses
+(tests/test_distributed.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

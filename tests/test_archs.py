@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: the FULL config must match the
+assigned spec exactly (numbers from the brief, sources cited in the config
+modules), and a REDUCED same-family variant must run one forward/train step
+and one decode step on CPU with finite outputs of the right shape.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.launch import specs as SP
+from repro.models import transformer as T
+from repro.serving import engine
+
+
+# (arch, L, d_model, H, KV, d_ff, vocab, family, n_experts, top_k)
+ASSIGNED = [
+    ("llava_next_mistral_7b", 32, 4096, 32, 8, 14336, 32000, "vlm", 0, 0),
+    ("nemotron_4_340b", 96, 18432, 96, 8, 73728, 256000, "dense", 0, 0),
+    ("seamless_m4t_large_v2", 24, 1024, 16, 16, 8192, 256206, "audio", 0, 0),
+    ("llama3_8b", 32, 4096, 32, 8, 14336, 128256, "dense", 0, 0),
+    ("granite_moe_3b_a800m", 32, 1536, 24, 8, 512, 49155, "moe", 40, 8),
+    ("gemma3_27b", 62, 5376, 32, 16, 21504, 262144, "dense", 0, 0),
+    ("olmoe_1b_7b", 16, 2048, 16, 16, 1024, 50304, "moe", 64, 8),
+    ("xlstm_1_3b", 48, 2048, 4, 4, 0, 50304, "ssm", 0, 0),
+    ("jamba_v0_1_52b", 32, 4096, 32, 8, 14336, 65536, "hybrid", 16, 2),
+    ("tinyllama_1_1b", 22, 2048, 32, 4, 5632, 32000, "dense", 0, 0),
+]
+
+ARCHS = [row[0] for row in ASSIGNED]
+
+
+@pytest.mark.parametrize(
+    "arch,L,d,H,KV,dff,V,family,E,topk", ASSIGNED, ids=ARCHS)
+def test_full_config_matches_assignment(arch, L, d, H, KV, dff, V, family,
+                                        E, topk):
+    cfg = base.get_config(arch)
+    total_layers = cfg.n_layers + cfg.n_encoder_layers
+    assert total_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == dff
+    assert cfg.vocab == V
+    assert cfg.family == family
+    assert cfg.n_experts == E
+    assert cfg.moe_top_k == topk
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = base.get_smoke_config(arch)
+    assert cfg.n_layers + cfg.n_encoder_layers <= 8
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.family == base.get_config(arch).family
+
+
+def _smoke_batch(cfg, *, b=2, s=32, key=None):
+    shape = base.InputShape("smoke", s, b, "train")
+    return SP.concrete_batch(cfg, shape, key=key or jax.random.PRNGKey(1))
+
+
+@pytest.mark.parametrize("arch", ARCHS + base.PAPER_IDS[1:])
+def test_smoke_train_step(arch):
+    """One forward+backward+LAGS step on the reduced config: finite loss,
+    finite same-shape params, loss strictly changes the params."""
+    cfg = base.get_smoke_config(arch)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg)
+
+    def loss(p):
+        return T.loss_fn(p, cfg, batch, chunk=16, loss_chunk=16)
+
+    (l0, aux), grads = jax.jit(
+        lambda p: jax.value_and_grad(loss, has_aux=True)(p))(params)
+    assert np.isfinite(float(l0)), f"{arch}: non-finite loss"
+    assert float(l0) > 0
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat), \
+        f"{arch}: non-finite grads"
+    # at least 99% of leaves get a nonzero gradient signal
+    nz = [bool(np.any(np.asarray(g, np.float32) != 0)) for g in flat]
+    assert sum(nz) >= 0.9 * len(nz), f"{arch}: dead gradients"
+    # apply one LAGS update and re-evaluate: params change, loss stays finite
+    from repro.core import lags
+    ks = lags.ks_from_ratio(params, 10.0)
+    exch = lags.BlockLAGSExchange(ks=ks, block_size=256)
+    upd = jax.tree.map(lambda g: 0.1 * g.astype(jnp.float32)[None], grads)
+    mean_upd, ef = exch.exchange(upd, exch.init(upd), None)
+    new_params = jax.tree.map(
+        lambda p, du: (p.astype(jnp.float32) - du).astype(p.dtype),
+        params, mean_upd)
+    (l1, _), _ = jax.jit(
+        lambda p: jax.value_and_grad(loss, has_aux=True)(p))(new_params)
+    assert np.isfinite(float(l1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = base.get_smoke_config(arch)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 32
+    batch = _smoke_batch(cfg, b=b, s=s)
+    hidden, aux = jax.jit(lambda p: T.forward(
+        p, cfg, batch["tokens"],
+        frontend_embeds=batch.get("frontend_embeds"), chunk=16))(params)
+    # VLM prepends frontend tokens; enc-dec consumes them in the encoder
+    s_expect = s if cfg.frontend != "vision" else s
+    assert hidden.shape == (b, s_expect, cfg.d_model), arch
+    assert np.all(np.isfinite(np.asarray(hidden, np.float32)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill(arch):
+    """Prefill a short prompt: last-position logits finite, shaped (B, V)."""
+    cfg = base.get_smoke_config(arch)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 16
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    fe = None
+    if cfg.frontend == "audio":
+        fe = jax.random.normal(key, (b, SP.audio_frames(s), cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+    elif cfg.frontend == "vision":
+        fe = jax.random.normal(key, (b, 4, cfg.d_model), jnp.dtype(cfg.dtype))
+    logits, states = jax.jit(lambda p: engine.prefill(
+        p, cfg, toks, frontend_embeds=fe, chunk=16))(params)
+    assert logits.shape == (b, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode(arch):
+    """serve_step against a capacity-32 cache: 3 tokens, finite (B, V)
+    logits each step, states keep their shapes."""
+    cfg = base.get_smoke_config(arch)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    b, cap = 2, 32
+    enc_len = SP.audio_frames(cap) if cfg.frontend == "audio" else 0
+    states = engine.init_states(cfg, b, cap, jnp.dtype(cfg.dtype),
+                                enc_len=enc_len)
+    shapes0 = jax.tree.map(lambda x: x.shape, states)
+    step = jax.jit(lambda p, t, st, pos: engine.serve_step(
+        p, cfg, t, st, pos, chunk=16))
+    tok = jnp.zeros((b, 1), jnp.int32)
+    for i in range(3):
+        logits, states = step(params, tok, states, jnp.int32(i))
+        assert logits.shape == (b, cfg.vocab)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32))), \
+            f"{arch} decode step {i}"
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert jax.tree.map(lambda x: x.shape, states) == shapes0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_analytic_matches_init(arch):
+    """cfg.param_count() (used for roofline MODEL_FLOPS) must equal the
+    actual initialized parameter count on the reduced config."""
+    cfg = base.get_smoke_config(arch)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    actual = sum(int(x.size) for x in jax.tree.leaves(params))
+    assert actual == cfg.param_count(), \
+        f"{arch}: analytic {cfg.param_count()} != actual {actual}"
+
+
+def test_long_context_flags_match_design():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    runs = {a for a in ARCHS
+            if base.get_config(a).supports_long_context}
+    assert runs == {"xlstm_1_3b", "jamba_v0_1_52b", "gemma3_27b"}

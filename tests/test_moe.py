@@ -1,0 +1,100 @@
+"""MoE dispatch semantics: grouped == per-group dense, capacity drops,
+router invariants, and the sharding-rule selection for expert weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.sharding import rules
+
+
+def _setup(d=32, dff=64, e=4, seed=0):
+    p, axes = M.init_moe(jax.random.PRNGKey(seed), d, dff, e, jnp.float32)
+    return p, axes
+
+
+class TestGroupedDispatch:
+    @given(seed=st.integers(0, 100), groups=st.sampled_from([1, 2, 4]),
+           top_k=st.sampled_from([1, 2]))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_per_group_dense(self, seed, groups, top_k):
+        p, _ = _setup(seed=seed)
+        b, s, d = 4, 8, 32
+        x = jax.random.normal(jax.random.fold_in(
+            jax.random.PRNGKey(7), seed), (b, s, d))
+        outg, auxg = M.moe_forward_grouped(p, x, top_k=top_k, groups=groups)
+        act = L.ACTIVATIONS["silu"]
+        tg = (b // groups) * s
+        cap = max(1, int(1.25 * tg * top_k / 4))
+        outs, auxs = [], []
+        for gi in range(groups):
+            xs = x[gi * (b // groups):(gi + 1) * (b // groups)]
+            o, a = M._dense_core(p, xs.reshape(tg, d), top_k=top_k,
+                                 act=act, capacity=cap)
+            outs.append(o.reshape(b // groups, s, d))
+            auxs.append(a)
+        ref = jnp.concatenate(outs, 0)
+        np.testing.assert_allclose(np.asarray(outg), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(float(auxg), float(np.mean(auxs)),
+                                   rtol=1e-5)
+
+    def test_capacity_drop_routes_through_residual(self):
+        """With capacity_factor tiny, dropped tokens produce ZERO output
+        (the transformer's residual connection carries them)."""
+        p, _ = _setup()
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+        out, _ = M.moe_forward(p, x, top_k=2, capacity_factor=0.01)
+        # capacity = max(1, ...) = 1 slot/expert -> most tokens dropped
+        zero_rows = np.asarray((jnp.abs(out).sum(-1) == 0)).mean()
+        assert zero_rows > 0.5
+
+    def test_full_capacity_processes_all_tokens(self):
+        p, _ = _setup()
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 32))
+        out, _ = M.moe_forward(p, x, top_k=2, capacity_factor=8.0)
+        assert float(jnp.abs(out).sum(-1).min()) > 0
+
+
+class TestRouter:
+    def test_gates_normalized(self):
+        p, _ = _setup()
+        xt = jax.random.normal(jax.random.PRNGKey(3), (64, 32))
+        gates, idx, aux = M._route(p, xt, 2)
+        np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+        assert np.asarray(idx).min() >= 0 and np.asarray(idx).max() < 4
+
+    def test_aux_loss_uniform_lower_bound(self):
+        """Switch aux loss >= 1 with equality iff perfectly balanced."""
+        p, _ = _setup()
+        xt = jax.random.normal(jax.random.PRNGKey(4), (256, 32))
+        _, _, aux = M._route(p, xt, 2)
+        assert float(aux) >= 0.99
+
+
+class TestExpertShardingRules:
+    def test_ffn_priority_default(self):
+        """Default: expert d_ff gets the TP axis, experts stay unsharded."""
+        spec = rules.spec_for_leaf(
+            (8, 32, 64), ("experts", "embed", "expert_ffn"),
+            {"model": 16, "data": 16}, tp_axis="model")
+        assert tuple(spec) == (None, None, "model")
+
+    def test_experts_priority_variant(self):
+        spec = rules.spec_for_leaf(
+            (64, 32, 64), ("experts", "embed", "expert_ffn"),
+            {"model": 16, "data": 16}, tp_axis="model",
+            tp_priority=rules.TP_PRIORITY_EXPERTS)
+        assert tuple(spec) == ("model", None, None)
+
+    def test_indivisible_experts_fall_to_ffn(self):
+        """granite: 40 experts don't divide 16 -> d_ff sharded even under
+        the experts-first priority."""
+        spec = rules.spec_for_leaf(
+            (40, 1536, 512), ("experts", "embed", "expert_ffn"),
+            {"model": 16, "data": 16}, tp_axis="model",
+            tp_priority=rules.TP_PRIORITY_EXPERTS)
+        assert tuple(spec) == (None, None, "model")
