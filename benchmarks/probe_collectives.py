@@ -11,7 +11,7 @@ import argparse
 import re
 import sys
 
-from repro.launch import dryrun as DR
+from repro.launch import hlo as H
 from repro.launch import mesh as M
 
 
@@ -34,11 +34,12 @@ def main(argv=None):
 
     mesh = M.make_production_mesh(multi_pod=args.multi_pod)
     import jax
+    from repro import compat
     from repro.configs import base
     from repro.launch import specs as SP, train as TR, serve as SV
     cfg = base.get_config(args.arch.replace("-", "_"))
     shape = base.INPUT_SHAPES[args.shape]
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             step, state_specs, meta = TR.make_train_step(
                 cfg, mesh, method=args.mode)
@@ -71,7 +72,7 @@ def main(argv=None):
         if not m or m.group(4) == "-done":
             continue
         name, type_str, kind, _ = m.groups()
-        nbytes = DR._shape_bytes(type_str)
+        nbytes = H.shape_bytes(type_str)
         meta_m = META_RE.search(ls)
         rows.append((nbytes, kind, type_str[:60],
                      (meta_m.group(1) if meta_m else "")[:110]))

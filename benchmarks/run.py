@@ -7,6 +7,13 @@
   bench_adaptive        Eq. 18   per-layer ratio selection
   bench_kernels         Sec. 5   top-k selection cost (TPU-native analogue)
   bench_roofline        (system) roofline table from dry-run artifacts
+  bench_autotune        (system) measured profile -> fitted Hardware ->
+                        planned Schedule -> train-step ingestion.  Not in
+                        the default set: it forces a multi-device host
+                        platform via XLA_FLAGS, which only takes effect in
+                        a fresh process — run it directly
+                        (``python -m benchmarks.bench_autotune``) or as
+                        ``python -m benchmarks.run autotune`` FIRST.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run             # all

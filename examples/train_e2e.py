@@ -25,6 +25,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.checkpoint import io as ckpt
 from repro.configs import base
 from repro.data import synthetic
@@ -82,7 +83,7 @@ def main():
     with open(log_path, "a") as log:
         for t in range(args.steps):
             batch = data.batch(t, args.global_batch, args.seq)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 state, metrics = step_fn(state, batch)
             loss = float(metrics["loss"])
             row = {"step": t, "loss": loss,

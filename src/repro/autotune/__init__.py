@@ -1,0 +1,38 @@
+"""``repro.autotune`` — measured-profile autotuner for per-layer LAGS ratios.
+
+Closes the loop from runtime timings back to the Eq. 18 ratio selection.
+The static path (``core.adaptive`` over hard-coded ``core.comm_model``
+constants) predicts which compression ratio hides each layer's exchange;
+this package *measures* instead of assumes, in four stages:
+
+  1. **profile** (:mod:`~repro.autotune.profiler`) — run instrumented
+     micro-steps of the real jitted train step and timed shard_map
+     collective sweeps; emit a JSON-serializable ``ModelProfile`` of
+     per-leaf backward times and (nbytes, t) collective samples.
+  2. **fit** (:mod:`~repro.autotune.costfit`) — least-squares (α, β) and
+     effective FLOP/s / HBM-bandwidth rates from the profile; emit a
+     calibrated ``core.comm_model.Hardware`` artifact.
+  3. **plan** (:mod:`~repro.autotune.planner`) — solve Eq. 18 per leaf
+     over the fitted model with measured compute budgets, the paper's
+     c_u cap, and a dense fallback when compression can't win.
+  4. **schedule** (:mod:`~repro.autotune.schedule`) — persist the
+     resulting per-leaf ratios/k's as a validated JSON ``Schedule``,
+     cached per (arch, shape, workers, hardware) and ingested by
+     ``launch.train.make_train_step`` / ``training.TrainConfig`` through
+     ``core.lags.ks_from_ratios_tree``.
+
+End-to-end driver: ``python -m benchmarks.bench_autotune``.
+"""
+from repro.autotune.costfit import fit_alpha_beta, fit_hardware
+from repro.autotune.planner import plan_leaf, plan_schedule, predict_iteration
+from repro.autotune.profiler import (CommSample, LeafSample, ModelProfile,
+                                     backprop_leaves, profile_model,
+                                     time_collectives)
+from repro.autotune.schedule import LeafPlan, Schedule, cache_path, summarize
+
+__all__ = [
+    "CommSample", "LeafSample", "ModelProfile", "backprop_leaves",
+    "profile_model", "time_collectives", "fit_alpha_beta", "fit_hardware",
+    "plan_leaf", "plan_schedule", "predict_iteration", "LeafPlan",
+    "Schedule", "cache_path", "summarize",
+]

@@ -1,0 +1,244 @@
+"""Measured profiles of the real jitted train step.
+
+Two kinds of measurement feed the fit/plan stages:
+
+  * **collective micro-steps** — jitted ``shard_map`` all-gather /
+    all-reduce over the mesh's data axes at a sweep of message sizes,
+    timed wall-clock.  These are the (nbytes, t) samples ``costfit``
+    turns into calibrated (α, β).  On the CPU host-device simulation the
+    "wire" is memcpy — the pipeline is identical on real ICI/DCN.
+  * **train-step micro-steps** — the *production* step from
+    ``launch.train.make_train_step`` (dense and LAGS modes), compiled
+    once and timed over a few steps.  The compiled cost analysis gives
+    per-device FLOPs/HBM bytes (-> effective rates), and the optimized
+    HLO gives the per-kind collective byte totals via
+    ``launch.hlo.collective_bytes`` — the achieved-side numbers for the
+    predicted-vs-achieved comparison in ``benchmarks.bench_autotune``.
+
+Per-leaf backward times are apportioned from the measured step: total
+backward time ≈ 2/3 of the dense step (fwd:bwd FLOP ratio 1:2 for
+matmul-dominated nets), split across leaves by their analytic backward
+FLOPs (4·d·tokens).  That keeps the *scale* measured while the *split*
+stays structural — exactly what the Eq. 18 budgets need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.autotune import schedule as S
+from repro.configs import base
+from repro.core import lags
+
+
+BWD_FRACTION = 2.0 / 3.0  # backward share of a fwd+bwd step (1:2 FLOPs)
+DEFAULT_COMM_SIZES = (1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22)
+
+
+def _timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock seconds per call (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+# ---------------------------------------------------------------------------
+# sample types
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CommSample:
+    """One timed collective: ``nbytes`` per-worker payload (all-gather) or
+    full buffer size (all-reduce), ``t`` seconds per op."""
+    kind: str
+    nbytes: float
+    p: int
+    t: float
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSample:
+    """One leaf's workload: measured ``t_backward`` (0.0 = not measured —
+    the planner falls back to the analytic FLOPs estimate)."""
+    name: str
+    d: int
+    backward_flops: float
+    t_backward: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """Everything ``costfit``/``planner`` need, JSON-serializable."""
+    arch: str
+    shape: str
+    n_workers: int
+    mesh_shape: tuple
+    tokens_per_worker: float
+    leaves: tuple[LeafSample, ...]          # backprop order (deepest first)
+    comm_samples: tuple[CommSample, ...]
+    t_step_dense: float = 0.0               # measured seconds
+    t_step_lags: float = 0.0
+    flops_per_step: float = 0.0             # per-device, from cost analysis
+    hbm_bytes_per_step: float = 0.0
+    collective_bytes_lags: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "ModelProfile":
+        obj = json.loads(text)
+        obj["leaves"] = tuple(LeafSample(**l) for l in obj["leaves"])
+        obj["comm_samples"] = tuple(CommSample(**c)
+                                    for c in obj["comm_samples"])
+        obj["mesh_shape"] = tuple(obj["mesh_shape"])
+        return ModelProfile(**obj)
+
+
+# ---------------------------------------------------------------------------
+# leaf structure (shared by the measured and analytic paths)
+# ---------------------------------------------------------------------------
+
+def backprop_leaves(cfg, tokens_per_worker: float) -> list[LeafSample]:
+    """Backprop-ordered (reverse init order) leaves with analytic backward
+    FLOPs (4·d·tokens: fwd 2dN, bwd 4dN for matmul-like leaves)."""
+    from repro.launch import train as TR
+    sds, _ = TR.model_shapes_and_axes(cfg)
+    out = []
+    for name, leaf in reversed(S.leaf_entries(sds)):
+        d = lags._size(leaf)
+        out.append(LeafSample(name=name, d=d,
+                              backward_flops=4.0 * d * tokens_per_worker))
+    return out
+
+
+def apportion_backward(leaves: Sequence[LeafSample],
+                       t_backward_total: float) -> tuple[LeafSample, ...]:
+    """Split a measured total backward time across leaves by FLOPs share."""
+    total = sum(l.backward_flops for l in leaves) or 1.0
+    return tuple(dataclasses.replace(
+        l, t_backward=t_backward_total * l.backward_flops / total)
+        for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# collective micro-steps
+# ---------------------------------------------------------------------------
+
+def time_collectives(mesh, axes: tuple[str, ...] | None = None,
+                     sizes_bytes: Sequence[int] = DEFAULT_COMM_SIZES,
+                     iters: int = 5) -> list[CommSample]:
+    """Time jitted shard_map all-gather/all-reduce over ``axes`` at each
+    payload size.  Returns [] on a single-worker mesh (nothing to time —
+    ``costfit`` then falls back to its base hardware constants)."""
+    from repro.launch import mesh as M
+    axes = tuple(axes) if axes is not None else M.data_axis_names(mesh)
+    p = M.n_workers(mesh, axes)
+    if p <= 1:
+        return []
+    lead = axes if len(axes) > 1 else axes[0]
+    samples: list[CommSample] = []
+
+    def ag(v):
+        return jax.lax.all_gather(v[0], axes, tiled=False)
+
+    def ar(v):
+        return lags._psum_mean(v[0], axes)
+
+    with compat.set_mesh(mesh):
+        for nbytes in sizes_bytes:
+            n = max(1, int(nbytes) // 4)
+            x = jax.device_put(
+                jnp.zeros((p, n), jnp.float32),
+                NamedSharding(mesh, P(lead, None)))
+            f_ag = jax.jit(compat.shard_map(
+                ag, mesh=mesh, in_specs=P(lead, None),
+                out_specs=P(None, None), axis_names=set(axes),
+                check_vma=False))
+            f_ar = jax.jit(compat.shard_map(
+                ar, mesh=mesh, in_specs=P(lead, None), out_specs=P(None),
+                axis_names=set(axes), check_vma=False))
+            samples.append(CommSample("allgather", nbytes=4.0 * n, p=p,
+                                      t=_timed(f_ag, x, iters=iters)))
+            samples.append(CommSample("allreduce", nbytes=4.0 * n, p=p,
+                                      t=_timed(f_ar, x, iters=iters)))
+    return samples
+
+
+# ---------------------------------------------------------------------------
+# train-step micro-steps
+# ---------------------------------------------------------------------------
+
+def _time_step(cfg, mesh, batch, *, method, seq: int, iters: int):
+    """Compile the production train step once (AOT) and time micro-steps.
+
+    Returns (t_step, cost_analysis dict, optimized-HLO text)."""
+    from repro.launch import train as TR
+    with compat.set_mesh(mesh):
+        step_fn, _specs, _meta = TR.make_train_step(
+            cfg, mesh, method=method, donate=False,
+            chunk=min(1024, seq), loss_chunk=min(512, seq))
+        state, _ = TR.init_state(cfg, mesh, method=method)
+        compiled = step_fn.lower(state, batch).compile()
+        t = _timed(functools.partial(compiled, state, batch), iters=iters)
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
+    return t, cost, compiled.as_text()
+
+
+def profile_model(cfg, mesh, *, seq: int = 64, global_batch: int | None = None,
+                  iters: int = 3,
+                  comm_sizes: Sequence[int] = DEFAULT_COMM_SIZES,
+                  arch: str | None = None,
+                  shape_name: str = "profile") -> ModelProfile:
+    """Full measured profile of one (cfg × input shape) on ``mesh``.
+
+    Runs instrumented micro-steps of the real jitted train step in dense
+    mode (compute calibration) and the config's LAGS mode (achieved
+    collective traffic), plus the collective micro-benchmarks.
+    """
+    from repro.launch import hlo as H
+    from repro.launch import mesh as M
+    from repro.launch import specs as SP
+    manual = M.data_axis_names(mesh)
+    n_w = M.n_workers(mesh, manual)
+    global_batch = global_batch if global_batch is not None else 2 * n_w
+    shape = base.InputShape(shape_name, seq, global_batch, "train")
+    batch = SP.concrete_batch(cfg, shape)
+
+    t_dense, cost, _ = _time_step(cfg, mesh, batch, method="dense",
+                                  seq=seq, iters=iters)
+    if cfg.train_mode != "dense":
+        t_lags, _, hlo_text = _time_step(cfg, mesh, batch, method=None,
+                                         seq=seq, iters=iters)
+        coll = H.collective_bytes(hlo_text)
+    else:
+        t_lags, coll = 0.0, {}
+
+    tokens_per_worker = global_batch * seq / n_w
+    leaves = apportion_backward(backprop_leaves(cfg, tokens_per_worker),
+                                BWD_FRACTION * t_dense)
+    return ModelProfile(
+        arch=arch or cfg.name, shape=shape_name, n_workers=n_w,
+        mesh_shape=tuple(mesh.devices.shape),
+        tokens_per_worker=tokens_per_worker, leaves=leaves,
+        comm_samples=tuple(time_collectives(mesh, manual, comm_sizes)),
+        t_step_dense=t_dense, t_step_lags=t_lags,
+        flops_per_step=float(cost.get("flops", 0.0)),
+        hbm_bytes_per_step=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_lags=coll)

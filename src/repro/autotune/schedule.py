@@ -1,0 +1,167 @@
+"""Persistable per-leaf sparsification schedules.
+
+A ``Schedule`` is the artifact the autotune pipeline emits: one
+``LeafPlan`` (compression ratio c^(l) and budget k^(l)) per learnable
+leaf, keyed by the leaf's pytree path, plus the provenance needed to
+decide whether a cached schedule still applies — (arch, input shape,
+worker count, calibrated hardware).  Schedules round-trip through JSON
+so a profile→fit→plan run is paid once per (arch, mesh, hardware) and
+reused across training jobs; ingestion happens through
+``core.lags.ks_from_ratios_tree`` via :meth:`Schedule.ratios_tree`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any, Sequence
+
+import jax
+
+SCHEDULE_VERSION = 1
+
+
+def _path_str(path) -> str:
+    """Stable string form of a jax key path ('layers/0/attn/wq')."""
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def leaf_entries(tree) -> list[tuple[str, Any]]:
+    """[(path_name, leaf)] in flatten order, names matching ``_path_str``."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), leaf) for path, leaf in flat]
+
+
+def _leaf_size(leaf) -> int:
+    return int(math.prod(leaf.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Planned sparsification for one leaf: keep k of d at ratio c=d/k."""
+    name: str
+    d: int
+    ratio: float
+    k: int
+    t_budget: float = 0.0   # compute budget the ratio was solved against (s)
+
+    def __post_init__(self):
+        if self.d <= 0 or self.k <= 0 or self.ratio < 1.0:
+            raise ValueError(f"invalid LeafPlan {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Per-leaf ratios for one (arch, shape, n_workers, hardware) tuple."""
+    arch: str
+    shape: str
+    n_workers: int
+    hardware: dict            # name/alpha/beta/flops/hbm_bw of the fit
+    leaves: tuple[LeafPlan, ...]
+    version: int = SCHEDULE_VERSION
+
+    # -- lookup ------------------------------------------------------------
+    @property
+    def by_name(self) -> dict[str, LeafPlan]:
+        return {lp.name: lp for lp in self.leaves}
+
+    def validate(self, params_like) -> None:
+        """Raise ValueError unless the schedule covers exactly the leaves of
+        ``params_like`` (same path names, same parameter counts)."""
+        self.validate_sizes({name: _leaf_size(leaf)
+                             for name, leaf in leaf_entries(params_like)})
+
+    def validate_sizes(self, want: dict[str, int]) -> None:
+        """``validate`` against a plain {leaf name: param count} mapping."""
+        have = {lp.name: lp.d for lp in self.leaves}
+        missing = sorted(set(want) - set(have))
+        extra = sorted(set(have) - set(want))
+        if missing or extra:
+            raise ValueError(
+                f"schedule for arch={self.arch!r} does not match the model's "
+                f"leaf structure: missing={missing[:4]} extra={extra[:4]} "
+                f"({len(missing)} missing / {len(extra)} extra leaves)")
+        bad = [n for n in want if want[n] != have[n]]
+        if bad:
+            n = bad[0]
+            raise ValueError(
+                f"schedule leaf {n!r} has d={have[n]} but the model leaf has "
+                f"{want[n]} params ({len(bad)} mismatched leaves)")
+
+    def ratios_tree(self, params_like) -> Any:
+        """Pytree (matching ``params_like``) of per-leaf ratios — the input
+        to ``core.lags.ks_from_ratios_tree``.  Validates first."""
+        self.validate(params_like)
+        ratios = self.by_name
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+        return jax.tree_util.tree_unflatten(
+            treedef, [ratios[_path_str(p)].ratio for p, _ in flat])
+
+    def ks_tree(self, params_like) -> Any:
+        """Per-leaf k^(l) pytree for ``params_like`` — the single ingestion
+        path: validates, then feeds the planned ratios through
+        ``core.lags.ks_from_ratios_tree`` (the same rounding the planner
+        used, so the result equals the persisted ``LeafPlan.k``)."""
+        from repro.core import lags
+        return lags.ks_from_ratios_tree(params_like,
+                                        self.ratios_tree(params_like))
+
+    # -- JSON round-trip ---------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "Schedule":
+        obj = json.loads(text)
+        version = int(obj.get("version", 0))
+        if version != SCHEDULE_VERSION:
+            raise ValueError(f"schedule version {version} != "
+                             f"{SCHEDULE_VERSION} (re-run the autotuner)")
+        leaves = tuple(LeafPlan(**lp) for lp in obj["leaves"])
+        return Schedule(arch=obj["arch"], shape=obj["shape"],
+                        n_workers=int(obj["n_workers"]),
+                        hardware=dict(obj["hardware"]), leaves=leaves,
+                        version=version)
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @staticmethod
+    def load(path: str) -> "Schedule":
+        with open(path) as f:
+            return Schedule.from_json(f.read())
+
+
+def cache_path(root: str, arch: str, shape: str, n_workers: int,
+               hw_name: str) -> str:
+    """Canonical on-disk location for a cached schedule."""
+    return os.path.join(root, f"{arch}_{shape}_p{n_workers}_{hw_name}.json")
+
+
+def summarize(sched: Schedule, classes: Sequence[tuple[str, tuple[str, ...]]]
+              = (("embed", ("embed", "lm_head", "out")),
+                 ("attention", ("attn", "wq", "wk", "wv", "wo")),
+                 ("ffn", ("ffn", "mlp", "w1", "w2", "w3", "gate", "up",
+                          "down")))) -> dict[str, dict]:
+    """Group leaves into coarse classes by substring match on the path and
+    report min/mean/max ratio per class (bench/report helper)."""
+    out: dict[str, dict] = {}
+    for cls, keys in classes:
+        rs = [lp.ratio for lp in sched.leaves
+              if any(k in lp.name.lower() for k in keys)]
+        if rs:
+            out[cls] = {"n": len(rs), "min": min(rs), "max": max(rs),
+                        "mean": sum(rs) / len(rs)}
+    return out

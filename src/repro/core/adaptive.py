@@ -49,7 +49,20 @@ def choose_ratio(
     candidate_ratios: Sequence[float] = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1000),
 ) -> float:
     """Smallest candidate c with t_comm(c) + t_spar <= t_comp_budget, capped
-    at ``c_upper``; c=1 means dense (no sparsification cost either)."""
+    at ``c_upper``; c=1 means dense (no sparsification cost either).
+
+    Saturation edge case (paper's c_u clip): when EVERY candidate up to and
+    including the cap still exceeds the budget — e.g. a zero budget for the
+    last-communicated layer, or a slow network at small t_comp — the rule
+    returns ``min(c_upper, candidate_ratios[-1])``: the capped ratio itself,
+    never a candidate beyond ``c_upper``.  Compressing harder than c_u is
+    forbidden by Assumption 1's validated range even when it would hide
+    more communication (and by Cor. 2 it would only converge worse); the
+    returned ratio is then simply the best-effort cap and its exchange is
+    expected to spill past the budget.  ``planner.plan_leaf`` layers the
+    dense fallback on top of this for the case where even the capped
+    sparse exchange loses to a dense all-reduce.
+    """
     t_spar = sparsification_overhead(d, hw)
     for c in candidate_ratios:
         if c > c_upper:

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import compressors as C
 
 
@@ -94,14 +95,14 @@ def _psum_mean(x, axis_names):
     s = jax.lax.psum(x, axis_names)
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        n *= compat.axis_size(a)
     return s / n
 
 
 def _axis_prod(axis_names) -> jax.Array:
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        n *= compat.axis_size(a)
     return n
 
 
@@ -313,7 +314,7 @@ class BlockLAGSExchange:
             return rows
         from jax.sharding import PartitionSpec as P
         ax = self.row_axes if len(self.row_axes) > 1 else self.row_axes[0]
-        return jax.lax.with_sharding_constraint(rows, P(ax, None))
+        return compat.hint_sharding(rows, P(ax, None))
 
     # -- per-leaf geometry --------------------------------------------------
     def _geom(self, size: int, k: int):

@@ -15,7 +15,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
@@ -23,7 +22,9 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import base
+from repro.launch import hlo as H
 from repro.launch import mesh as M
 from repro.launch import serve as SV
 from repro.launch import specs as SP
@@ -36,55 +37,11 @@ PEAK_FLOPS = 197e12       # bf16 per chip
 HBM_BW = 819e9            # bytes/s per chip
 ICI_BW = 50e9             # bytes/s per link
 
-COLLECTIVE_RE = re.compile(
-    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\s*(?:\.\d+)?\s*=\s*"
-    r"((?:\([^)]*\)|[a-z0-9_\[\],{}\/ ]+))", re.I)
-
-SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|f64|s64|u64|pred|f8\w*)"
-                      r"\[([0-9,]*)\]")
-
-DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
-               "u8": 1, "f64": 8, "s64": 8, "u64": 8, "pred": 1}
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for m in SHAPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        b = DTYPE_BYTES.get(dt, 2 if dt.startswith("f8") else 4)
-        total += n * b
-    return total
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Sum output-shape bytes of every collective op in the HLO, by kind.
-
-    Uses the op RESULT type printed on the defining line — for all-gather
-    that's the gathered (post-collective) size, for reduce-scatter the
-    scattered size; a consistent, slightly conservative proxy for bytes
-    moved per device.  `-start`/`-done` pairs are counted once (on -start;
-    bare sync ops counted directly)."""
-    out: dict[str, int] = {}
-    seen_done = set()
-    for line in hlo_text.splitlines():
-        ls = line.strip()
-        m = re.match(
-            r"%?([\w.-]*)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/]+))\s*"
-            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
-            r"collective-permute)(-start|-done)?", ls)
-        if not m:
-            continue
-        name, type_str, kind, phase = m.groups()
-        if phase == "-done":
-            continue
-        out[kind] = out.get(kind, 0) + _shape_bytes(type_str)
-    return out
+# HLO collective-byte accounting lives in repro.launch.hlo (importable
+# without this module's XLA_FLAGS side effect); kept as aliases for the
+# existing benchmark callers.
+_shape_bytes = H.shape_bytes
+collective_bytes = H.collective_bytes
 
 
 def roofline(cost: dict, coll: dict, n_chips: int, seconds_scale: int = 1):
@@ -111,7 +68,7 @@ def lower_one(arch: str, shape_name: str, mesh, *, mode_override=None):
         return {"status": "skipped",
                 "reason": "full-quadratic attention at 500k context"}
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             step, state_specs, meta = TR.make_train_step(
                 cfg, mesh, method=mode_override)

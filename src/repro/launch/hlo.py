@@ -1,0 +1,57 @@
+"""Optimized-HLO text analysis: collective-op byte accounting.
+
+Importable from library code (unlike ``launch.dryrun``, which sets
+``XLA_FLAGS`` at import time and must only run as a fresh ``__main__``).
+Used by the dry-run roofline, ``benchmarks.probe_collectives`` and the
+``repro.autotune`` profiler.
+"""
+from __future__ import annotations
+
+import re
+
+
+SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|f64|s64|u64|pred|f8\w*)"
+                      r"\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "f64": 8, "s64": 8, "u64": 8, "pred": 1}
+
+COLLECTIVE_OP_RE = re.compile(
+    r"%?([\w.-]*)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/]+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of every array literal in an HLO result-type string."""
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        b = DTYPE_BYTES.get(dt, 2 if dt.startswith("f8") else 4)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO, by kind.
+
+    Uses the op RESULT type printed on the defining line — for all-gather
+    that's the gathered (post-collective) size, for reduce-scatter the
+    scattered size; a consistent, slightly conservative proxy for bytes
+    moved per device.  `-start`/`-done` pairs are counted once (on -start;
+    bare sync ops counted directly)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_OP_RE.match(line.strip())
+        if not m:
+            continue
+        _name, type_str, kind, phase = m.groups()
+        if phase == "-done":
+            continue
+        out[kind] = out.get(kind, 0) + shape_bytes(type_str)
+    return out

@@ -5,24 +5,20 @@ device state.  The dry-run sets XLA_FLAGS before importing anything.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2, pod: int = 1):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     if pod > 1:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def data_axis_names(mesh) -> tuple[str, ...]:

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import base
 from repro.core import lags
 from repro.launch import mesh as M
@@ -198,12 +199,22 @@ def make_exchange(cfg, params_like, *, method: str, ratio: float | None = None,
 def make_train_step(cfg, mesh, *, method: str | None = None,
                     ratio: float | None = None, lr: float = 0.01,
                     block_size: int = 4096, chunk: int = 1024,
-                    loss_chunk: int = 512, donate: bool = True):
+                    loss_chunk: int = 512, donate: bool = True,
+                    schedule=None):
     """Builds (step_fn, state_specs, meta).  step_fn: (state, batch) ->
     (state, metrics), jit'd; lower with the returned specs for the dry-run.
+
+    ``schedule``: optional ``repro.autotune.Schedule`` (or anything with a
+    ``ks_tree(params_like)`` method).  When given, its planned per-leaf
+    k^(l) replace the static ``cfg.compression_ratio`` at the same
+    ingestion point ``lags.ks_from_ratios_tree`` feeds; the schedule is
+    validated against this model's leaf structure first.
     """
     state_specs, meta = make_state_specs(cfg, mesh, method=method)
     mode, manual = meta["mode"], meta["manual"]
+    ks_override = None
+    if schedule is not None and mode != "dense":
+        ks_override = schedule.ks_tree(state_specs["params"])
     # auto axes available for block-parallel row sharding inside the exchange
     row_axes = tuple(a for a in mesh.axis_names if a not in manual
                      and a in ("data", "model"))
@@ -214,7 +225,10 @@ def make_train_step(cfg, mesh, *, method: str | None = None,
                          method=("dense" if mode == "dense" else
                                  "lags"),
                          ratio=ratio, block_size=block_size,
+                         ks_override=ks_override,
                          row_axes=row_axes, shard_dims=sdims)
+    meta["ks"] = getattr(exch, "ks", None)
+    meta["schedule"] = schedule
 
     def loss_fn(params, batch):
         return T.loss_fn(params, cfg, batch, chunk=chunk,
@@ -263,7 +277,7 @@ def make_train_step(cfg, mesh, *, method: str | None = None,
 
         def step(state, batch):
             bspecs = batch_pspec(batch, mesh, manual)
-            sm = jax.shard_map(
+            sm = compat.shard_map(
                 worker, mesh=mesh,
                 in_specs=(params_in, ef_in, bspecs, P()),
                 out_specs=(params_in, ef_in, {"loss": P()}),
@@ -287,7 +301,7 @@ def make_train_step(cfg, mesh, *, method: str | None = None,
 
                 def resh(x):
                     y = x.reshape((n_w, x.shape[0] // n_w) + x.shape[1:])
-                    return jax.lax.with_sharding_constraint(
+                    return compat.hint_sharding(
                         y, P(lead, "data", *([None] * (len(x.shape) - 1))))
                 vb = jax.tree.map(resh, batch)
                 (losses, _aux), grads = jax.vmap(

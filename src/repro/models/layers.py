@@ -11,6 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def pin_act(x: jax.Array, tp_dim: int | None = None) -> jax.Array:
     """Sharding constraint for a big activation: batch dim -> the AUTO
@@ -22,13 +24,12 @@ def pin_act(x: jax.Array, tp_dim: int | None = None) -> jax.Array:
     in FSDP mode).  Explicit constraints are part of the rematted jaxpr,
     so they survive into the recompute.  No-op without an ambient mesh,
     on manual (shard_map-bound) axes, or on non-divisible dims."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     sizes = dict(getattr(mesh, "shape", {}))
     if not sizes:
         return x
     from jax.sharding import PartitionSpec as P
-    auto = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
-            if t == jax.sharding.AxisType.Auto}
+    auto = set(compat.auto_axis_names(mesh))
     spec = [None] * x.ndim
     if "data" in auto and x.shape[0] % sizes["data"] == 0:
         spec[0] = "data"
@@ -37,7 +38,7 @@ def pin_act(x: jax.Array, tp_dim: int | None = None) -> jax.Array:
         spec[tp_dim] = "model"
     if all(s is None for s in spec):
         return x
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    return compat.hint_sharding(x, P(*spec))
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:

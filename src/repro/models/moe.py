@@ -21,6 +21,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import layers as L
 
 
@@ -156,12 +157,12 @@ def moe_forward_grouped(p, x, *, top_k: int, activation: str = "silu",
     capacity = max(1, int(capacity_factor * tg * top_k / e))
     dg = (tuple(data_axes) if len(data_axes) > 1
           else (data_axes[0] if data_axes else None))
-    have_mesh = bool(getattr(jax.sharding.get_abstract_mesh(), "shape", {}))
+    have_mesh = bool(getattr(compat.get_abstract_mesh(), "shape", {}))
 
     def pin(v, *rest):
         if not have_mesh:
             return v
-        return jax.lax.with_sharding_constraint(v, P(dg, *rest))
+        return compat.hint_sharding(v, P(dg, *rest))
 
     xt = pin(x.reshape(g, tg, d), None, None)                    # (G,Tg,D)
 
@@ -250,7 +251,7 @@ def moe_forward_ep(p, x, *, top_k: int, activation: str = "silu",
     """
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     n = mesh.shape[axis]
     e = p["w_up"].shape[0]
     e_local = e // n
@@ -288,9 +289,9 @@ def moe_forward_ep(p, x, *, top_k: int, activation: str = "silu",
         out = jax.lax.psum(out, axis)
         return out.reshape(b, s, d).astype(xx.dtype), aux_loss
 
-    sm = jax.shard_map(body, mesh=mesh, in_specs=(w_specs, P()),
-                       out_specs=(P(), P()), axis_names={axis},
-                       check_vma=False)
+    sm = compat.shard_map(body, mesh=mesh, in_specs=(w_specs, P()),
+                          out_specs=(P(), P()), axis_names={axis},
+                          check_vma=False)
     return sm(p, x)
 
 
@@ -324,14 +325,13 @@ def moe_forward_auto(p, x, *, top_k: int, activation: str = "silu",
     rejected by Shardy inside lags_dp, and the pure-auto hier step
     triggers an XLA SPMD crash — 'Invalid binary instruction opcode
     copy' — when it is scanned+rematted; see EXPERIMENTS §Perf.)"""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     groups = 1
     data_axes = []
-    names = getattr(mesh, "axis_names", ())
-    types = getattr(mesh, "axis_types", ())
+    auto_names = set(compat.auto_axis_names(mesh))
     sizes = getattr(mesh, "shape", {})
-    for nm, ty in zip(names, types):
-        if nm in ("pod", "data") and ty == jax.sharding.AxisType.Auto:
+    for nm in getattr(mesh, "axis_names", ()):
+        if nm in ("pod", "data") and nm in auto_names:
             groups *= sizes[nm]
             data_axes.append(nm)
     return moe_forward_grouped(p, x, top_k=top_k, activation=activation,

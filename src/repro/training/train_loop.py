@@ -34,6 +34,10 @@ class TrainConfig:
     momentum_correction: float = 0.0
     measure_delta: bool = False   # record the Eq. 20 assumption metric
     lr_schedule: Callable[[jax.Array], jax.Array] | None = None
+    # Optional ``repro.autotune.Schedule`` (anything with a
+    # ``ks_tree(params_like)`` method): planned per-leaf k's replace the
+    # scalar ``compression_ratio`` for the lags method.
+    schedule: Any = None
 
 
 def make_exchange(tcfg: TrainConfig, params):
@@ -45,7 +49,10 @@ def make_exchange(tcfg: TrainConfig, params):
         return lags.SLGSExchange(k_total=k_total,
                                  compressor_name=tcfg.compressor)
     if tcfg.method == "lags":
-        ks = lags.ks_from_ratio(params, tcfg.compression_ratio)
+        if tcfg.schedule is not None:
+            ks = tcfg.schedule.ks_tree(params)
+        else:
+            ks = lags.ks_from_ratio(params, tcfg.compression_ratio)
         return lags.LAGSExchange(ks=ks, compressor_name=tcfg.compressor)
     raise ValueError(tcfg.method)
 

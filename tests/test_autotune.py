@@ -1,0 +1,237 @@
+"""repro.autotune: planner monotonicity, schedule round-trip, costfit
+recovery, Eq. 18 cap edge case, and the Schedule ingestion points."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import costfit, planner, profiler
+from repro.autotune.schedule import LeafPlan, Schedule, leaf_entries
+from repro.core import adaptive, comm_model as cm, lags
+
+
+HW = cm.ETH_1GBPS
+
+
+def _leaves(ds, t_backward=0.0, flops_per_param=1e4):
+    return [profiler.LeafSample(name=f"l{i}", d=d,
+                                backward_flops=flops_per_param * d,
+                                t_backward=t_backward)
+            for i, d in enumerate(ds)]
+
+
+class TestChooseRatioCap:
+    """Eq. 18 saturation: every candidate (incl. the cap) over budget."""
+
+    def test_zero_budget_returns_cap_not_beyond(self):
+        c = adaptive.choose_ratio(10_000_000, 0.0, 16, HW, c_upper=1000.0)
+        assert c == 1000.0
+
+    def test_cap_between_candidates_returns_cap_exactly(self):
+        # 300 is not in the candidate grid (256 -> 512); the rule must
+        # clip to c_upper, never probe candidates past it
+        c = adaptive.choose_ratio(10_000_000, 0.0, 16, HW, c_upper=300.0)
+        assert c == 300.0
+
+    def test_cap_above_grid_returns_last_candidate(self):
+        c = adaptive.choose_ratio(10_000_000, 0.0, 16, HW, c_upper=4000.0)
+        assert c == 1000.0  # last candidate in the default grid
+
+    def test_never_exceeds_cap(self):
+        for cap in (1.0, 7.0, 64.0, 333.0, 1000.0, 9999.0):
+            for budget in (0.0, 1e-6, 1e-3, 10.0):
+                c = adaptive.choose_ratio(5_000_000, budget, 16, HW,
+                                          c_upper=cap)
+                assert c <= cap
+
+
+class TestPlanner:
+    def test_monotone_smaller_budget_larger_ratio(self):
+        budgets = [10.0, 1e-1, 1e-2, 1e-3, 1e-4, 0.0]
+        ratios = [planner.plan_leaf(2_000_000, b, 16, HW) for b in budgets]
+        sparse = [r for r in ratios if r >= 1.0]
+        # ignoring dense fallbacks, ratios grow as the budget shrinks
+        nonfb = [r for b, r in zip(budgets, ratios)
+                 if not (r == 1.0 and b < 1e-3)]
+        assert nonfb == sorted(nonfb)
+        assert ratios[0] <= ratios[-2] or ratios[-1] == 1.0
+        assert all(r >= 1.0 for r in sparse)
+
+    def test_schedule_monotone_in_measured_budget(self):
+        fast = planner.plan_schedule(_leaves([1 << 20] * 4, t_backward=1.0),
+                                     p=16, hw=HW)
+        slow = planner.plan_schedule(_leaves([1 << 20] * 4, t_backward=1e-4),
+                                     p=16, hw=HW)
+        for f, s in zip(fast.leaves[:-1], slow.leaves[:-1]):
+            assert f.ratio <= s.ratio
+
+    def test_dense_fallback_when_compression_cannot_win(self):
+        # microscopic HBM bandwidth -> t_spar dwarfs the dense wire time,
+        # so even the capped sparse exchange loses to a dense all-reduce
+        hw = cm.Hardware(name="t", alpha=1e-6, beta=1e-9, flops=1e12,
+                         hbm_bw=1e6)
+        assert planner.plan_leaf(1_000_000, 0.0, 4, hw) == 1.0
+
+    def test_capped_when_sparse_still_wins(self):
+        # fast HBM: sparse exchange beats dense even though nothing hides
+        assert planner.plan_leaf(10_000_000, 0.0, 16, HW) == 1000.0
+
+    def test_last_leaf_gets_zero_budget(self):
+        sched = planner.plan_schedule(_leaves([1 << 22] * 3, t_backward=1e3),
+                                      p=16, hw=HW)
+        assert sched.leaves[-1].t_budget == 0.0
+        assert sched.leaves[0].t_budget == 1e3
+
+
+class TestScheduleRoundTrip:
+    def _sched(self):
+        leaves = _leaves([128, 1024, 4096], t_backward=1e-3)
+        return planner.plan_schedule(leaves, p=8, hw=HW, arch="tiny",
+                                     shape="unit")
+
+    def test_json_roundtrip_is_identity(self, tmp_path):
+        sched = self._sched()
+        p = sched.save(str(tmp_path / "s.json"))
+        assert Schedule.load(p) == sched
+
+    def test_ratios_tree_matches_leaf_structure(self):
+        sched = self._sched()
+        tree = {"l0": jnp.zeros(128), "l1": jnp.zeros(1024),
+                "l2": jnp.zeros(4096)}
+        ratios = sched.ratios_tree(tree)
+        by = sched.by_name
+        for (name, _), r in zip(leaf_entries(tree), jax.tree.leaves(ratios)):
+            assert r == by[name].ratio
+
+    def test_validate_rejects_wrong_names_and_sizes(self):
+        sched = self._sched()
+        with pytest.raises(ValueError, match="missing"):
+            sched.validate({"l0": jnp.zeros(128), "wrong": jnp.zeros(1024),
+                            "l2": jnp.zeros(4096)})
+        with pytest.raises(ValueError, match="params"):
+            sched.validate({"l0": jnp.zeros(128), "l1": jnp.zeros(999),
+                            "l2": jnp.zeros(4096)})
+
+    def test_version_gate(self, tmp_path):
+        sched = self._sched()
+        p = str(tmp_path / "s.json")
+        text = sched.to_json().replace('"version": 1', '"version": 99')
+        with open(p, "w") as f:
+            f.write(text)
+        with pytest.raises(ValueError, match="version"):
+            Schedule.load(p)
+
+
+class TestCostFit:
+    def _synth(self, alpha, beta, p=8):
+        out = []
+        for n in (1 << 10, 1 << 14, 1 << 18, 1 << 22):
+            out.append(profiler.CommSample(
+                "allgather", nbytes=float(n), p=p,
+                t=(p - 1) * (alpha + n * beta)))
+            out.append(profiler.CommSample(
+                "allreduce", nbytes=float(n), p=p,
+                t=2 * (p - 1) * (alpha + (n / p) * beta)))
+        return out
+
+    def test_recovers_known_alpha_beta_within_5pct(self):
+        alpha, beta = 50e-6, 1.0 / 0.125e9
+        a, b = costfit.fit_alpha_beta(self._synth(alpha, beta))
+        assert abs(a - alpha) / alpha < 0.05
+        assert abs(b - beta) / beta < 0.05
+
+    def test_recovers_fast_network_too(self):
+        alpha, beta = 1e-6, 1.0 / 50e9
+        a, b = costfit.fit_alpha_beta(self._synth(alpha, beta, p=16))
+        assert abs(a - alpha) / alpha < 0.05
+        assert abs(b - beta) / beta < 0.05
+
+    def test_too_few_samples_raises(self):
+        with pytest.raises(ValueError, match="samples"):
+            costfit.fit_alpha_beta([])
+
+    def test_fit_hardware_falls_back_without_comm_samples(self):
+        prof = profiler.ModelProfile(
+            arch="t", shape="u", n_workers=1, mesh_shape=(1,),
+            tokens_per_worker=1.0, leaves=(), comm_samples=())
+        hw = costfit.fit_hardware(prof, base=cm.TPU_V5E_ICI)
+        assert hw.alpha == cm.TPU_V5E_ICI.alpha
+        assert hw.flops == cm.TPU_V5E_ICI.flops
+
+
+class TestIngestion:
+    """Schedule -> ks_from_ratios_tree through both train paths."""
+
+    def _model(self):
+        from repro.configs import base
+        from repro.models import transformer as T
+        cfg = dataclasses.replace(
+            base.get_smoke_config("tinyllama_1_1b"), n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+            dtype="float32", param_dtype="float32")
+        params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+        return cfg, params
+
+    def _sched_for(self, tree, ratio_map):
+        leaves = []
+        for name, leaf in leaf_entries(tree):
+            d = int(np.prod(leaf.shape))
+            c = ratio_map(name, d)
+            leaves.append(LeafPlan(name=name, d=d, ratio=c,
+                                   k=max(1, int(round(d / c)))))
+        return Schedule(arch="tiny", shape="unit", n_workers=4,
+                        hardware={"name": "unit"}, leaves=tuple(leaves))
+
+    def test_sim_trainer_consumes_schedule(self):
+        from repro.training import train_loop as TL
+        cfg, params = self._model()
+        sched = self._sched_for(
+            params, lambda name, d: 16.0 if d > 4096 else 1.0)
+        tcfg = TL.TrainConfig(method="lags", lr=0.1, schedule=sched)
+        exch = TL.make_exchange(tcfg, params)
+        by = sched.by_name
+        for (name, leaf), k in zip(leaf_entries(params),
+                                   jax.tree.leaves(exch.ks)):
+            assert k == max(1, round(int(np.prod(leaf.shape))
+                                     / by[name].ratio))
+
+    def test_make_train_step_consumes_schedule(self):
+        from repro.launch import mesh as M, train as TR
+        cfg, params = self._model()
+        mesh = M.make_host_mesh(data=1, model=1)
+        sds, _ = TR.model_shapes_and_axes(cfg)
+        sched = self._sched_for(sds, lambda name, d: 8.0 if d > 4096 else 1.0)
+        _, _, meta = TR.make_train_step(cfg, mesh, schedule=sched,
+                                        donate=False)
+        assert meta["ks"] is not None
+        ks = {n: k for (n, _), k in zip(leaf_entries(sds),
+                                        jax.tree.leaves(meta["ks"]))}
+        by = sched.by_name
+        assert any(v > 1 for v in
+                   {n: by[n].d / k for n, k in ks.items()}.values())
+        for n, k in ks.items():
+            assert k == by[n].k or k == max(1, round(by[n].d / by[n].ratio))
+
+    def test_make_train_step_rejects_mismatched_schedule(self):
+        from repro.launch import mesh as M, train as TR
+        cfg, params = self._model()
+        mesh = M.make_host_mesh(data=1, model=1)
+        bad = Schedule(arch="other", shape="unit", n_workers=4,
+                       hardware={"name": "unit"},
+                       leaves=(LeafPlan("nope", 3, 1.0, 3),))
+        with pytest.raises(ValueError, match="leaf structure"):
+            TR.make_train_step(cfg, mesh, schedule=bad, donate=False)
+
+
+class TestProfileSerialization:
+    def test_model_profile_json_roundtrip(self):
+        prof = profiler.ModelProfile(
+            arch="t", shape="u", n_workers=4, mesh_shape=(2, 2),
+            tokens_per_worker=64.0,
+            leaves=tuple(_leaves([8, 16], t_backward=0.25)),
+            comm_samples=(profiler.CommSample("allgather", 1024.0, 4, 1e-4),),
+            t_step_dense=0.5, t_step_lags=0.75, flops_per_step=1e9,
+            hbm_bytes_per_step=1e8, collective_bytes_lags={"all-gather": 42})
+        assert profiler.ModelProfile.from_json(prof.to_json()) == prof

@@ -33,6 +33,7 @@ def _run(script: str, n_dev: int = 8, timeout: int = 540):
 COMMON = """
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import base
 from repro.core import lags
 from repro.launch import mesh as M, train as TR, specs as SP
@@ -41,7 +42,11 @@ from repro.models import transformer as T
 cfg = dataclasses.replace(
     base.get_smoke_config("tinyllama_1_1b"),
     n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
-    train_mode=MODE, compression_ratio=8.0)
+    train_mode=MODE, compression_ratio=8.0,
+    # fp32: the parity contract checks exchange/error-feedback semantics,
+    # not bf16 rounding — at bf16 the 2e-4 atol sits below one ulp and
+    # any partitioner-dependent matmul tiling flips it
+    dtype="float32", param_dtype="float32")
 mesh = M.make_host_mesh(data=4, model=2)
 shape = base.InputShape("t", 16, 8, "train")
 batch = SP.concrete_batch(cfg, shape)
@@ -49,7 +54,7 @@ batch = SP.concrete_batch(cfg, shape)
 step, state_specs, meta = TR.make_train_step(cfg, mesh, lr=0.1, chunk=16,
                                              loss_chunk=16, donate=False)
 state, _ = TR.init_state(cfg, mesh)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     new_state, metrics = step(state, batch)
 loss_dist = float(metrics["loss"])
 params_dist = jax.tree.map(lambda x: np.asarray(jax.device_get(x), np.float32),
@@ -117,6 +122,7 @@ def test_hier_mode_runs_on_multipod_host_mesh():
     script = """
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import base
 from repro.launch import mesh as M, train as TR, specs as SP
 
@@ -131,7 +137,7 @@ step, state_specs, meta = TR.make_train_step(cfg, mesh, lr=0.1, chunk=16,
                                              loss_chunk=16, donate=False)
 assert meta["n_workers"] == 2, meta
 state, _ = TR.init_state(cfg, mesh)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     new_state, metrics = step(state, batch)
 loss = float(metrics["loss"])
 assert np.isfinite(loss), loss
@@ -150,6 +156,7 @@ def test_serve_step_distributed():
     script = """
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import base
 from repro.launch import mesh as M, serve as SV
 from repro.launch import train as TR
@@ -159,11 +166,14 @@ from repro.serving import engine
 cfg = base.get_smoke_config("xlstm_1_3b")
 mesh = M.make_host_mesh(data=4, model=2)
 shape = base.InputShape("d", 64, 8, "decode")
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     fn, args = SV.make_serve_step(cfg, mesh, shape, chunk=16)
     lowered = fn.lower(*args)
     compiled = lowered.compile()
-print("OK serve lowered", compiled.memory_analysis().peak_memory_in_bytes)
+mem = compiled.memory_analysis()
+print("OK serve lowered",
+      getattr(mem, "peak_memory_in_bytes",
+              getattr(mem, "temp_size_in_bytes", None)))
 """
     out = _run(script)
     assert "OK serve lowered" in out

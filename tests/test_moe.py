@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests; skip cleanly on minimal envs
 from hypothesis import given, settings, strategies as st
 
 from repro.models import layers as L
