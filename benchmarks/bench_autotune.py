@@ -110,14 +110,16 @@ def run(argv=None) -> int:
          f"alpha={hw_plan.alpha:.3g} beta={hw_plan.beta:.3g} "
          f"flops={hw_plan.flops:.3g}")
     sched = planner.plan_schedule(full_leaves, p=p_full, hw=hw_plan,
-                                  arch=arch, shape=args.shape)
+                                  arch=arch, shape=args.shape,
+                                  train_mode=full_cfg.train_mode)
     n_ratios = len(set(lp.ratio for lp in sched.leaves))
     emit("autotune/plan/n_leaves", len(sched.leaves), "")
     emit("autotune/plan/distinct_ratios", n_ratios,
          f"{sorted(set(lp.ratio for lp in sched.leaves))[:8]}")
 
     # ---- 4. JSON round-trip -------------------------------------------------
-    path = SCH.cache_path(args.out, arch, args.shape, p_full, hw_plan.name)
+    path = SCH.cache_path(args.out, arch, args.shape, p_full, hw_plan.name,
+                          train_mode=full_cfg.train_mode)
     sched.save(path)
     loaded = SCH.Schedule.load(path)
     ok = loaded == sched

@@ -97,6 +97,7 @@ def _predict(row: PaperRow, hw: cm.Hardware):
         "t_c_dense_model": t_c_dense_model,
         "t_c_sparse_model": t_c_sparse_model,
         "n_buckets": len(buckets),
+        "bucket_stats": bucketing.bucket_stats(buckets),
     }
 
 
@@ -110,6 +111,11 @@ def run() -> int:
              "inverted from paper slgs + Smax via Eq.19")
         emit(f"table2/{row.name}/pred_lags_optimal_s", pred["lags"],
              f"paper measured {row.lags_s}s ({pred['n_buckets']} buckets)")
+        bs = pred["bucket_stats"]
+        emit(f"table2/{row.name}/bucket_stats",
+             f"{bs['n_buckets']}x~{bs['mean_bytes'] / 1024:.0f}KiB",
+             f"min={bs['min_bytes']} max={bs['max_bytes']} "
+             f"mean={bs['mean_bytes']:.0f} bytes (fp32 values + int32 idx)")
         emit(f"table2/{row.name}/pred_S2_bound", pred["s2"],
              f"paper measured S2 {row.slgs_s / row.lags_s:.2f}")
         s_max = pred["s_max"]

@@ -1,0 +1,262 @@
+"""Online re-planning under an injected mid-run bandwidth shift.
+
+Drives ``repro.runtime.ReplanController`` end-to-end on a CPU host mesh
+with REAL jitted train steps but a SYNTHETIC comm probe: the "wire"
+starts at ICI-class α/β (everything plans dense — the hysteresis path:
+re-plans happen, no swap) and mid-run degrades to a milliseconds-of-
+latency DCN.  The controller must detect the shift at the next re-plan
+boundary and swap to a sparse re-planned schedule within one replan
+window.  Reported: time-to-replan (steps from shift to swap), the
+predicted iteration time / overlap before vs after, and the measured
+step times around the swap.
+
+Two sections:
+
+  1. ``lags_dp`` on a (data=4, model=2) mesh — flat re-planning.
+  2. ``lags_hier`` on a (pod=2, data=2, model=2) mesh — two-tier: the
+     intra-pod (ICI) probe stays fast, only the cross-pod (DCN) probe
+     degrades; the swapped-in schedule is a ``HierSchedule`` whose JSON
+     round-trip and ``make_train_step`` consumption are checked.
+
+  PYTHONPATH=src python -m benchmarks.bench_runtime [--quick]
+
+Exit code = number of failed checks.  NOTE: sets XLA_FLAGS for an
+8-device host platform; run in a fresh process (or FIRST via
+``python -m benchmarks.run runtime``).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import sys
+
+from benchmarks.common import emit, header
+
+
+def _synth_samples(hw, p, sizes=(1 << 12, 1 << 16, 1 << 20)):
+    """CommSamples a perfect α-β wire would produce (costfit recovers
+    hw.alpha/hw.beta from these to <5%)."""
+    from repro.autotune import profiler
+    from repro.core import comm_model as cm
+    out = []
+    for n in sizes:
+        out.append(profiler.CommSample(
+            "allgather", nbytes=float(n), p=p,
+            t=cm.allgather_time(float(n), p, hw)))
+        out.append(profiler.CommSample(
+            "allreduce", nbytes=float(n), p=p,
+            t=cm.allreduce_time(float(n), p, hw)))
+    return out
+
+
+def _mean_ratio(flat_sched) -> float:
+    rs = [lp.ratio for lp in flat_sched.leaves]
+    return sum(rs) / len(rs)
+
+
+def _drive(tag, ctl, cfg, seq, global_batch, steps, shift_at,
+           shift_fn) -> dict:
+    """Run ``steps`` controller steps, flipping the wire once the
+    controller's step counter reaches ``shift_at``; returns swap
+    bookkeeping.  Times and events are split pre/post shift."""
+    import jax
+    import numpy as np
+    from repro import compat
+    from repro.configs import base
+    from repro.launch import specs as SP
+    from repro.launch import train as TR
+
+    state, _ = TR.init_state(cfg, ctl.mesh)
+    shape = base.InputShape("rt", seq, global_batch, "train")
+    metrics = {"loss": float("nan")}
+    with compat.set_mesh(ctl.mesh):
+        for t in range(steps):
+            batch = SP.concrete_batch(cfg, shape, key=jax.random.PRNGKey(t))
+            state, metrics = ctl.step(state, batch)
+            if t + 1 == shift_at:   # controller counter == t + 1
+                shift_fn()
+    loss = float(metrics["loss"])
+    emit(f"runtime/{tag}/final_loss", loss, "finite = step ran post-swap")
+    pre = [e for e in ctl.history if e.step <= shift_at]
+    post = [e for e in ctl.history if e.step > shift_at]
+    swap = next((e.step for e in post if e.swapped), None)
+    pre_t = [s.t_step for s in ctl.telemetry.step_samples()
+             if s.step <= shift_at]
+    post_t = [s.t_step for s in ctl.telemetry.step_samples()
+              if s.step > shift_at]
+    return {"swap_step": swap, "pre": pre, "post": post, "loss": loss,
+            "t_pre": float(np.median(pre_t)) if pre_t else 0.0,
+            "t_post": float(np.median(post_t)) if post_t else 0.0}
+
+
+def run(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-scale: fewer steps, tighter replan cadence")
+    ap.add_argument("--out", default="artifacts/runtime")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+    from repro.autotune import schedule as SCH
+    from repro.configs import base
+    from repro.core import comm_model as cm
+    from repro.launch import mesh as M
+    from repro.launch import train as TR
+    from repro.runtime import ReplanController, RuntimeConfig
+
+    bad = 0
+    replan_every = 3 if args.quick else 5
+    steps = 4 * replan_every
+    shift_at = 2 * replan_every + 1          # just past the 2nd boundary
+    fast = cm.TPU_V5E_ICI
+    # degraded DCN: the budgets re-planning solves against come from
+    # MEASURED host-mesh step times (~1s/step of CPU dispatch overhead),
+    # so the injected degradation must be slow even on that scale for a
+    # dense exchange to stop hiding — tens of ms latency, 1 MB/s wire
+    slow = cm.Hardware(name="degraded_dcn", alpha=50e-3, beta=1.0 / 1e6,
+                       flops=fast.flops)
+
+    def small_cfg(mode):
+        return dataclasses.replace(
+            base.get_smoke_config("tinyllama_1_1b"), n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+            dtype="float32", param_dtype="float32",
+            train_mode=mode, compression_ratio=1.0)
+
+    rcfg = RuntimeConfig(replan_every=replan_every, window=16,
+                         fence_every=1, swap_threshold=0.05,
+                         min_step_samples=1)
+
+    # ---- 1. flat re-planning (lags_dp), full-wire shift --------------------
+    header(f"runtime lags_dp: shift at step {shift_at}, "
+           f"replan every {replan_every}")
+    wire = {"hw": fast}
+
+    def probe_dp(mesh, axes):
+        p = M.n_workers(mesh, tuple(axes))
+        return _synth_samples(wire["hw"], p) if p > 1 else []
+
+    cfg = small_cfg("lags_dp")
+    ctl = ReplanController(cfg, M.make_host_mesh(data=4, model=2),
+                           rcfg=rcfg, comm_probe=probe_dp, lr=0.1,
+                           chunk=16, loss_chunk=16)
+    res = _drive("dp", ctl, cfg, seq=16, global_batch=8, steps=steps,
+                 shift_at=shift_at,
+                 shift_fn=lambda: wire.update(hw=slow))
+
+    n_noswap = sum(1 for e in res["pre"] if not e.swapped)
+    emit("runtime/dp/pre_shift_replans_no_swap", n_noswap,
+         "hysteresis: fast wire re-plans to ~the same schedule, no churn")
+    if not (res["pre"] and n_noswap == len(res["pre"])):
+        emit("runtime/dp/FAILED_hysteresis", 0,
+             f"{[dataclasses.asdict(e) for e in res['pre']]}")
+        bad += 1
+    if res["swap_step"] is None:
+        emit("runtime/dp/FAILED_no_swap_after_shift", 0,
+             f"{[dataclasses.asdict(e) for e in res['post']]}")
+        bad += 1
+    else:
+        ttr = res["swap_step"] - shift_at
+        emit("runtime/dp/time_to_replan_steps", ttr,
+             f"shift@{shift_at} -> swap@{res['swap_step']}")
+        if ttr > replan_every:
+            emit("runtime/dp/FAILED_swap_outside_window", ttr, "")
+            bad += 1
+        swap = next(e for e in ctl.history if e.swapped)
+        emit("runtime/dp/swap_pred_improvement", swap.improvement,
+             f"pred {swap.t_pred_current:.4g}s -> "
+             f"{swap.t_pred_candidate:.4g}s")
+        emit("runtime/dp/pred_overlap_after_swap", swap.overlap,
+             "comm hidden under the re-planned schedule")
+        mean_c = _mean_ratio(ctl.schedule)
+        emit("runtime/dp/post_swap_mean_ratio", mean_c,
+             "started dense (c=1); degraded wire must force sparsity")
+        if not mean_c > 1.0:
+            emit("runtime/dp/FAILED_post_swap_still_dense", mean_c, "")
+            bad += 1
+    emit("runtime/dp/t_step_pre_shift_s", res["t_pre"], "measured median")
+    emit("runtime/dp/t_step_post_shift_s", res["t_post"],
+         "measured median (CPU steps don't see the synthetic wire)")
+    if not np.isfinite(res["loss"]):
+        emit("runtime/dp/FAILED_nonfinite_loss", res["loss"], "")
+        bad += 1
+
+    # ---- 2. two-tier re-planning (lags_hier), DCN-only shift ---------------
+    header("runtime lags_hier: intra-pod wire stays ICI, cross-pod "
+           "degrades")
+    wires = {"data": fast, "pod": cm.TPU_DCN}
+
+    def probe_hier(mesh, axes):
+        axes = tuple(axes)
+        p = M.n_workers(mesh, axes)
+        if p <= 1:
+            return []
+        hw = wires["pod"] if "pod" in axes else wires["data"]
+        return _synth_samples(hw, p)
+
+    hcfg = small_cfg("lags_hier")
+    hctl = ReplanController(hcfg, M.make_host_mesh(data=2, model=2, pod=2),
+                            rcfg=rcfg, comm_probe=probe_hier, lr=0.1,
+                            chunk=16, loss_chunk=16)
+    hres = _drive("hier", hctl, hcfg, seq=16, global_batch=8,
+                  steps=steps, shift_at=shift_at,
+                  shift_fn=lambda: wires.update(pod=slow))
+
+    if hres["swap_step"] is None:
+        emit("runtime/hier/FAILED_no_swap_after_shift", 0,
+             f"{[dataclasses.asdict(e) for e in hres['post']]}")
+        bad += 1
+    else:
+        ttr = hres["swap_step"] - shift_at
+        emit("runtime/hier/time_to_replan_steps", ttr,
+             f"shift@{shift_at} -> swap@{hres['swap_step']}")
+        if ttr > replan_every:
+            emit("runtime/hier/FAILED_swap_outside_window", ttr, "")
+            bad += 1
+        hs = hctl.schedule
+        if getattr(hs, "n_tiers", 1) != 2:
+            emit("runtime/hier/FAILED_not_hier_schedule", 0, f"{type(hs)}")
+            bad += 1
+        else:
+            # inner: dense everywhere the wire hides (all but the
+            # zero-budget head leaf, which always saturates to the cap)
+            inner_dense = sum(1 for lp in hs.inner.leaves if lp.ratio == 1.0)
+            emit("runtime/hier/inner_dense_leaves",
+                 f"{inner_dense}/{len(hs.inner.leaves)}",
+                 "ICI tier: fast wire hides behind backward")
+            emit("runtime/hier/outer_mean_ratio", _mean_ratio(hs.outer),
+                 "DCN tier: sparse after the shift")
+            if not (_mean_ratio(hs.outer) > 1.0
+                    and inner_dense >= len(hs.inner.leaves) - 2
+                    and _mean_ratio(hs.inner) < _mean_ratio(hs.outer)):
+                emit("runtime/hier/FAILED_tier_ratios",
+                     f"inner={_mean_ratio(hs.inner):.3g}",
+                     f"outer={_mean_ratio(hs.outer):.3g} "
+                     f"dense={inner_dense}/{len(hs.inner.leaves)}")
+                bad += 1
+            # JSON round-trip + consumption through make_train_step
+            path = SCH.cache_path(args.out, hcfg.name, "runtime", 2,
+                                  "degraded_dcn", train_mode="lags_hier",
+                                  tiers=2)
+            hs.save(path)
+            loaded = SCH.load_any(path)
+            ok = loaded == hs
+            emit("runtime/hier/schedule_roundtrip_identity", int(ok), path)
+            bad += 0 if ok else 1
+            _, _, meta = TR.make_train_step(
+                hcfg, hctl.mesh, schedule=loaded, donate=False,
+                chunk=16, loss_chunk=16)
+            consumed = meta["ks"] is not None
+            emit("runtime/hier/consumed_by_make_train_step", int(consumed),
+                 "outer-tier ks ingested in lags_hier mode")
+            bad += 0 if consumed else 1
+    if not np.isfinite(hres["loss"]):
+        emit("runtime/hier/FAILED_nonfinite_loss", hres["loss"], "")
+        bad += 1
+    return bad
+
+
+if __name__ == "__main__":
+    sys.exit(run(None))

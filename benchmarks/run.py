@@ -14,6 +14,13 @@
                         a fresh process — run it directly
                         (``python -m benchmarks.bench_autotune``) or as
                         ``python -m benchmarks.run autotune`` FIRST.
+  bench_runtime         (system) online re-planning controller under an
+                        injected mid-run bandwidth shift: hysteresis
+                        (no-swap on a stable wire), time-to-replan, and
+                        two-tier ``lags_hier`` schedule swap.  Same
+                        XLA_FLAGS caveat as bench_autotune — run it in a
+                        fresh process (``python -m benchmarks.bench_runtime
+                        [--quick]``) or FIRST in the list.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run             # all
@@ -23,6 +30,7 @@ validation checks.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
@@ -39,7 +47,10 @@ def main(argv=None) -> int:
         name = name.removeprefix("bench_")
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         t1 = time.time()
-        rc = mod.run()
+        # argv-accepting benches (autotune, runtime) must not re-parse
+        # THIS driver's sys.argv — hand them an empty arg list
+        takes_argv = bool(inspect.signature(mod.run).parameters)
+        rc = mod.run([]) if takes_argv else mod.run()
         print(f"# bench_{name}: rc={rc} ({time.time() - t1:.1f}s)",
               flush=True)
         bad += rc

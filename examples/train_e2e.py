@@ -8,6 +8,11 @@ checkpointing and a JSONL metrics log.
 
   PYTHONPATH=src python examples/train_e2e.py --steps 300          # ~100M
   PYTHONPATH=src python examples/train_e2e.py --preset small --steps 50
+  # online schedule re-planning (repro.runtime) every 50 steps:
+  PYTHONPATH=src python examples/train_e2e.py --steps 300 --replan-every 50
+  # hierarchical mode on a 2-pod mesh consuming a planned two-tier schedule:
+  PYTHONPATH=src python examples/train_e2e.py --method lags_hier \
+      --pod 2 --data-par 2 --hier-schedule artifacts/runtime/..._t2_....json
 
 NOTE: sets XLA_FLAGS before importing jax to get an 8-device host platform.
 """
@@ -55,21 +60,51 @@ def main():
                     choices=["lags_dp", "lags_hier", "dense"])
     ap.add_argument("--data-par", type=int, default=4)
     ap.add_argument("--model-par", type=int, default=2)
+    ap.add_argument("--pod", type=int, default=1,
+                    help="pod axis size (>1 gives lags_hier a real "
+                         "cross-pod exchange; pod*data*model must not "
+                         "exceed the 8 host devices)")
     ap.add_argument("--out", default="artifacts/train_e2e")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--replan-every", type=int, default=0,
+                    help="re-plan the LAGS schedule online every N steps "
+                         "(0 = static; see repro.runtime)")
+    ap.add_argument("--swap-threshold", type=float, default=0.05,
+                    help="min predicted relative improvement before an "
+                         "online re-plan swaps the schedule")
+    ap.add_argument("--hier-schedule", default=None,
+                    help="two-tier HierSchedule JSON for --method "
+                         "lags_hier (from bench_runtime or the planner)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
         base.get_smoke_config("tinyllama_1_1b"), **PRESETS[args.preset],
         dtype="float32", param_dtype="float32",
         train_mode=args.method, compression_ratio=args.ratio)
-    mesh = M.make_host_mesh(data=args.data_par, model=args.model_par)
+    mesh = M.make_host_mesh(data=args.data_par, model=args.model_par,
+                            pod=args.pod)
     data = synthetic.MarkovLM(vocab=cfg.vocab, seed=11)
 
-    step_fn, state_specs, meta = TR.make_train_step(
-        cfg, mesh, lr=args.lr, ratio=args.ratio,
-        chunk=min(1024, args.seq), loss_chunk=min(512, args.seq),
-        donate=False)
+    schedule = None
+    if args.hier_schedule:
+        from repro.autotune import schedule as SCH
+        schedule = SCH.load_any(args.hier_schedule)
+
+    controller = None
+    if args.replan_every > 0:
+        from repro.runtime import ReplanController, RuntimeConfig
+        controller = ReplanController(
+            cfg, mesh,
+            rcfg=RuntimeConfig(replan_every=args.replan_every,
+                               swap_threshold=args.swap_threshold),
+            schedule=schedule, lr=args.lr,
+            chunk=min(1024, args.seq), loss_chunk=min(512, args.seq))
+        step_fn, meta = controller.step, controller.meta
+    else:
+        step_fn, _state_specs, meta = TR.make_train_step(
+            cfg, mesh, lr=args.lr, ratio=args.ratio, schedule=schedule,
+            chunk=min(1024, args.seq), loss_chunk=min(512, args.seq),
+            donate=False)
     state, _ = TR.init_state(cfg, mesh)
     n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
     print(f"arch={cfg.name} preset={args.preset}: {n_params / 1e6:.1f}M "
@@ -80,6 +115,7 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     log_path = os.path.join(args.out, "metrics.jsonl")
     t_start = time.time()
+    n_events = 0
     with open(log_path, "a") as log:
         for t in range(args.steps):
             batch = data.batch(t, args.global_batch, args.seq)
@@ -88,6 +124,13 @@ def main():
             loss = float(metrics["loss"])
             row = {"step": t, "loss": loss,
                    "elapsed_s": round(time.time() - t_start, 1)}
+            if controller is not None and len(controller.history) > n_events:
+                ev = controller.last_event
+                n_events = len(controller.history)
+                row["replan"] = {"swapped": ev.swapped,
+                                 "improvement": round(ev.improvement, 4)}
+                print(f"step {t:4d}  replan: swapped={ev.swapped} "
+                      f"pred_improvement={ev.improvement:.3f}", flush=True)
             log.write(json.dumps(row) + "\n")
             log.flush()
             if t % 10 == 0 or t == args.steps - 1:
@@ -96,8 +139,16 @@ def main():
             if args.ckpt_every and t and t % args.ckpt_every == 0:
                 ckpt.save(os.path.join(args.out, f"ckpt_{t}"),
                           {"params": state["params"], "step": state["step"]})
+                if controller is not None:
+                    controller.save_state(
+                        os.path.join(args.out, f"runtime_{t}"))
     ckpt.save(os.path.join(args.out, "ckpt_final"),
               {"params": state["params"], "step": state["step"]})
+    if controller is not None:
+        controller.save_state(os.path.join(args.out, "runtime_final"))
+        swaps = sum(1 for e in controller.history if e.swapped)
+        print(f"runtime: {len(controller.history)} re-plans, "
+              f"{swaps} swaps (state saved for resume)")
     print(f"done: {args.steps} steps, log at {log_path}")
 
 

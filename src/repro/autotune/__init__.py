@@ -28,11 +28,14 @@ from repro.autotune.planner import plan_leaf, plan_schedule, predict_iteration
 from repro.autotune.profiler import (CommSample, LeafSample, ModelProfile,
                                      backprop_leaves, profile_model,
                                      time_collectives)
-from repro.autotune.schedule import LeafPlan, Schedule, cache_path, summarize
+from repro.autotune.schedule import (HierSchedule, LeafPlan, Schedule,
+                                     cache_path, load_any,
+                                     schedule_from_json, summarize)
 
 __all__ = [
     "CommSample", "LeafSample", "ModelProfile", "backprop_leaves",
     "profile_model", "time_collectives", "fit_alpha_beta", "fit_hardware",
     "plan_leaf", "plan_schedule", "predict_iteration", "LeafPlan",
-    "Schedule", "cache_path", "summarize",
+    "Schedule", "HierSchedule", "cache_path", "load_any",
+    "schedule_from_json", "summarize",
 ]

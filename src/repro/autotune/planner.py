@@ -39,7 +39,8 @@ def plan_leaf(d: int, t_budget: float, p: int, hw: cm.Hardware,
 
 def plan_schedule(leaves: Sequence, p: int, hw: cm.Hardware, *,
                   arch: str = "", shape: str = "", c_upper: float = 1000.0,
-                  efficiency: float = 0.45) -> S.Schedule:
+                  efficiency: float = 0.45,
+                  train_mode: str = "lags_dp") -> S.Schedule:
     """Solve Eq. 18 per leaf over measured budgets.
 
     ``leaves`` is a backprop-ordered sequence of objects with ``name``,
@@ -68,7 +69,7 @@ def plan_schedule(leaves: Sequence, p: int, hw: cm.Hardware, *,
                       hardware={"name": hw.name, "alpha": hw.alpha,
                                 "beta": hw.beta, "flops": hw.flops,
                                 "hbm_bw": hw.hbm_bw},
-                      leaves=tuple(plans))
+                      leaves=tuple(plans), train_mode=train_mode)
 
 
 def predict_iteration(leaves: Sequence, sched: S.Schedule, p: int,

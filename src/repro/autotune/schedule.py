@@ -4,10 +4,18 @@ A ``Schedule`` is the artifact the autotune pipeline emits: one
 ``LeafPlan`` (compression ratio c^(l) and budget k^(l)) per learnable
 leaf, keyed by the leaf's pytree path, plus the provenance needed to
 decide whether a cached schedule still applies — (arch, input shape,
-worker count, calibrated hardware).  Schedules round-trip through JSON
-so a profile→fit→plan run is paid once per (arch, mesh, hardware) and
-reused across training jobs; ingestion happens through
+worker count, train mode, calibrated hardware).  Schedules round-trip
+through JSON so a profile→fit→plan run is paid once per (arch, mesh,
+hardware) and reused across training jobs; ingestion happens through
 ``core.lags.ks_from_ratios_tree`` via :meth:`Schedule.ratios_tree`.
+
+Version history:
+
+  * v1 — flat per-leaf plans only, no ``train_mode`` provenance.
+  * v2 — adds ``train_mode`` to ``Schedule`` and introduces the
+    two-tier ``HierSchedule`` (intra-pod / cross-pod plans for the
+    ``lags_hier`` train mode).  v1 documents load with
+    ``train_mode="lags_dp"`` (the only mode v1 plans ever fed).
 """
 from __future__ import annotations
 
@@ -19,7 +27,7 @@ from typing import Any, Sequence
 
 import jax
 
-SCHEDULE_VERSION = 1
+SCHEDULE_VERSION = 2
 
 
 def _path_str(path) -> str:
@@ -61,12 +69,14 @@ class LeafPlan:
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """Per-leaf ratios for one (arch, shape, n_workers, hardware) tuple."""
+    """Per-leaf ratios for one (arch, shape, n_workers, mode, hw) tuple."""
     arch: str
     shape: str
     n_workers: int
     hardware: dict            # name/alpha/beta/flops/hbm_bw of the fit
     leaves: tuple[LeafPlan, ...]
+    train_mode: str = "lags_dp"
+    tier: str = ""            # ""=flat; "inner"/"outer" inside a HierSchedule
     version: int = SCHEDULE_VERSION
 
     # -- lookup ------------------------------------------------------------
@@ -122,15 +132,28 @@ class Schedule:
     @staticmethod
     def from_json(text: str) -> "Schedule":
         obj = json.loads(text)
+        if obj.get("kind") == "hier":
+            raise ValueError("this is a hierarchical schedule — load it "
+                             "with HierSchedule.from_json / load_any")
+        return Schedule._from_obj(obj)
+
+    @staticmethod
+    def _from_obj(obj: dict) -> "Schedule":
         version = int(obj.get("version", 0))
-        if version != SCHEDULE_VERSION:
+        if version == 1:
+            # v1 migration: flat plans, no train_mode provenance — every
+            # v1 schedule was planned for (and consumed by) lags_dp
+            obj = dict(obj, train_mode="lags_dp")
+        elif version != SCHEDULE_VERSION:
             raise ValueError(f"schedule version {version} != "
                              f"{SCHEDULE_VERSION} (re-run the autotuner)")
         leaves = tuple(LeafPlan(**lp) for lp in obj["leaves"])
         return Schedule(arch=obj["arch"], shape=obj["shape"],
                         n_workers=int(obj["n_workers"]),
                         hardware=dict(obj["hardware"]), leaves=leaves,
-                        version=version)
+                        train_mode=str(obj.get("train_mode", "lags_dp")),
+                        tier=str(obj.get("tier", "")),
+                        version=SCHEDULE_VERSION)
 
     def save(self, path: str) -> str:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -144,10 +167,113 @@ class Schedule:
             return Schedule.from_json(f.read())
 
 
+@dataclasses.dataclass(frozen=True)
+class HierSchedule:
+    """Two-tier schedule for the ``lags_hier`` train mode.
+
+    ``inner`` plans the intra-pod tier (fast ICI — usually dense, ratio 1,
+    because the wire hides behind backward compute; recorded so a future
+    sparse-intra-pod exchange can consume it) and ``outer`` plans the
+    cross-pod tier (slow DCN — the sparse LAGS exchange).  Each tier is a
+    full flat :class:`Schedule` solved against that tier's own fitted
+    α/β ``hardware`` and worker count.  The train step's sparse exchange
+    runs over the *outer* tier, so :meth:`ks_tree` ingestion forwards to
+    ``outer`` — the same ``core.lags.ks_from_ratios_tree`` path as flat
+    schedules.
+    """
+    arch: str
+    shape: str
+    inner: Schedule
+    outer: Schedule
+    version: int = SCHEDULE_VERSION
+
+    def __post_init__(self):
+        have = {lp.name: lp.d for lp in self.inner.leaves}
+        want = {lp.name: lp.d for lp in self.outer.leaves}
+        if have != want:
+            bad = sorted(set(have.items()) ^ set(want.items()))
+            raise ValueError(
+                f"HierSchedule tiers cover different leaves: {bad[:4]}")
+
+    @property
+    def n_tiers(self) -> int:
+        return 2
+
+    @property
+    def tiers(self) -> dict[str, Schedule]:
+        return {"inner": self.inner, "outer": self.outer}
+
+    # -- ingestion (forwarded to the sparse cross-pod tier) ----------------
+    def validate(self, params_like) -> None:
+        self.inner.validate(params_like)
+        self.outer.validate(params_like)
+
+    def ratios_tree(self, params_like) -> Any:
+        return self.outer.ratios_tree(params_like)
+
+    def ks_tree(self, params_like) -> Any:
+        return self.outer.ks_tree(params_like)
+
+    # -- JSON round-trip ---------------------------------------------------
+    def to_json(self) -> str:
+        obj = {"kind": "hier", "version": self.version, "arch": self.arch,
+               "shape": self.shape,
+               "tiers": {"inner": dataclasses.asdict(self.inner),
+                         "outer": dataclasses.asdict(self.outer)}}
+        return json.dumps(obj, indent=1, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "HierSchedule":
+        obj = json.loads(text)
+        if obj.get("kind") != "hier":
+            raise ValueError("not a hierarchical schedule — load it with "
+                             "Schedule.from_json / load_any")
+        version = int(obj.get("version", 0))
+        if version != SCHEDULE_VERSION:
+            raise ValueError(f"schedule version {version} != "
+                             f"{SCHEDULE_VERSION} (re-run the autotuner)")
+        return HierSchedule(
+            arch=obj["arch"], shape=obj["shape"],
+            inner=Schedule._from_obj(obj["tiers"]["inner"]),
+            outer=Schedule._from_obj(obj["tiers"]["outer"]),
+            version=version)
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @staticmethod
+    def load(path: str) -> "HierSchedule":
+        with open(path) as f:
+            return HierSchedule.from_json(f.read())
+
+
+def schedule_from_json(text: str) -> "Schedule | HierSchedule":
+    """Parse either schedule kind (flat v1/v2 or hierarchical)."""
+    obj = json.loads(text)
+    if obj.get("kind") == "hier":
+        return HierSchedule.from_json(text)
+    return Schedule._from_obj(obj)
+
+
+def load_any(path: str) -> "Schedule | HierSchedule":
+    with open(path) as f:
+        return schedule_from_json(f.read())
+
+
 def cache_path(root: str, arch: str, shape: str, n_workers: int,
-               hw_name: str) -> str:
-    """Canonical on-disk location for a cached schedule."""
-    return os.path.join(root, f"{arch}_{shape}_p{n_workers}_{hw_name}.json")
+               hw_name: str, train_mode: str = "lags_dp",
+               tiers: int = 1) -> str:
+    """Canonical on-disk location for a cached schedule.
+
+    ``train_mode`` and ``tiers`` are part of the key: ``lags_dp`` and
+    ``lags_hier`` plans for the same (arch, shape, workers, hardware) are
+    different artifacts and must not collide in the cache."""
+    return os.path.join(
+        root,
+        f"{arch}_{shape}_p{n_workers}_{train_mode}_t{tiers}_{hw_name}.json")
 
 
 def summarize(sched: Schedule, classes: Sequence[tuple[str, tuple[str, ...]]]

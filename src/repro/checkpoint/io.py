@@ -31,6 +31,21 @@ def save(path: str, tree, metadata: dict | None = None) -> None:
         json.dump(meta, f)
 
 
+def load_arrays(path: str) -> dict:
+    """Raw {key: np.ndarray} contents of a checkpoint, no ``like`` needed.
+
+    For variable-shape state (e.g. the runtime telemetry window) where
+    ``restore``'s exact shape validation cannot apply."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    return {k: npz[k] for k in npz.files}
+
+
+def load_metadata(path: str) -> dict:
+    """The JSON sidecar written by ``save`` ({"keys", "metadata"})."""
+    with open(path.removesuffix(".npz") + ".json") as f:
+        return json.load(f)
+
+
 def restore(path: str, like):
     """Restore into the structure of ``like`` (shape/dtype checked)."""
     npz = np.load(path if path.endswith(".npz") else path + ".npz")

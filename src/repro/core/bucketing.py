@@ -12,6 +12,26 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
+# dtypes numpy only knows with ml_dtypes registered (jax brings it, but
+# this module must not require it)
+_ITEMSIZE_FALLBACK = {"bfloat16": 2, "float8_e4m3fn": 1, "float8_e5m2": 1}
+
+
+def payload_bytes_per_elem(value_dtype="float32",
+                           index_bytes: int = 4) -> int:
+    """Wire bytes per kept element: one value + one int32 index.
+
+    The sparse exchange ships (values, indices) pairs, so the payload
+    depends on the *value* dtype — 8 B/elem for fp32 values but 6 B/elem
+    for bf16; a hard-coded 8 over-sizes bf16 buckets by a third."""
+    try:
+        item = np.dtype(value_dtype).itemsize
+    except TypeError:
+        item = _ITEMSIZE_FALLBACK[str(value_dtype)]
+    return int(item) + int(index_bytes)
+
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
@@ -20,8 +40,14 @@ class Bucket:
 
 
 def assign_buckets(ks: Sequence[int], target_bytes: int = 1 << 20,
-                   bytes_per_elem: int = 8) -> list[Bucket]:
-    """Greedy size-targeted grouping of backprop-ordered layers."""
+                   bytes_per_elem: int | None = None, *,
+                   value_dtype="float32") -> list[Bucket]:
+    """Greedy size-targeted grouping of backprop-ordered layers.
+
+    ``bytes_per_elem`` is derived from ``value_dtype`` (+ int32 index)
+    unless given explicitly."""
+    if bytes_per_elem is None:
+        bytes_per_elem = payload_bytes_per_elem(value_dtype)
     buckets: list[Bucket] = []
     cur: list[int] = []
     cur_bytes = 0

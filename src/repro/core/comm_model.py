@@ -26,6 +26,10 @@ ETH_1GBPS = Hardware(name="eth_1gbps", alpha=50e-6, beta=1.0 / 0.125e9,
                      flops=10.77e12)  # P102-100 ~10.77 TFLOP/s fp32
 TPU_V5E_ICI = Hardware(name="tpu_v5e", alpha=1e-6, beta=1.0 / 50e9,
                        flops=197e12)
+# Cross-pod data-center network (the slow tier of ``lags_hier``): same
+# chips, but ~25 GB/s per-host DCN with order-10µs latency.
+TPU_DCN = Hardware(name="tpu_dcn", alpha=10e-6, beta=1.0 / 25e9,
+                   flops=197e12)
 
 
 def allreduce_time(nbytes: float, p: int, hw: Hardware) -> float:

@@ -204,16 +204,53 @@ def make_train_step(cfg, mesh, *, method: str | None = None,
     """Builds (step_fn, state_specs, meta).  step_fn: (state, batch) ->
     (state, metrics), jit'd; lower with the returned specs for the dry-run.
 
-    ``schedule``: optional ``repro.autotune.Schedule`` (or anything with a
+    ``schedule``: optional ``repro.autotune.Schedule`` /
+    ``repro.autotune.HierSchedule`` (or anything with a
     ``ks_tree(params_like)`` method).  When given, its planned per-leaf
     k^(l) replace the static ``cfg.compression_ratio`` at the same
     ingestion point ``lags.ks_from_ratios_tree`` feeds; the schedule is
-    validated against this model's leaf structure first.
+    validated against this model's leaf structure first.  A two-tier
+    ``HierSchedule`` is only meaningful in ``lags_hier`` mode (its outer
+    tier budgets the sparse cross-pod exchange; the intra-pod reduction
+    is GSPMD's) — other modes reject it.
     """
     state_specs, meta = make_state_specs(cfg, mesh, method=method)
     mode, manual = meta["mode"], meta["manual"]
     ks_override = None
     if schedule is not None and mode != "dense":
+        if getattr(schedule, "n_tiers", 1) > 1 and mode != "lags_hier":
+            raise ValueError(
+                f"hierarchical schedule (n_tiers="
+                f"{schedule.n_tiers}) requires train mode 'lags_hier', "
+                f"got {mode!r}")
+        # provenance check: a flat schedule planned for one wire must not
+        # silently feed the other (per-leaf k's priced for intra-pod ICI
+        # are far too dense for the cross-pod DCN exchange, and vice versa)
+        flat_mode = getattr(schedule, "train_mode", None)
+        if (getattr(schedule, "n_tiers", 1) == 1 and flat_mode is not None
+                and (flat_mode == "lags_hier") != (mode == "lags_hier")):
+            raise ValueError(
+                f"schedule was planned for train_mode={flat_mode!r} but "
+                f"this step runs {mode!r} (re-plan, or load the matching "
+                f"cache entry)")
+        if getattr(schedule, "tier", "") == "inner":
+            raise ValueError(
+                "this is the intra-pod (inner) tier of a HierSchedule — "
+                "its near-dense k's must not feed the cross-pod exchange; "
+                "pass the full HierSchedule or its outer tier")
+        # Eq. 18 ratios are solved against a worker count; applying them
+        # on a different mesh still converges (Lemma 1) but the planned
+        # sparsity no longer matches any wire — e.g. an outer tier planned
+        # for 2 pods on a 1-pod mesh compresses hard with no comm to hide.
+        # Warn, don't fail: what-if consumption of a production-planned
+        # schedule on a host mesh is a supported flow (bench_autotune).
+        planned_p = int(getattr(schedule, "outer", schedule).n_workers)
+        if planned_p != meta["n_workers"]:
+            import warnings
+            warnings.warn(
+                f"schedule was planned for {planned_p} workers but this "
+                f"mesh runs {meta['n_workers']} (mode {mode!r}) — planned "
+                f"ratios will not match the wire", stacklevel=2)
         ks_override = schedule.ks_tree(state_specs["params"])
     # auto axes available for block-parallel row sharding inside the exchange
     row_axes = tuple(a for a in mesh.axis_names if a not in manual

@@ -1,0 +1,61 @@
+"""``repro.runtime`` — online re-planning with hierarchical LAGS schedules.
+
+PR 1's autotune loop (``repro.autotune``) plans **once, offline**: a
+schedule fitted before step 0 goes stale as interconnect contention
+drifts, and its flat ratio tree cannot express the two wires of the
+``lags_hier`` train mode (dense intra-pod ICI, sparse cross-pod DCN).
+This package closes the loop **online**, in three pieces:
+
+  * **telemetry** (:mod:`~repro.runtime.telemetry`) — ring-buffer
+    collector of per-step wall times (fence-amortized at the Python step
+    boundary, host-callback-free) and of the collective samples the
+    probe hands back.
+  * **hier** (:mod:`~repro.runtime.hier`) — two-tier planner: Eq. 18
+    solved separately per tier against each tier's own fitted α/β,
+    emitting a ``autotune.schedule.HierSchedule`` (schema v2) whose
+    *outer* (cross-pod) tier is what ``launch.train.make_train_step``
+    ingests in ``lags_hier`` mode.
+  * **controller** (:mod:`~repro.runtime.controller`) — every
+    ``replan_every`` steps: re-fit the wire from fresh collective
+    samples, re-apportion compute budgets from the measured window,
+    re-solve Eq. 18, and swap the live train step **only** when the
+    predicted iteration time improves by more than ``swap_threshold``
+    (hysteresis bounds recompile churn).  State survives restarts via
+    ``checkpoint.io``.
+
+Usage::
+
+    from repro.runtime import ReplanController, RuntimeConfig
+
+    ctl = ReplanController(cfg, mesh,
+                           rcfg=RuntimeConfig(replan_every=50,
+                                              swap_threshold=0.05))
+    state, _ = TR.init_state(cfg, mesh)
+    for t in range(steps):
+        state, metrics = ctl.step(state, data.batch(t, B, S))
+    ctl.save_state("artifacts/runtime_state")    # resume: restore_state
+
+    # two-tier planning without a controller:
+    from repro.runtime import hier
+    hs = hier.plan_hier_schedule(leaves, p_inner=16, p_outer=4,
+                                 hw_inner=ici_fit, hw_outer=dcn_fit)
+    step_fn, _, _ = TR.make_train_step(hier_cfg, mesh, schedule=hs)
+
+End-to-end driver (injected bandwidth shift, time-to-replan report):
+``python -m benchmarks.bench_runtime [--quick]``.
+
+Why mid-training k changes are safe: Lemma 1 covers any partition of the
+gradient into pieces, and the k-contraction analysis of Alistarh et al.
+(arXiv 1809.10505) bounds the error-feedback residual for any k sequence
+bounded below — the controller never plans past the ``c_upper`` cap, so
+every window stays inside Assumption 1's validated range.
+"""
+from repro.runtime.controller import (ReplanController, RuntimeConfig,
+                                      SwapEvent)
+from repro.runtime.hier import plan_hier_schedule, tier_hardware
+from repro.runtime.telemetry import StepSample, Telemetry
+
+__all__ = [
+    "ReplanController", "RuntimeConfig", "SwapEvent", "plan_hier_schedule",
+    "tier_hardware", "StepSample", "Telemetry",
+]

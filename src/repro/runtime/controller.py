@@ -1,0 +1,259 @@
+"""Online re-planning controller: measured window -> fit -> plan -> swap.
+
+``ReplanController`` owns the jitted train step and, every
+``replan_every`` steps, re-runs the autotune pipeline on the telemetry
+window: the wire (α, β) are re-fitted from fresh collective samples
+(``comm_probe``), the per-leaf compute budgets are re-apportioned from
+the window's median step time, and Eq. 18 is re-solved — flat for
+``lags_dp``, two-tier (``runtime.hier``) for ``lags_hier``.
+
+The candidate schedule only replaces the live one under hysteresis: the
+α-β model predicts the iteration time of both the current and the
+candidate schedule against the *new* fit, and the swap happens only when
+the predicted relative improvement exceeds ``swap_threshold``.  Every
+swap rebuilds the train step through ``launch.train.make_train_step``
+(an XLA recompile), so the threshold directly bounds recompile churn —
+noise-level drift re-plans to a near-identical schedule and is rejected.
+
+Changing k^(l) mid-training stays inside the paper's guarantee: Lemma 1
+holds per partition piece, and the k-contraction analysis of Alistarh et
+al. (arXiv 1809.10505) bounds the EF residual for any step-wise k
+sequence bounded below — the c_u cap is that bound here.
+
+Controller state (current schedule, telemetry window, swap history)
+round-trips through ``checkpoint.io`` so re-planning survives restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+
+from repro.autotune import planner, profiler
+from repro.autotune import schedule as S
+from repro.checkpoint import io as ckpt
+from repro.core import comm_model as cm
+from repro.launch import mesh as M
+from repro.launch import train as TR
+from repro.runtime import hier
+from repro.runtime.telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Knobs of the online re-planning loop."""
+    replan_every: int = 50        # steps between re-plans (0 = never)
+    window: int = 64              # telemetry ring capacity (step samples)
+    fence_every: int = 8          # block_until_ready cadence
+    swap_threshold: float = 0.05  # min predicted rel. improvement to swap
+    c_upper: float = 1000.0       # Assumption 1 ratio cap
+    min_step_samples: int = 2     # don't re-plan on an empty window
+    probe_sizes: tuple = (1 << 12, 1 << 16, 1 << 20)
+    probe_iters: int = 3
+    hw_base: cm.Hardware = cm.TPU_V5E_ICI   # compute spec + ICI fallback
+    hw_base_outer: cm.Hardware = cm.TPU_DCN  # cross-pod fallback wire
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapEvent:
+    """One re-plan decision (swapped or hysteresis-rejected)."""
+    step: int
+    swapped: bool
+    improvement: float        # predicted (t_cur - t_new) / t_cur
+    t_pred_current: float
+    t_pred_candidate: float
+    overlap: float            # predicted comm overlap under the candidate
+    hw_name: str
+
+
+class ReplanController:
+    """Owns the train step; closes the autotune loop online.
+
+    Usage::
+
+        ctl = ReplanController(cfg, mesh, rcfg=RuntimeConfig(replan_every=50))
+        state, _ = TR.init_state(cfg, mesh)
+        for t in range(steps):
+            state, metrics = ctl.step(state, batch_fn(t))   # replans inside
+        ctl.save_state("ckpt/runtime")                      # survives restart
+
+    ``comm_probe(mesh, axes) -> [profiler.CommSample]`` defaults to the
+    live ``profiler.time_collectives`` micro-benchmark; benchmarks/tests
+    inject synthetic sources (e.g. a mid-run bandwidth shift).
+    """
+
+    def __init__(self, cfg, mesh, *, rcfg: RuntimeConfig | None = None,
+                 schedule=None, comm_probe: Callable | None = None,
+                 lr: float = 0.01, block_size: int = 4096,
+                 chunk: int = 1024, loss_chunk: int = 512):
+        if cfg.train_mode == "dense":
+            raise ValueError("nothing to re-plan for train_mode='dense'")
+        self.cfg, self.mesh = cfg, mesh
+        self.rcfg = rcfg or RuntimeConfig()
+        self.mode = cfg.train_mode
+        self.schedule = schedule
+        # a replan window must accumulate >= min_step_samples fenced
+        # timings, so cap the fence interval at a quarter of the window
+        fence = self.rcfg.fence_every
+        if self.rcfg.replan_every > 0:
+            fence = min(fence, max(1, self.rcfg.replan_every // 4))
+        self.telemetry = Telemetry(window=self.rcfg.window,
+                                   fence_every=fence)
+        self.history: list[SwapEvent] = []
+        self._probe = comm_probe or self._default_probe
+        # donate=False: a swap must not invalidate the live state buffers
+        self._step_kwargs = dict(lr=lr, block_size=block_size, chunk=chunk,
+                                 loss_chunk=loss_chunk, donate=False)
+        self._step_count = 0
+        # tokens=1.0: apportion_backward splits by FLOPs *share*, so the
+        # absolute token count cancels; budgets come from measured times
+        self._leaf_template = profiler.backprop_leaves(cfg, 1.0)
+        self._build()
+
+    # -- step ownership ----------------------------------------------------
+    def _build(self) -> None:
+        self.step_fn, self.state_specs, self.meta = TR.make_train_step(
+            self.cfg, self.mesh, schedule=self.schedule, **self._step_kwargs)
+
+    def step(self, state, batch):
+        """Run one train step; ticks telemetry and re-plans on cadence."""
+        state, metrics = self.step_fn(state, batch)
+        self._step_count += 1
+        self.telemetry.tick(self._step_count, (state, metrics))
+        if self._due():
+            # drain in-flight async dispatches before probing the wire —
+            # collectives contending with unfinished step work would
+            # inflate the α/β fit and could trigger a spurious swap
+            jax.block_until_ready((state, metrics))
+            self.maybe_replan(self._step_count)
+        return state, metrics
+
+    def _due(self) -> bool:
+        return (self.rcfg.replan_every > 0
+                and self._step_count % self.rcfg.replan_every == 0
+                and len(self.telemetry) >= self.rcfg.min_step_samples)
+
+    @property
+    def last_event(self) -> SwapEvent | None:
+        return self.history[-1] if self.history else None
+
+    # -- re-planning -------------------------------------------------------
+    def _default_probe(self, mesh, axes) -> list:
+        return profiler.time_collectives(
+            mesh, axes, sizes_bytes=self.rcfg.probe_sizes,
+            iters=self.rcfg.probe_iters)
+
+    def _measured_leaves(self) -> tuple[Sequence, float]:
+        """(leaves with window-measured budgets, t_forward estimate)."""
+        t_step = self.telemetry.median_step_time()
+        leaves = profiler.apportion_backward(
+            self._leaf_template, profiler.BWD_FRACTION * t_step)
+        return leaves, max(0.0, (1.0 - profiler.BWD_FRACTION) * t_step)
+
+    def _static_baseline(self, leaves) -> S.Schedule:
+        """The live per-leaf plan when no schedule was ever installed:
+        the static ``cfg.compression_ratio`` applied uniformly."""
+        c = max(1.0, float(self.cfg.compression_ratio))
+        plans = tuple(S.LeafPlan(name=l.name, d=l.d, ratio=c,
+                                 k=max(1, int(round(l.d / c))))
+                      for l in leaves)
+        return S.Schedule(arch=self.cfg.name, shape="static",
+                          n_workers=int(self.meta["n_workers"]),
+                          hardware={"name": "static"}, leaves=plans,
+                          train_mode=self.mode)
+
+    def _plan_candidate(self, leaves):
+        """(candidate schedule, flat schedule for prediction, hw, p)."""
+        rc = self.rcfg
+        if self.mode == "lags_hier":
+            inner_axes = tuple(a for a in self.mesh.axis_names
+                               if a == "data")
+            outer_axes = M.lags_axis_names(self.mesh, "lags_hier")
+            s_in = self._probe(self.mesh, inner_axes) if inner_axes else []
+            s_out = self._probe(self.mesh, outer_axes) if outer_axes else []
+            self.telemetry.record_comm(list(s_in) + list(s_out))
+            hw_in = hier.tier_hardware(s_in, rc.hw_base, name="ici_fit")
+            hw_out = hier.tier_hardware(s_out, rc.hw_base_outer,
+                                        name="dcn_fit")
+            p_in = M.n_workers(self.mesh, inner_axes) if inner_axes else 1
+            p_out = M.n_workers(self.mesh, outer_axes) if outer_axes else 1
+            cand = hier.plan_hier_schedule(
+                leaves, p_inner=p_in, p_outer=p_out, hw_inner=hw_in,
+                hw_outer=hw_out, arch=self.cfg.name, shape="runtime",
+                c_upper=rc.c_upper)
+            return cand, cand.outer, hw_out, p_out
+        axes = M.data_axis_names(self.mesh)
+        samples = self._probe(self.mesh, axes)
+        self.telemetry.record_comm(list(samples))
+        hw = hier.tier_hardware(samples, rc.hw_base, name="wire_fit")
+        p = int(self.meta["n_workers"])
+        cand = planner.plan_schedule(leaves, p=p, hw=hw, arch=self.cfg.name,
+                                     shape="runtime", c_upper=rc.c_upper,
+                                     train_mode=self.mode)
+        return cand, cand, hw, p
+
+    def maybe_replan(self, step_no: int) -> SwapEvent:
+        """Re-fit + re-plan on the current window; swap under hysteresis."""
+        leaves, t_fwd = self._measured_leaves()
+        candidate, cand_flat, hw, p = self._plan_candidate(leaves)
+        current = self.schedule
+        cur_flat = (current.outer if isinstance(current, S.HierSchedule)
+                    else current) or self._static_baseline(leaves)
+        t_cur = planner.predict_iteration(leaves, cur_flat, p, hw,
+                                          t_fwd)["t_lags"]
+        pred = planner.predict_iteration(leaves, cand_flat, p, hw, t_fwd)
+        t_new = pred["t_lags"]
+        improvement = (t_cur - t_new) / t_cur if t_cur > 0 else 0.0
+        swapped = improvement > self.rcfg.swap_threshold
+        if swapped:
+            self.schedule = candidate
+            self._build()
+        # probing/planning (and, on swap, the recompile) happened between
+        # two fences — re-baseline so none of it pollutes the step window
+        self.telemetry.reset_baseline()
+        event = SwapEvent(step=int(step_no), swapped=swapped,
+                          improvement=float(improvement),
+                          t_pred_current=float(t_cur),
+                          t_pred_candidate=float(t_new),
+                          overlap=float(pred["overlap"]), hw_name=hw.name)
+        self.history.append(event)
+        return event
+
+    # -- checkpoint round-trip ---------------------------------------------
+    def save_state(self, path: str) -> str:
+        """Persist schedule + telemetry window + swap history via
+        ``checkpoint.io`` (arrays in the .npz, provenance in the JSON
+        sidecar)."""
+        meta = {
+            "step_count": self._step_count,
+            "train_mode": self.mode,
+            "schedule": (self.schedule.to_json()
+                         if self.schedule is not None else None),
+            "history": [dataclasses.asdict(e) for e in self.history],
+            "comm": [dataclasses.asdict(c)
+                     for c in self.telemetry.comm_samples()],
+        }
+        ckpt.save(path, self.telemetry.state_arrays(), metadata=meta)
+        return path
+
+    def restore_state(self, path: str) -> None:
+        meta = ckpt.load_metadata(path)["metadata"]
+        if meta.get("train_mode") != self.mode:
+            raise ValueError(
+                f"runtime state was saved for train_mode="
+                f"{meta.get('train_mode')!r}, controller runs {self.mode!r}")
+        self.telemetry.load_state_arrays(ckpt.load_arrays(path))
+        self.telemetry.record_comm(
+            [profiler.CommSample(**c) for c in meta.get("comm", [])])
+        self._step_count = int(meta.get("step_count", 0))
+        self.history = [SwapEvent(**e) for e in meta.get("history", [])]
+        sched_json = meta.get("schedule")
+        if sched_json is not None:
+            self.schedule = S.schedule_from_json(sched_json)
+            self._build()
+        elif self.schedule is not None:
+            # the checkpoint predates any swap: the static plan was live,
+            # so a constructor-supplied schedule must not survive restore
+            self.schedule = None
+            self._build()

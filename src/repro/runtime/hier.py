@@ -1,0 +1,71 @@
+"""Two-tier (intra-pod ICI / cross-pod DCN) LAGS planning.
+
+``launch.train``'s ``lags_hier`` mode splits the gradient exchange into a
+dense intra-pod reduction over the fast ICI (GSPMD FSDP) and a sparse
+cross-pod LAGS exchange over the slow DCN.  A flat schedule planned
+against a single α/β fit mis-prices both tiers; this module plans them
+separately — each tier gets its own worker count and its own fitted
+``Hardware`` — and emits a ``schedule.HierSchedule``.
+
+The inner tier usually plans dense everywhere (ratio 1): on ICI the
+dense all-reduce hides behind backward compute, which is exactly why
+``lags_hier`` dense-reduces within the pod.  When even ICI cannot hide a
+leaf (huge leaves, contended links), its inner plan goes sparse — the
+current train step cannot consume that yet (the intra-pod reduction is
+GSPMD's), so the inner tier is provenance for a future sparse-intra-pod
+exchange, while the outer tier is what ``make_train_step`` ingests.
+
+Convergence is covered by the paper's Lemma 1 (any partition of the
+gradient into pieces) plus the k-contraction argument of Alistarh et
+al. (arXiv 1809.10505), which licenses per-tier — and, online, per-window
+— changes of k without losing the guarantee.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.autotune import costfit, planner
+from repro.autotune import schedule as S
+from repro.core import comm_model as cm
+
+
+def tier_hardware(samples: Sequence, base: cm.Hardware,
+                  name: str) -> cm.Hardware:
+    """Fitted wire (α, β) on ``base``'s compute spec for one tier.
+
+    Falls back to ``base``'s wire constants when the tier produced no
+    usable samples (single-worker tier, or a probe that returned [])."""
+    try:
+        alpha, beta = costfit.fit_alpha_beta(samples)
+    except ValueError:
+        alpha, beta = base.alpha, base.beta
+    return cm.Hardware(name=name, alpha=alpha, beta=beta,
+                       flops=base.flops, hbm_bw=base.hbm_bw)
+
+
+def plan_hier_schedule(leaves: Sequence, *, p_inner: int, p_outer: int,
+                       hw_inner: cm.Hardware, hw_outer: cm.Hardware,
+                       arch: str = "", shape: str = "",
+                       c_upper: float = 1000.0,
+                       efficiency: float = 0.45) -> S.HierSchedule:
+    """Eq. 18 per leaf, solved once per tier against that tier's fit.
+
+    ``leaves`` is the same backprop-ordered ``profiler.LeafSample``
+    sequence flat planning uses; both tiers see the same measured compute
+    budgets (each tier's exchange must hide behind the same backward
+    compute).  On a single-pod mesh ``p_outer == 1`` degenerates the
+    outer tier to all-dense plans (no cross-pod wire, zero comm time
+    satisfies every budget) — matching the train step's single-pod
+    behaviour of compressor+EF with no sparse comm."""
+    inner = planner.plan_schedule(leaves, p=p_inner, hw=hw_inner, arch=arch,
+                                  shape=shape, c_upper=c_upper,
+                                  efficiency=efficiency,
+                                  train_mode="lags_hier")
+    outer = planner.plan_schedule(leaves, p=p_outer, hw=hw_outer, arch=arch,
+                                  shape=shape, c_upper=c_upper,
+                                  efficiency=efficiency,
+                                  train_mode="lags_hier")
+    return S.HierSchedule(arch=arch, shape=shape,
+                          inner=dataclasses.replace(inner, tier="inner"),
+                          outer=dataclasses.replace(outer, tier="outer"))

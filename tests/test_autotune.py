@@ -117,11 +117,27 @@ class TestScheduleRoundTrip:
     def test_version_gate(self, tmp_path):
         sched = self._sched()
         p = str(tmp_path / "s.json")
-        text = sched.to_json().replace('"version": 1', '"version": 99')
+        text = sched.to_json().replace('"version": 2', '"version": 99')
+        assert '"version": 99' in text
         with open(p, "w") as f:
             f.write(text)
         with pytest.raises(ValueError, match="version"):
             Schedule.load(p)
+
+    def test_v1_schedule_migrates(self, tmp_path):
+        """v1 flat schedules (no train_mode) load with lags_dp default."""
+        import json
+        sched = self._sched()
+        obj = json.loads(sched.to_json())
+        obj["version"] = 1
+        del obj["train_mode"]
+        p = str(tmp_path / "v1.json")
+        with open(p, "w") as f:
+            json.dump(obj, f)
+        loaded = Schedule.load(p)
+        assert loaded.train_mode == "lags_dp"
+        assert loaded.version == 2
+        assert loaded.leaves == sched.leaves
 
 
 class TestCostFit:

@@ -151,6 +151,59 @@ print("OK hier", loss)
 
 
 @pytest.mark.slow
+def test_hier_single_pod_matches_lags_dp_at_ratio_1():
+    """ROADMAP degenerate path: lags_hier on a 1-pod mesh (no 'pod' axis)
+    is FSDP + single-worker compression — the compressor and EF still run
+    but there is no sparse comm.  At ratio 1 block-Top-k keeps every
+    element, so one step must match lags_dp at ratio 1 on the SAME mesh:
+    both reduce to the full-batch mean-gradient step."""
+    script = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.configs import base
+from repro.launch import mesh as M, train as TR, specs as SP
+
+mesh = M.make_host_mesh(data=2, model=2)   # single pod: no 'pod' axis
+shape = base.InputShape("t", 16, 8, "train")
+
+def one_step(mode):
+    cfg = dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"),
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+        train_mode=mode, compression_ratio=1.0,
+        dtype="float32", param_dtype="float32")
+    batch = SP.concrete_batch(cfg, shape)
+    step, _specs, meta = TR.make_train_step(cfg, mesh, lr=0.1, chunk=16,
+                                            loss_chunk=16, donate=False)
+    state, _ = TR.init_state(cfg, mesh)
+    with compat.set_mesh(mesh):
+        new_state, metrics = step(state, batch)
+    return new_state, float(metrics["loss"]), meta
+
+hier_state, hier_loss, hier_meta = one_step("lags_hier")
+dp_state, dp_loss, dp_meta = one_step("lags_dp")
+
+# degenerate single-pod hier: exactly one LAGS worker, EF still carried
+assert hier_meta["n_workers"] == 1, hier_meta["n_workers"]
+ef_leaves = jax.tree.leaves(hier_state["ef"])
+assert ef_leaves and ef_leaves[0].shape[0] == 1
+# ratio 1 keeps everything -> residual exactly zero, but the EF machinery ran
+assert all(float(jnp.abs(e).max()) == 0.0 for e in ef_leaves)
+
+assert abs(hier_loss - dp_loss) < 5e-3, (hier_loss, dp_loss)
+for a, b in zip(jax.tree.leaves(hier_state["params"]),
+                jax.tree.leaves(dp_state["params"])):
+    np.testing.assert_allclose(np.asarray(jax.device_get(a), np.float32),
+                               np.asarray(jax.device_get(b), np.float32),
+                               rtol=2e-3, atol=2e-4)
+print("OK hier degenerate parity", hier_loss)
+"""
+    out = _run(script)
+    assert "OK hier degenerate parity" in out
+
+
+@pytest.mark.slow
 def test_serve_step_distributed():
     """Decode step on the host mesh for a decode-capable arch."""
     script = """

@@ -1,0 +1,375 @@
+"""repro.runtime: telemetry ring semantics, two-tier planning,
+HierSchedule serialization + ingestion, controller hysteresis, and the
+checkpoint round-trip of controller state.  Bucketing payload-size and
+cache-key satellites ride along."""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autotune import planner, profiler
+from repro.autotune import schedule as S
+from repro.core import bucketing, comm_model as cm
+from repro.runtime import hier
+from repro.runtime.controller import ReplanController, RuntimeConfig
+from repro.runtime.telemetry import Telemetry
+
+FAST = cm.TPU_V5E_ICI
+SLOW = cm.Hardware(name="degraded", alpha=50e-3, beta=1e-6, flops=FAST.flops)
+
+
+def _leaves(ds, t_backward=1e-3):
+    return [profiler.LeafSample(name=f"l{i}", d=d, backward_flops=1e4 * d,
+                                t_backward=t_backward)
+            for i, d in enumerate(ds)]
+
+
+def _synth(hw, p=8):
+    out = []
+    for n in (1 << 12, 1 << 16, 1 << 20):
+        out.append(profiler.CommSample("allgather", float(n), p,
+                                       cm.allgather_time(float(n), p, hw)))
+        out.append(profiler.CommSample("allreduce", float(n), p,
+                                       cm.allreduce_time(float(n), p, hw)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+class TestTelemetry:
+    def test_ring_capacity_and_median(self):
+        t = Telemetry(window=4)
+        for i in range(10):
+            t.record_step(i, float(i))
+        assert len(t) == 4
+        assert [s.step for s in t.step_samples()] == [6, 7, 8, 9]
+        assert t.median_step_time() == 8.0  # upper median of 6,7,8,9
+
+    def test_empty_window(self):
+        assert Telemetry().median_step_time() == 0.0
+
+    def test_tick_baselines_then_samples_on_fence(self):
+        t = Telemetry(window=8, fence_every=2)
+        assert t.tick(0) is None          # baseline only
+        assert t.tick(1) is None          # 1 < fence_every
+        s = t.tick(2)                     # fence fires
+        assert s is not None and s.fenced == 2 and s.t_step >= 0.0
+        assert len(t) == 1
+
+    def test_reset_baseline_drops_next_interval(self):
+        t = Telemetry(window=8, fence_every=1)
+        t.tick(0)
+        assert t.tick(1) is not None
+        t.reset_baseline()
+        assert t.tick(2) is None          # re-baselines, records nothing
+        assert t.tick(3) is not None
+
+    def test_state_arrays_roundtrip(self):
+        t = Telemetry(window=8)
+        t.record_step(3, 0.25, fenced=4)
+        t.record_step(7, 0.5, fenced=4)
+        t2 = Telemetry(window=8)
+        t2.load_state_arrays(t.state_arrays())
+        assert t2.step_samples() == t.step_samples()
+
+    def test_comm_window(self):
+        t = Telemetry(comm_window=4)
+        t.record_comm(_synth(FAST))       # 6 samples into a 4-ring
+        assert len(t.comm_samples()) == 4
+        assert len(t.comm_samples(latest=2)) == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: bucketing payload bytes from value dtype
+# ---------------------------------------------------------------------------
+
+class TestBucketPayload:
+    def test_bytes_per_elem_by_dtype(self):
+        assert bucketing.payload_bytes_per_elem("float32") == 8
+        assert bucketing.payload_bytes_per_elem("bfloat16") == 6
+        assert bucketing.payload_bytes_per_elem(np.float64) == 12
+
+    def test_bf16_packs_more_layers_per_bucket(self):
+        ks = [100] * 12
+        fp32 = bucketing.assign_buckets(ks, target_bytes=2400)   # 3/bucket
+        bf16 = bucketing.assign_buckets(ks, target_bytes=2400,
+                                        value_dtype="bfloat16")  # 4/bucket
+        assert len(fp32) == 4 and len(bf16) == 3
+        assert all(b.nbytes == 600 * len(b.layer_indices) for b in bf16)
+
+    def test_explicit_override_wins(self):
+        got = bucketing.assign_buckets([10], bytes_per_elem=100)
+        assert got[0].nbytes == 1000
+
+
+# ---------------------------------------------------------------------------
+# satellite: cache key includes train mode + tier count
+# ---------------------------------------------------------------------------
+
+def test_cache_path_keyed_by_mode_and_tiers(tmp_path):
+    a = S.cache_path(str(tmp_path), "arch", "shape", 16, "hw")
+    b = S.cache_path(str(tmp_path), "arch", "shape", 16, "hw",
+                     train_mode="lags_hier", tiers=2)
+    c = S.cache_path(str(tmp_path), "arch", "shape", 16, "hw",
+                     train_mode="lags_hier")
+    assert len({a, b, c}) == 3
+
+
+# ---------------------------------------------------------------------------
+# hier planning + HierSchedule serialization
+# ---------------------------------------------------------------------------
+
+class TestHierPlanning:
+    def _hs(self):
+        return hier.plan_hier_schedule(
+            _leaves([4096] * 4), p_inner=4, p_outer=8,
+            hw_inner=FAST, hw_outer=SLOW, arch="t", shape="u")
+
+    def test_tiers_planned_against_own_wire(self):
+        hs = self._hs()
+        # fast ICI hides the dense exchange (all but the zero-budget head)
+        assert all(lp.ratio == 1.0 for lp in hs.inner.leaves[:-1])
+        # ms-latency outer wire cannot: every leaf plans sparse
+        assert all(lp.ratio > 1.0 for lp in hs.outer.leaves)
+        assert hs.inner.train_mode == hs.outer.train_mode == "lags_hier"
+        assert hs.inner.n_workers == 4 and hs.outer.n_workers == 8
+
+    def test_single_pod_outer_degenerates_dense(self):
+        hs = hier.plan_hier_schedule(
+            _leaves([4096] * 4), p_inner=4, p_outer=1,
+            hw_inner=FAST, hw_outer=SLOW)
+        assert all(lp.ratio == 1.0 for lp in hs.outer.leaves)
+
+    def test_json_roundtrip_identity(self, tmp_path):
+        hs = self._hs()
+        p = hs.save(str(tmp_path / "h.json"))
+        assert S.HierSchedule.load(p) == hs
+        assert S.load_any(p) == hs
+
+    def test_load_any_dispatches_both_kinds(self, tmp_path):
+        hs = self._hs()
+        flat = planner.plan_schedule(_leaves([64, 128]), p=4, hw=FAST)
+        assert S.schedule_from_json(flat.to_json()) == flat
+        with pytest.raises(ValueError, match="hier"):
+            S.Schedule.from_json(hs.to_json())
+        with pytest.raises(ValueError, match="not a hier"):
+            S.HierSchedule.from_json(flat.to_json())
+
+    def test_tier_leaf_mismatch_rejected(self):
+        a = planner.plan_schedule(_leaves([64, 128]), p=4, hw=FAST)
+        b = planner.plan_schedule(_leaves([64, 128, 256]), p=8, hw=SLOW)
+        with pytest.raises(ValueError, match="tiers"):
+            S.HierSchedule(arch="t", shape="u", inner=a, outer=b)
+
+    def test_ks_tree_uses_outer_tier(self):
+        hs = self._hs()
+        tree = {f"l{i}": np.zeros(4096, np.float32) for i in range(4)}
+        ks = hs.ks_tree(tree)
+        by = hs.outer.by_name
+        for (name, _), k in zip(S.leaf_entries(tree), jax.tree.leaves(ks)):
+            assert k == max(1, round(4096 / by[name].ratio))
+
+    def test_tier_hardware_fit_and_fallback(self):
+        hw = hier.tier_hardware(_synth(SLOW), base=FAST, name="fit")
+        assert abs(hw.alpha - SLOW.alpha) / SLOW.alpha < 0.05
+        assert abs(hw.beta - SLOW.beta) / SLOW.beta < 0.05
+        assert hw.flops == FAST.flops   # compute spec stays the base's
+        fb = hier.tier_hardware([], base=FAST, name="fb")
+        assert (fb.alpha, fb.beta) == (FAST.alpha, FAST.beta)
+
+
+# ---------------------------------------------------------------------------
+# ingestion through launch.train
+# ---------------------------------------------------------------------------
+
+def _model_cfg(mode="lags_hier"):
+    from repro.configs import base
+    return dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+        dtype="float32", param_dtype="float32",
+        train_mode=mode, compression_ratio=1.0)
+
+
+def _hier_sched_for(sds):
+    leaves = [profiler.LeafSample(name=n, d=int(np.prod(l.shape)),
+                                  backward_flops=4.0 * int(np.prod(l.shape)),
+                                  t_backward=1e-3)
+              for n, l in reversed(S.leaf_entries(sds))]
+    return hier.plan_hier_schedule(leaves, p_inner=2, p_outer=2,
+                                   hw_inner=FAST, hw_outer=SLOW,
+                                   arch="tiny", shape="unit")
+
+
+class TestHierIngestion:
+    def test_make_train_step_consumes_hier_schedule(self):
+        from repro.launch import mesh as M, train as TR
+        cfg = _model_cfg("lags_hier")
+        mesh = M.make_host_mesh(data=1, model=1)
+        sds, _ = TR.model_shapes_and_axes(cfg)
+        hs = _hier_sched_for(sds)
+        _, _, meta = TR.make_train_step(cfg, mesh, schedule=hs, donate=False)
+        assert meta["ks"] is not None
+        by = hs.outer.by_name
+        for (n, leaf), k in zip(S.leaf_entries(sds),
+                                jax.tree.leaves(meta["ks"])):
+            assert k == max(1, round(by[n].d / by[n].ratio))
+
+    def test_non_hier_mode_rejects_hier_schedule(self):
+        from repro.launch import mesh as M, train as TR
+        cfg = _model_cfg("lags_dp")
+        mesh = M.make_host_mesh(data=1, model=1)
+        sds, _ = TR.model_shapes_and_axes(cfg)
+        hs = _hier_sched_for(sds)
+        with pytest.raises(ValueError, match="lags_hier"):
+            TR.make_train_step(cfg, mesh, schedule=hs, donate=False)
+
+    def test_flat_schedule_provenance_enforced(self):
+        """A lags_dp-planned flat schedule must not silently feed the
+        cross-pod exchange (and a hier-tier flat plan must not feed dp)."""
+        from repro.launch import mesh as M, train as TR
+        mesh = M.make_host_mesh(data=1, model=1)
+        sds, _ = TR.model_shapes_and_axes(_model_cfg("lags_dp"))
+        hs = _hier_sched_for(sds)   # tiers carry train_mode="lags_hier"
+        dp_flat = dataclasses.replace(hs.outer, train_mode="lags_dp")
+        with pytest.raises(ValueError, match="planned for"):
+            TR.make_train_step(_model_cfg("lags_hier"), mesh,
+                               schedule=dp_flat, donate=False)
+        with pytest.raises(ValueError, match="planned for"):
+            TR.make_train_step(_model_cfg("lags_dp"), mesh,
+                               schedule=hs.outer, donate=False)
+        # the inner (ICI-priced, near-dense) tier must never feed the
+        # cross-pod exchange, even though its train_mode matches
+        assert hs.inner.tier == "inner" and hs.outer.tier == "outer"
+        with pytest.raises(ValueError, match="inner"):
+            TR.make_train_step(_model_cfg("lags_hier"), mesh,
+                               schedule=hs.inner, donate=False)
+        # matching provenance passes in both modes
+        _, _, m1 = TR.make_train_step(_model_cfg("lags_hier"), mesh,
+                                      schedule=hs.outer, donate=False)
+        _, _, m2 = TR.make_train_step(_model_cfg("lags_dp"), mesh,
+                                      schedule=dp_flat, donate=False)
+        assert m1["ks"] is not None and m2["ks"] is not None
+
+
+# ---------------------------------------------------------------------------
+# controller: hysteresis + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def _controller(mode="lags_dp", probe=None, **rkw):
+    from repro.launch import mesh as M
+    cfg = _model_cfg(mode)
+    mesh = M.make_host_mesh(data=1, model=1)
+    rcfg = RuntimeConfig(replan_every=10, fence_every=1,
+                         swap_threshold=0.05, min_step_samples=1, **rkw)
+    ctl = ReplanController(cfg, mesh, rcfg=rcfg, comm_probe=probe,
+                           chunk=16, loss_chunk=16)
+    # single-device mesh: pretend the data axis had 8 workers so the
+    # planner/predictor see real collective costs (the probe is synthetic
+    # anyway; plan ingestion itself is worker-count independent)
+    ctl.meta["n_workers"] = 8
+    for i in range(4):
+        ctl.telemetry.record_step(i, 0.05)
+    return ctl
+
+
+class TestControllerHysteresis:
+    def test_dense_rejected_swap_then_swap_on_shift(self):
+        wire = {"hw": FAST}
+        ctl = _controller(probe=lambda mesh, axes: _synth(wire["hw"]))
+
+        ev1 = ctl.maybe_replan(10)
+        assert not ev1.swapped                 # stable wire: no churn
+        assert ev1.improvement < 0.05
+        assert ctl.schedule is None            # static plan still live
+
+        wire["hw"] = SLOW                      # injected bandwidth shift
+        ctl.meta["n_workers"] = 8
+        ev2 = ctl.maybe_replan(20)
+        assert ev2.swapped
+        assert ev2.improvement > 0.05
+        assert ctl.schedule is not None
+        assert any(lp.ratio > 1.0 for lp in ctl.schedule.leaves)
+        assert ev2.t_pred_candidate < ev2.t_pred_current
+
+        ctl.meta["n_workers"] = 8
+        ev3 = ctl.maybe_replan(30)             # same slow wire again
+        assert not ev3.swapped                 # re-plan ~= live schedule
+        assert ctl.history == [ev1, ev2, ev3]
+
+    def test_dense_mode_rejected(self):
+        with pytest.raises(ValueError, match="dense"):
+            _controller(mode="dense")
+
+    def test_due_respects_cadence_and_min_samples(self):
+        ctl = _controller(probe=lambda mesh, axes: [])
+        ctl._step_count = 10
+        assert ctl._due()
+        ctl._step_count = 11
+        assert not ctl._due()
+        ctl.telemetry._steps.clear()
+        ctl._step_count = 10
+        assert not ctl._due()
+
+
+class TestControllerCheckpoint:
+    def test_state_roundtrip(self, tmp_path):
+        wire = {"hw": SLOW}
+        ctl = _controller(probe=lambda mesh, axes: _synth(wire["hw"]))
+        ev = ctl.maybe_replan(10)
+        assert ev.swapped
+        ctl._step_count = 17
+        path = ctl.save_state(str(tmp_path / "runtime"))
+
+        ctl2 = _controller(probe=lambda mesh, axes: [])
+        # pre-restore samples (a different wire epoch) must not survive
+        ctl2.telemetry.record_comm(_synth(FAST))
+        ctl2.restore_state(path)
+        assert ctl2._step_count == 17
+        assert ctl2.history == ctl.history
+        assert ctl2.schedule == ctl.schedule
+        assert ctl2.telemetry.step_samples() == ctl.telemetry.step_samples()
+        assert ctl2.telemetry.comm_samples() == ctl.telemetry.comm_samples()
+        # the restored schedule is live in the rebuilt step
+        assert ctl2.meta["ks"] is not None
+
+    def test_restore_with_no_saved_schedule_clears_live_one(self, tmp_path):
+        """A pre-swap checkpoint (schedule=None) must not leave a
+        constructor-supplied schedule live after restore."""
+        from repro.launch import train as TR
+        ctl = _controller(probe=lambda mesh, axes: [])
+        path = ctl.save_state(str(tmp_path / "runtime"))   # schedule None
+        ctl2 = _controller(probe=lambda mesh, axes: [])
+        sds, _ = TR.model_shapes_and_axes(ctl2.cfg)
+        leaves = [profiler.LeafSample(name=n, d=int(np.prod(l.shape)),
+                                      backward_flops=4.0 *
+                                      int(np.prod(l.shape)))
+                  for n, l in reversed(S.leaf_entries(sds))]
+        ctl2.schedule = planner.plan_schedule(leaves, p=4, hw=SLOW)
+        ctl2.restore_state(path)
+        assert ctl2.schedule is None
+        assert ctl2.meta["schedule"] is None   # static plan is live again
+
+    def test_restore_rejects_mode_mismatch(self, tmp_path):
+        ctl = _controller(probe=lambda mesh, axes: [])
+        path = ctl.save_state(str(tmp_path / "runtime"))
+        meta = json.load(open(path + ".json"))
+        meta["metadata"]["train_mode"] = "lags_hier"
+        json.dump(meta, open(path + ".json", "w"))
+        with pytest.raises(ValueError, match="train_mode"):
+            ctl.restore_state(path)
+
+    def test_hier_schedule_survives_roundtrip(self, tmp_path):
+        from repro.launch import train as TR
+        ctl = _controller(mode="lags_hier", probe=lambda mesh, axes: [])
+        sds, _ = TR.model_shapes_and_axes(ctl.cfg)
+        ctl.schedule = _hier_sched_for(sds)
+        path = ctl.save_state(str(tmp_path / "runtime"))
+        ctl2 = _controller(mode="lags_hier", probe=lambda mesh, axes: [])
+        ctl2.restore_state(path)
+        assert isinstance(ctl2.schedule, S.HierSchedule)
+        assert ctl2.schedule == ctl.schedule
