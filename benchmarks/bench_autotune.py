@@ -11,7 +11,7 @@ real accelerators unchanged):
      (leaf structure via eval_shape — no allocation) and for the smoke
      model (measured budgets);
   4. JSON round-trip the full-size ``Schedule`` and verify identity;
-  5. consume it through ``launch.train.make_train_step`` (the
+  5. consume it through ``repro.api.build_train_step`` (the
      ``ks_from_ratios_tree`` ingestion point) and check the per-leaf
      ratios differentiate embedding vs attention vs FFN leaves;
   6. run measured steps of the smoke model under its schedule and report
@@ -128,9 +128,10 @@ def run(argv=None) -> int:
         bad += 1
 
     # ---- 5. consume through launch.train (ks_from_ratios_tree) ------------
-    header("autotune consume: make_train_step(schedule=...)")
-    _, _, meta = TR.make_train_step(full_cfg, mesh, schedule=loaded,
-                                    donate=False)
+    header("autotune consume: build_train_step(RunConfig(schedule=...))")
+    from repro import api
+    _, _, meta = api.build_train_step(
+        full_cfg, mesh, api.RunConfig(schedule=loaded, donate=False))
     ks = meta["ks"]
     if ks is None:
         emit("autotune/consume/FAILED_no_ks", 0, "")
@@ -182,9 +183,11 @@ def run(argv=None) -> int:
                                                    2 * prof.n_workers,
                                                    "train"))
     with compat.set_mesh(mesh):
-        step_fn, _, meta_s = TR.make_train_step(
-            cfg, mesh, schedule=smoke_sched, donate=False,
-            chunk=min(1024, args.seq), loss_chunk=min(512, args.seq))
+        step_fn, _, meta_s = api.build_train_step(
+            cfg, mesh,
+            api.RunConfig(schedule=smoke_sched, donate=False,
+                          chunk=min(1024, args.seq),
+                          loss_chunk=min(512, args.seq)))
         state, _ = TR.init_state(cfg, mesh)
         t_achieved = profiler._timed(step_fn, state, batch, iters=args.steps)
     emit("autotune/achieved/t_step_scheduled_s", t_achieved, "measured")

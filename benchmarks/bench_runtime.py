@@ -16,7 +16,8 @@ Two sections:
   2. ``lags_hier`` on a (pod=2, data=2, model=2) mesh — two-tier: the
      intra-pod (ICI) probe stays fast, only the cross-pod (DCN) probe
      degrades; the swapped-in schedule is a ``HierSchedule`` whose JSON
-     round-trip and ``make_train_step`` consumption are checked.
+     round-trip and ``repro.api.build_train_step`` consumption are
+     checked.
 
   PYTHONPATH=src python -m benchmarks.bench_runtime [--quick]
 
@@ -99,12 +100,12 @@ def run(argv=None) -> int:
     args = ap.parse_args(argv)
 
     import numpy as np
+    from repro import api
     from repro.autotune import schedule as SCH
     from repro.configs import base
     from repro.core import comm_model as cm
     from repro.launch import mesh as M
-    from repro.launch import train as TR
-    from repro.runtime import ReplanController, RuntimeConfig
+    from repro.runtime import RuntimeConfig
 
     bad = 0
     replan_every = 3 if args.quick else 5
@@ -138,10 +139,10 @@ def run(argv=None) -> int:
         p = M.n_workers(mesh, tuple(axes))
         return _synth_samples(wire["hw"], p) if p > 1 else []
 
+    run = api.RunConfig(lr=0.1, chunk=16, loss_chunk=16)
     cfg = small_cfg("lags_dp")
-    ctl = ReplanController(cfg, M.make_host_mesh(data=4, model=2),
-                           rcfg=rcfg, comm_probe=probe_dp, lr=0.1,
-                           chunk=16, loss_chunk=16)
+    ctl = api.Session(cfg, run, M.make_host_mesh(data=4, model=2)) \
+        .controller(rcfg=rcfg, comm_probe=probe_dp)
     res = _drive("dp", ctl, cfg, seq=16, global_batch=8, steps=steps,
                  shift_at=shift_at,
                  shift_fn=lambda: wire.update(hw=slow))
@@ -197,9 +198,8 @@ def run(argv=None) -> int:
         return _synth_samples(hw, p)
 
     hcfg = small_cfg("lags_hier")
-    hctl = ReplanController(hcfg, M.make_host_mesh(data=2, model=2, pod=2),
-                            rcfg=rcfg, comm_probe=probe_hier, lr=0.1,
-                            chunk=16, loss_chunk=16)
+    hctl = api.Session(hcfg, run, M.make_host_mesh(data=2, model=2, pod=2)) \
+        .controller(rcfg=rcfg, comm_probe=probe_hier)
     hres = _drive("hier", hctl, hcfg, seq=16, global_batch=8,
                   steps=steps, shift_at=shift_at,
                   shift_fn=lambda: wires.update(pod=slow))
@@ -236,7 +236,7 @@ def run(argv=None) -> int:
                      f"outer={_mean_ratio(hs.outer):.3g} "
                      f"dense={inner_dense}/{len(hs.inner.leaves)}")
                 bad += 1
-            # JSON round-trip + consumption through make_train_step
+            # JSON round-trip + consumption through the api façade
             path = SCH.cache_path(args.out, hcfg.name, "runtime", 2,
                                   "degraded_dcn", train_mode="lags_hier",
                                   tiers=2)
@@ -245,11 +245,12 @@ def run(argv=None) -> int:
             ok = loaded == hs
             emit("runtime/hier/schedule_roundtrip_identity", int(ok), path)
             bad += 0 if ok else 1
-            _, _, meta = TR.make_train_step(
-                hcfg, hctl.mesh, schedule=loaded, donate=False,
-                chunk=16, loss_chunk=16)
+            _, _, meta = api.build_train_step(
+                hcfg, hctl.mesh,
+                api.RunConfig(schedule=loaded, donate=False,
+                              chunk=16, loss_chunk=16))
             consumed = meta["ks"] is not None
-            emit("runtime/hier/consumed_by_make_train_step", int(consumed),
+            emit("runtime/hier/consumed_by_build_train_step", int(consumed),
                  "outer-tier ks ingested in lags_hier mode")
             bad += 0 if consumed else 1
     if not np.isfinite(hres["loss"]):

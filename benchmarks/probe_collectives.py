@@ -41,8 +41,9 @@ def main(argv=None):
     shape = base.INPUT_SHAPES[args.shape]
     with compat.set_mesh(mesh):
         if shape.kind == "train":
-            step, state_specs, meta = TR.make_train_step(
-                cfg, mesh, method=args.mode)
+            from repro import api
+            step, state_specs, meta = api.build_train_step(
+                cfg, mesh, api.RunConfig(mode=args.mode))
             bsd = SP.train_batch_specs(cfg, shape)
             bps = TR.batch_pspec(bsd, mesh, M.data_axis_names(mesh))
             from jax.sharding import NamedSharding

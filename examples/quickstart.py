@@ -1,8 +1,9 @@
 """Quickstart: LAGS-SGD vs Dense-SGD on a tiny language model.
 
-Runs in ~1 minute on CPU.  Demonstrates the public API surface:
-configs -> model init -> SimTrainer with the LAGS exchange -> the
-Assumption-1 delta metric (Eq. 20) recorded live.
+Runs in ~1 minute on CPU.  Demonstrates the public ``repro.api``
+surface: configs -> model init -> ``Session``/``RunConfig`` ->
+``simulator()`` with the LAGS exchange -> the Assumption-1 delta metric
+(Eq. 20) recorded live.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +11,10 @@ import dataclasses
 
 import jax
 
+from repro import api
 from repro.configs import base
 from repro.data import synthetic
 from repro.models import transformer as T
-from repro.training import train_loop as TL
 
 P = 4          # simulated workers
 STEPS = 40
@@ -31,17 +32,17 @@ def main():
     def loss_fn(p, b):
         return T.loss_fn(p, cfg, b, chunk=16, loss_chunk=16)
 
-    for method in ("dense", "lags"):
-        tcfg = TL.TrainConfig(method=method, compression_ratio=8.0, lr=0.3,
-                              measure_delta=(method == "lags"))
-        tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+    for mode in ("dense", "lags_dp"):
+        run = api.RunConfig(mode=mode, ratio=8.0, lr=0.3,
+                            measure_delta=(mode == "lags_dp"))
+        tr = api.Session(cfg, run).simulator(loss_fn, params, n_workers=P)
         hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16), STEPS,
                       log_every=10)
         for h in hist:
             extra = (f"  delta_max={h['delta_max']:.3f} (Assumption 1 "
                      f"holds: {h['delta_max'] <= 1.0})"
                      if "delta_max" in h else "")
-            print(f"[{method:5s}] step {h['step']:3d}  "
+            print(f"[{mode:8s}] step {h['step']:3d}  "
                   f"loss {h['loss']:.4f}{extra}")
     print("done — both methods converge toward the entropy floor; "
           "LAGS ships ~1/8 of the gradients.")

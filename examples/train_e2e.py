@@ -2,7 +2,7 @@
 
 Trains a ~100M-parameter llama-family model with LAGS-SGD on a multi-device
 host mesh (data x model), using the SAME production path as the dry-run:
-``repro.launch.train.make_train_step`` (partial-auto shard_map, block-LAGS
+``repro.api.Session`` over the partial-auto shard_map step (block-LAGS
 sparse exchange with error feedback), synthetic Markov-LM data, periodic
 checkpointing and a JSONL metrics log.
 
@@ -30,12 +30,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import api, compat
 from repro.checkpoint import io as ckpt
 from repro.configs import base
 from repro.data import synthetic
 from repro.launch import mesh as M
-from repro.launch import train as TR
 
 
 PRESETS = {
@@ -90,22 +89,22 @@ def main():
         from repro.autotune import schedule as SCH
         schedule = SCH.load_any(args.hier_schedule)
 
+    sess = api.Session(
+        cfg,
+        api.RunConfig(mode=args.method, ratio=args.ratio, lr=args.lr,
+                      schedule=schedule, chunk=min(1024, args.seq),
+                      loss_chunk=min(512, args.seq), donate=False),
+        mesh=mesh)
     controller = None
     if args.replan_every > 0:
-        from repro.runtime import ReplanController, RuntimeConfig
-        controller = ReplanController(
-            cfg, mesh,
+        from repro.runtime import RuntimeConfig
+        controller = sess.controller(
             rcfg=RuntimeConfig(replan_every=args.replan_every,
-                               swap_threshold=args.swap_threshold),
-            schedule=schedule, lr=args.lr,
-            chunk=min(1024, args.seq), loss_chunk=min(512, args.seq))
+                               swap_threshold=args.swap_threshold))
         step_fn, meta = controller.step, controller.meta
     else:
-        step_fn, _state_specs, meta = TR.make_train_step(
-            cfg, mesh, lr=args.lr, ratio=args.ratio, schedule=schedule,
-            chunk=min(1024, args.seq), loss_chunk=min(512, args.seq),
-            donate=False)
-    state, _ = TR.init_state(cfg, mesh)
+        step_fn, _state_specs, meta = sess.train_step()
+    state, _ = sess.init_state()
     n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
     print(f"arch={cfg.name} preset={args.preset}: {n_params / 1e6:.1f}M "
           f"params | mesh {mesh.devices.shape} {mesh.axis_names} | "

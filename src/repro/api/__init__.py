@@ -1,0 +1,52 @@
+"""``repro.api`` — the one public façade over the training surfaces.
+
+The paper's family of gradient-exchange strategies (Dense, SLGS
+single-layer Top-k, layer-wise adaptive LAGS, hierarchical LAGS) is
+swappable behind a single interface:
+
+  * :class:`RunConfig` — one typed knob-set (mode/ratio/lr/schedule/...)
+    replacing the ``method`` vs ``train_mode`` string split and the
+    ``make_train_step`` kwarg sprawl.  Legacy ``"lags"`` spelling maps to
+    canonical ``"lags_dp"`` via :func:`canonical_mode`.
+  * :func:`register_exchange` / :func:`register_compressor` — string ->
+    factory registries; new strategies and compressors plug in without
+    touching ``launch.train`` or ``training.train_loop``.
+  * :class:`Session` — composes config -> mesh -> exchange -> schedule ->
+    optional ``ReplanController``; both :meth:`Session.train_step`
+    (distributed shard_map step) and :meth:`Session.simulator`
+    (leading-P ``SimTrainer``) are built from the same
+    :class:`ExchangeSpec`, so a run validated in simulation deploys
+    unchanged.
+
+Schedule ingestion (autotune/runtime) is validated by one shared
+contract, ``repro.autotune.schedule.validate_for``, on every path.
+
+Quickstart::
+
+    from repro import api
+    from repro.launch import mesh as M
+
+    run = api.RunConfig(mode="lags_dp", ratio=100.0, lr=0.25)
+    sess = api.Session(cfg, run, mesh=M.make_host_mesh(data=4, model=2))
+    step_fn, state_specs, meta = sess.train_step()
+    state, _ = sess.init_state()
+    state, metrics = step_fn(state, batch)
+
+The legacy entry points (``launch.train.make_train_step``,
+``launch.train.make_exchange``, ``training.make_exchange``) remain as
+``DeprecationWarning``-emitting shims over this module.
+"""
+from repro.api.config import RunConfig, canonical_mode
+from repro.api.registry import (ExchangeSpec, ExchangeStrategy,
+                                build_exchange, compressor_names,
+                                exchange_names, get_compressor,
+                                get_exchange, register_compressor,
+                                register_exchange)
+from repro.api.session import Session, build_train_step
+
+__all__ = [
+    "RunConfig", "canonical_mode", "ExchangeSpec", "ExchangeStrategy",
+    "build_exchange", "compressor_names", "exchange_names",
+    "get_compressor", "get_exchange", "register_compressor",
+    "register_exchange", "Session", "build_train_step",
+]

@@ -1,0 +1,108 @@
+"""``RunConfig`` — the one typed knob-set for building train steps.
+
+The repo historically grew two vocabularies for the same family of
+exchange strategies: the simulation surface (``training.TrainConfig``)
+spoke ``method`` strings (``"dense" | "slgs" | "lags"``) while the
+distributed surface (``launch.train.make_train_step``) spoke
+``train_mode`` strings (``"dense" | "slgs" | "lags_dp" | "lags_hier"``)
+plus nine loose kwargs.  ``RunConfig`` absorbs the kwarg sprawl and
+:func:`canonical_mode` reconciles the string split: the canonical
+vocabulary is the ``train_mode`` one, and the legacy sim-only ``"lags"``
+is an alias for ``"lags_dp"`` (simulating P data-parallel workers on one
+device IS the lags_dp exchange, leading-P layout).
+
+``RunConfig`` is pure data — no jax imports, no registry lookups — so it
+can be constructed anywhere (configs, CLIs, tests) without import-order
+concerns.  Mode validity is checked at build time against the exchange
+registry (:mod:`repro.api.registry`), not here, so third-party modes
+registered later are first-class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+#: Legacy method-string spellings -> canonical train-mode vocabulary.
+MODE_ALIASES: dict[str, str] = {"lags": "lags_dp"}
+
+
+def canonical_mode(mode: str) -> str:
+    """Map a legacy ``method`` spelling onto the canonical mode name.
+
+    ``"lags"`` (the sim surface's spelling) -> ``"lags_dp"``; canonical
+    names pass through unchanged.  Unknown names also pass through — the
+    registry lookup is the single point that rejects them, with an error
+    listing what IS registered.
+    """
+    return MODE_ALIASES.get(mode, mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Everything about HOW to train that is not the model architecture.
+
+    One instance drives both execution surfaces: ``Session.train_step()``
+    (the distributed partial-auto shard_map step) and
+    ``Session.simulator()`` (the leading-P ``SimTrainer``), so a run can
+    be validated in simulation and deployed distributed without
+    re-translating knobs between two config types.
+
+    ``mode=None`` / ``ratio=None`` defer to the model config's
+    ``train_mode`` / ``compression_ratio`` at build time.
+    """
+    # exchange strategy (canonical vocabulary; legacy "lags" accepted)
+    mode: str | None = None
+    ratio: float | None = None
+    compressor: str = "topk_exact"
+    block_size: int = 4096
+    # optional autotuned per-leaf plan (repro.autotune Schedule /
+    # HierSchedule, or anything with a ``ks_tree(params_like)`` method);
+    # validated against the mode/mesh via ``autotune.schedule.validate_for``
+    schedule: Any = None
+    # optimizer
+    lr: float = 0.01
+    lr_schedule: Callable[[Any], Any] | None = None   # step -> lr
+    momentum: float = 0.0
+    momentum_correction: float = 0.0   # DGC-style, sim path only
+    # compute shape
+    chunk: int = 1024
+    loss_chunk: int = 512
+    donate: bool = True
+    # instrumentation / determinism
+    measure_delta: bool = False        # Eq. 20 metric, sim path only
+    seed: int = 0                      # PRNG stream for key-needing compressors
+
+    def __post_init__(self):
+        if self.mode is not None:
+            object.__setattr__(self, "mode", canonical_mode(self.mode))
+
+    def resolved_mode(self, cfg=None) -> str:
+        """Canonical mode, falling back to ``cfg.train_mode``."""
+        if self.mode is not None:
+            return self.mode
+        if cfg is not None:
+            return canonical_mode(cfg.train_mode)
+        return "lags_dp"
+
+    def resolved_ratio(self, cfg=None) -> float:
+        if self.ratio is not None:
+            return float(self.ratio)
+        if cfg is not None:
+            return float(cfg.compression_ratio)
+        return 250.0   # the legacy TrainConfig default
+
+    def lr_at(self, step):
+        """Learning rate at ``step`` (jax scalar ok) — schedule wins."""
+        if self.lr_schedule is not None:
+            return self.lr_schedule(step)
+        return self.lr
+
+    def key_at(self, step):
+        """Per-step PRNG stream for key-needing compressors (randk).
+
+        The ONE seed->step derivation both surfaces use, so sim and
+        distributed draw identical streams for the same (seed, step);
+        exchanges fold in leaf and worker indices themselves.
+        """
+        import jax   # lazy: keep this module importable without jax
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), step)

@@ -1,0 +1,216 @@
+"""String -> factory registries for exchange strategies and compressors.
+
+The paper's contribution is a *family* of gradient-exchange strategies
+(Dense, single-layer Top-k, layer-wise adaptive LAGS) meant to be
+compared behind one interface.  Before this module, adding a strategy
+meant editing two hard-wired ``if/elif`` chains (``launch.train._mode``
+and ``training.make_exchange``); now a strategy is a named entry:
+
+    from repro import api
+
+    @api.register_exchange("my_exchange")
+    def _build(spec: api.ExchangeSpec):
+        return MyExchange(ks=spec.ks, ...)
+
+and ``RunConfig(mode="my_exchange")`` reaches it from both the
+distributed and the simulation surface.  The :class:`ExchangeSpec` a
+factory receives is the SAME object on both surfaces — only ``sim``
+differs — which is what keeps the two numerically comparable.
+
+Compressors (the per-vector Top-k operators the strategies call) have
+their own registry, backed by ``core.compressors.REGISTRY`` so existing
+names keep working; :func:`register_compressor` adds new ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.api.config import canonical_mode
+from repro.core import compressors as C
+from repro.core import lags
+
+
+# ---------------------------------------------------------------------------
+# exchange-strategy registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeSpec:
+    """Everything a strategy factory may need to build an exchange.
+
+    Both surfaces construct one: the distributed step builder fills
+    ``row_axes`` / ``shard_dims`` from the mesh and sets ``sim=False``;
+    ``SimTrainer`` sets ``sim=True``.  ``ks`` (from an autotuned
+    ``Schedule``) overrides the scalar ``ratio`` when present.
+    """
+    mode: str
+    params_like: Any                 # pytree of arrays / ShapeDtypeStructs
+    ratio: float = 250.0
+    ks: Any = None                   # per-leaf k^(l) override (schedule)
+    block_size: int = 4096
+    compressor: str = "topk_exact"
+    sim: bool = False                # leading-P simulation vs distributed
+    n_workers: int = 1
+    # distributed-only layout hints (see lags.BlockLAGSExchange)
+    row_axes: tuple = ()
+    shard_dims: Any = None
+
+    def resolved_ks(self):
+        """The per-leaf budget tree: schedule override or scalar ratio."""
+        if self.ks is not None:
+            return self.ks
+        return lags.ks_from_ratio(self.params_like, self.ratio)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeStrategy:
+    """A registered strategy: factory + how it maps onto mesh axes.
+
+    ``axes`` tells the distributed step builder which mesh axes carry the
+    exchange ("worker" axes) and which run shard_map-MANUAL:
+
+      * ``"data_manual"`` — manual over the data-parallel axes
+        ('pod', 'data'); workers = those axes (lags_dp / dense / slgs).
+      * ``"pod_auto"``    — pure-auto GSPMD with a leading vmap'd 'pod'
+        worker dim; nothing manual (lags_hier: FSDP intra-pod, sparse
+        cross-pod).
+      * ``"none"``        — single worker, no exchange axes.
+    """
+    name: str
+    factory: Callable[[ExchangeSpec], Any]
+    axes: str = "data_manual"
+
+
+_EXCHANGES: dict[str, ExchangeStrategy] = {}
+
+
+def register_exchange(name: str, *, axes: str = "data_manual"):
+    """Decorator: register ``factory(spec) -> exchange`` under ``name``."""
+    if axes not in ("data_manual", "pod_auto", "none"):
+        raise ValueError(f"unknown axes plan {axes!r}")
+
+    def deco(factory):
+        _EXCHANGES[name] = ExchangeStrategy(name=name, factory=factory,
+                                            axes=axes)
+        return factory
+    return deco
+
+
+def get_exchange(name: str) -> ExchangeStrategy:
+    """Look up a strategy by (canonicalized) name.
+
+    Raises ``KeyError`` whose message lists the registered names, so a
+    typo'd ``RunConfig.mode`` is self-diagnosing.
+    """
+    key = canonical_mode(name)
+    if key not in _EXCHANGES:
+        raise KeyError(f"unknown exchange strategy {name!r}; registered: "
+                       f"{sorted(_EXCHANGES)}")
+    return _EXCHANGES[key]
+
+
+def exchange_names() -> list[str]:
+    return sorted(_EXCHANGES)
+
+
+def build_exchange(spec: ExchangeSpec):
+    """``spec`` -> exchange object, through the registry."""
+    return get_exchange(spec.mode).factory(spec)
+
+
+def resolve_schedule_ks(schedule, mode: str, params_like, *,
+                        n_workers: int | None = None):
+    """Validate + ingest an autotuned schedule: the ONE sequence both
+    surfaces run (``validate_for`` then ``ks_tree``).  Returns the
+    per-leaf k tree, or None when there is nothing to ingest (no
+    schedule, or a dense mode)."""
+    if schedule is None or mode == "dense":
+        return None
+    # lazy: repro.autotune.__init__ pulls in the profiler, which imports
+    # the train-step builder back
+    from repro.autotune import schedule as SCH
+    SCH.validate_for(schedule, mode, n_workers=n_workers)
+    return schedule.ks_tree(params_like)
+
+
+# ---------------------------------------------------------------------------
+# built-in strategies (the paper's family + the beyond-paper hier mode)
+# ---------------------------------------------------------------------------
+
+@register_exchange("dense")
+def _dense_factory(spec: ExchangeSpec):
+    """Vanilla S-SGD baseline: dense mean over workers."""
+    return lags.DenseExchange()
+
+
+@register_exchange("slgs")
+def _slgs_factory(spec: ExchangeSpec):
+    """Single-layer (whole-model-vector) global Top-k baseline."""
+    d_total = sum(lags._size(x) for x in jax.tree.leaves(spec.params_like))
+    return lags.SLGSExchange(
+        k_total=max(1, int(round(d_total / spec.ratio))),
+        compressor_name=spec.compressor)
+
+
+def _lags_factory(spec: ExchangeSpec):
+    """Layer-wise adaptive sparsification (the paper).
+
+    Simulation uses the exact per-leaf compressor (``LAGSExchange``, the
+    semantics reference); the distributed step uses the shard-aligned
+    block layout (``BlockLAGSExchange``) so selection/scatter stay
+    collective-free under GSPMD.
+    """
+    ks = spec.resolved_ks()
+    if spec.sim:
+        return lags.LAGSExchange(ks=ks, compressor_name=spec.compressor)
+    if spec.compressor != "topk_exact":
+        # BlockLAGSExchange's selection operator IS block top-k (that is
+        # what makes it collective-free); a run validated in simulation
+        # under another compressor deploys with a different operator
+        import warnings
+        warnings.warn(
+            f"distributed lags ignores compressor={spec.compressor!r}: "
+            f"the production exchange selects via block top-k "
+            f"(BlockLAGSExchange); simulate with compressor='topk_exact' "
+            f"for the closest semantics match", stacklevel=3)
+    return lags.BlockLAGSExchange(ks=ks, block_size=spec.block_size,
+                                  row_axes=spec.row_axes,
+                                  shard_dims=spec.shard_dims)
+
+
+register_exchange("lags_dp")(_lags_factory)
+# lags_hier shares the exchange object (the sparse cross-pod stage runs
+# the leading-P path over the vmap'd pod dim); what differs is the axis
+# plan: pure-auto GSPMD with 'pod' as the worker dim.  A sparse-INTRA-pod
+# variant (lags.HierLAGSExchange with inner_axes) plugs in here without
+# touching the step builder — register it under its own name.
+register_exchange("lags_hier", axes="pod_auto")(_lags_factory)
+
+
+# ---------------------------------------------------------------------------
+# compressor registry (backed by core.compressors)
+# ---------------------------------------------------------------------------
+
+def register_compressor(name: str, compress=None, *, needs_key: bool = False):
+    """Register a compressor ``compress(x, k, **kw) -> (values, indices)``.
+
+    Usable as a decorator (``@register_compressor("name")``) or a plain
+    call.  Entries land in ``core.compressors.REGISTRY`` so every
+    strategy (and ``compressor_name=`` field) can name them.
+    """
+    def add(fn):
+        C.REGISTRY[name] = C.Compressor(name, fn, needs_key=needs_key)
+        return fn
+    if compress is None:
+        return add
+    return add(compress)
+
+
+get_compressor = C.get_compressor
+
+
+def compressor_names() -> list[str]:
+    return sorted(C.REGISTRY)

@@ -1,0 +1,125 @@
+"""``Session`` — config -> mesh -> exchange -> schedule -> controller.
+
+One object composes the pieces that used to be hand-wired at every call
+site: the model config, a :class:`~repro.api.config.RunConfig`, a mesh
+(for the distributed surface), an optional autotuned schedule, and an
+optional online re-planning controller.  Both execution surfaces hang
+off it and share the same exchange registry + ``validate_for`` contract:
+
+    from repro import api
+
+    cfg = base.get_smoke_config("tinyllama_1_1b")
+    run = api.RunConfig(mode="lags_dp", ratio=100.0, lr=0.25)
+
+    # simulation (P workers on one device; convergence experiments)
+    sim = api.Session(cfg, run).simulator(loss_fn, params, n_workers=4)
+
+    # distributed (partial-auto shard_map production step)
+    sess = api.Session(cfg, run, mesh=M.make_host_mesh(data=4, model=2))
+    step_fn, state_specs, meta = sess.train_step()
+    state, _ = sess.init_state()
+
+    # online re-planning (repro.runtime) instead of a static schedule
+    ctl = sess.controller(rcfg=RuntimeConfig(replan_every=50))
+
+All heavyweight imports (launch, training, runtime) are lazy so this
+module — and therefore ``repro.api`` — is cheap to import and free of
+cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.api.config import RunConfig
+
+
+def build_train_step(cfg, mesh, run: RunConfig | None = None):
+    """(step_fn, state_specs, meta) for the distributed step.
+
+    Functional core of :meth:`Session.train_step`; the one non-deprecated
+    path to a production train step.
+    """
+    from repro.launch import train as TR
+    return TR.build_train_step(cfg, mesh, run or RunConfig())
+
+
+class Session:
+    """Composable façade over the sim and distributed training surfaces.
+
+    ``mesh`` is only required for the distributed members
+    (:meth:`train_step`, :meth:`init_state`, :meth:`controller`);
+    :meth:`simulator` works without one.  The config's ``train_mode`` is
+    reconciled with ``run.mode`` once, here, so every downstream consumer
+    (step builder, controller, checkpoint provenance) sees one canonical
+    mode.
+    """
+
+    def __init__(self, cfg, run: RunConfig | None = None, mesh=None):
+        self.run = run or RunConfig()
+        mode = self.run.resolved_mode(cfg)
+        # one source of truth: cfg.train_mode == run.mode == canonical
+        self.cfg = (cfg if cfg.train_mode == mode
+                    else dataclasses.replace(cfg, train_mode=mode))
+        self.run = dataclasses.replace(self.run, mode=mode)
+        self.mesh = mesh
+        self._built = None
+
+    @property
+    def mode(self) -> str:
+        return self.run.mode
+
+    def _need_mesh(self, what: str):
+        if self.mesh is None:
+            raise ValueError(f"Session.{what} needs a mesh — pass one to "
+                             f"Session(cfg, run, mesh=...)")
+        return self.mesh
+
+    # -- distributed surface ------------------------------------------------
+    def train_step(self):
+        """(step_fn, state_specs, meta), built once and cached."""
+        if self._built is None:
+            self._built = build_train_step(self.cfg,
+                                           self._need_mesh("train_step"),
+                                           self.run)
+        return self._built
+
+    @property
+    def step_fn(self):
+        return self.train_step()[0]
+
+    @property
+    def state_specs(self):
+        return self.train_step()[1]
+
+    @property
+    def meta(self):
+        return self.train_step()[2]
+
+    def init_state(self, seed: int = 0):
+        """Materialized train state with the production shardings."""
+        from repro.launch import train as TR
+        state, _meta = TR.init_state(self.cfg, self._need_mesh("init_state"),
+                                     method=self.mode, seed=seed)
+        return state, _meta
+
+    # -- simulation surface -------------------------------------------------
+    def simulator(self, loss_fn, params, n_workers: int):
+        """``SimTrainer`` for this run: P simulated workers, leading-P
+        batches, the SAME ``ExchangeSpec``/registry the distributed step
+        builds from."""
+        from repro.training import train_loop as TL
+        run = self.run
+        if run.ratio is None:
+            run = dataclasses.replace(run, ratio=run.resolved_ratio(self.cfg))
+        return TL.SimTrainer(loss_fn, params, run, n_workers=n_workers)
+
+    # -- online re-planning -------------------------------------------------
+    def controller(self, rcfg=None, comm_probe=None):
+        """``runtime.ReplanController`` owning this session's train step
+        (re-fits/re-plans the schedule online; see ``repro.runtime``)."""
+        from repro.runtime import controller as RC
+        return RC.ReplanController(self.cfg,
+                                   self._need_mesh("controller"),
+                                   rcfg=rcfg, run=self.run,
+                                   comm_probe=comm_probe)

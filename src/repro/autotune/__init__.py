@@ -18,8 +18,9 @@ this package *measures* instead of assumes, in four stages:
   4. **schedule** (:mod:`~repro.autotune.schedule`) — persist the
      resulting per-leaf ratios/k's as a validated JSON ``Schedule``,
      cached per (arch, shape, workers, hardware) and ingested by
-     ``launch.train.make_train_step`` / ``training.TrainConfig`` through
-     ``core.lags.ks_from_ratios_tree``.
+     ``repro.api.RunConfig(schedule=...)`` (both the distributed step
+     and ``SimTrainer``) through ``core.lags.ks_from_ratios_tree``,
+     under the shared ``schedule.validate_for`` contract.
 
 End-to-end driver: ``python -m benchmarks.bench_autotune``.
 """
@@ -30,12 +31,13 @@ from repro.autotune.profiler import (CommSample, LeafSample, ModelProfile,
                                      time_collectives)
 from repro.autotune.schedule import (HierSchedule, LeafPlan, Schedule,
                                      cache_path, load_any,
-                                     schedule_from_json, summarize)
+                                     schedule_from_json, summarize,
+                                     validate_for)
 
 __all__ = [
     "CommSample", "LeafSample", "ModelProfile", "backprop_leaves",
     "profile_model", "time_collectives", "fit_alpha_beta", "fit_hardware",
     "plan_leaf", "plan_schedule", "predict_iteration", "LeafPlan",
     "Schedule", "HierSchedule", "cache_path", "load_any",
-    "schedule_from_json", "summarize",
+    "schedule_from_json", "summarize", "validate_for",
 ]

@@ -8,7 +8,7 @@ Two kinds of measurement feed the fit/plan stages:
     turns into calibrated (α, β).  On the CPU host-device simulation the
     "wire" is memcpy — the pipeline is identical on real ICI/DCN.
   * **train-step micro-steps** — the *production* step from
-    ``launch.train.make_train_step`` (dense and LAGS modes), compiled
+    ``repro.api.build_train_step`` (dense and LAGS modes), compiled
     once and timed over a few steps.  The compiled cost analysis gives
     per-device FLOPs/HBM bytes (-> effective rates), and the optimized
     HLO gives the per-kind collective byte totals via
@@ -187,11 +187,13 @@ def _time_step(cfg, mesh, batch, *, method, seq: int, iters: int):
     """Compile the production train step once (AOT) and time micro-steps.
 
     Returns (t_step, cost_analysis dict, optimized-HLO text)."""
+    from repro import api
     from repro.launch import train as TR
     with compat.set_mesh(mesh):
-        step_fn, _specs, _meta = TR.make_train_step(
-            cfg, mesh, method=method, donate=False,
-            chunk=min(1024, seq), loss_chunk=min(512, seq))
+        step_fn, _specs, _meta = api.build_train_step(
+            cfg, mesh, api.RunConfig(mode=method, donate=False,
+                                     chunk=min(1024, seq),
+                                     loss_chunk=min(512, seq)))
         state, _ = TR.init_state(cfg, mesh, method=method)
         compiled = step_fn.lower(state, batch).compile()
         t = _timed(functools.partial(compiled, state, batch), iters=iters)

@@ -263,6 +263,64 @@ def load_any(path: str) -> "Schedule | HierSchedule":
         return schedule_from_json(f.read())
 
 
+def validate_for(sched, mode: str, *, n_workers: int | None = None,
+                 params_like=None) -> None:
+    """Schedule-ingestion validation, shared by every consumer.
+
+    Hoisted out of ``launch.train.make_train_step`` so the distributed
+    step builder, ``SimTrainer``, and the runtime controller all enforce
+    the SAME contract:
+
+      * a two-tier ``HierSchedule`` only feeds the ``lags_hier`` mode
+        (its outer tier budgets the sparse cross-pod exchange);
+      * a flat schedule planned for one wire must not silently feed the
+        other (per-leaf k's priced for intra-pod ICI are far too dense
+        for the cross-pod DCN exchange, and vice versa);
+      * the intra-pod (inner) tier of a ``HierSchedule`` — near-dense by
+        construction — must never leak into the sparse exchange;
+      * a worker-count mismatch WARNS rather than fails: Eq. 18 ratios
+        solved for a different P still converge (Lemma 1), and what-if
+        consumption of a production plan on a host mesh is a supported
+        flow (bench_autotune).
+
+    ``mode`` is the canonical train-mode vocabulary; ``n_workers=None``
+    skips the worker-count check; ``params_like`` additionally checks the
+    leaf structure (``Schedule.validate``).
+    """
+    if sched is None:
+        return
+    n_tiers = int(getattr(sched, "n_tiers", 1))
+    if n_tiers > 1 and mode != "lags_hier":
+        raise ValueError(
+            f"hierarchical schedule (n_tiers={n_tiers}) requires train "
+            f"mode 'lags_hier', got {mode!r}")
+    flat_mode = getattr(sched, "train_mode", None)
+    if (n_tiers == 1 and flat_mode is not None
+            and (flat_mode == "lags_hier") != (mode == "lags_hier")):
+        raise ValueError(
+            f"schedule was planned for train_mode={flat_mode!r} but "
+            f"this step runs {mode!r} (re-plan, or load the matching "
+            f"cache entry)")
+    if getattr(sched, "tier", "") == "inner":
+        raise ValueError(
+            "this is the intra-pod (inner) tier of a HierSchedule — "
+            "its near-dense k's must not feed the cross-pod exchange; "
+            "pass the full HierSchedule or its outer tier")
+    # duck-typed schedules ("anything with a ks_tree method") may carry no
+    # worker-count provenance at all — skip the check, don't crash
+    planned = getattr(getattr(sched, "outer", sched), "n_workers", None)
+    if n_workers is not None and planned is not None:
+        planned_p = int(planned)
+        if planned_p != int(n_workers):
+            import warnings
+            warnings.warn(
+                f"schedule was planned for {planned_p} workers but this "
+                f"mesh runs {int(n_workers)} (mode {mode!r}) — planned "
+                f"ratios will not match the wire", stacklevel=3)
+    if params_like is not None:
+        sched.validate(params_like)
+
+
 def cache_path(root: str, arch: str, shape: str, n_workers: int,
                hw_name: str, train_mode: str = "lags_dp",
                tiers: int = 1) -> str:

@@ -106,6 +106,29 @@ def _axis_prod(axis_names) -> jax.Array:
     return n
 
 
+def _worker_index(axis_names) -> jax.Array:
+    """Linearized worker index over the manual axes (0 outside shard_map)."""
+    idx = jnp.int32(0)
+    for a in axis_names:
+        idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _leaf_key(key, leaf_no: int, worker=None):
+    """Per-(step, leaf, worker) PRNG stream for key-needing compressors.
+
+    ``key=None`` (callers that predate key threading) degrades to the old
+    fixed stream — still distinct per leaf/worker, but identical every
+    step.  Train loops pass a per-step key (fold_in of the step counter)
+    so sampled selection (randk) draws fresh indices each step.
+    """
+    base = key if key is not None else jax.random.PRNGKey(0)
+    k = jax.random.fold_in(base, leaf_no)
+    if worker is not None:
+        k = jax.random.fold_in(k, worker)
+    return k
+
+
 @dataclasses.dataclass(frozen=True)
 class DenseExchange:
     """Vanilla S-SGD: mean of dense updates across workers."""
@@ -114,7 +137,8 @@ class DenseExchange:
     def init(self, updates_like):
         return ()
 
-    def exchange(self, updates, state, axis_names: Sequence[str] | None):
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
         if axis_names is None:  # simulation: leading P axis
             return jax.tree.map(lambda u: u.mean(0), updates), state
         return jax.tree.map(lambda u: _psum_mean(u, tuple(axis_names)), updates), state
@@ -151,30 +175,35 @@ class LAGSExchange:
         return jax.tree.map(
             lambda u: jnp.zeros(u.shape, self.residual_dtype), updates_like)
 
-    # -- per-worker local stage (lines 7-8) --------------------------------
-    def _local(self, update_leaf, residual_leaf, k):
-        acc = residual_leaf + update_leaf.astype(residual_leaf.dtype)
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
         kw = dict(self.compressor_kwargs)
-        return local_select(acc, k, self.compressor, **kw)
-
-    def exchange(self, updates, state, axis_names: Sequence[str] | None):
-        kw = dict(self.compressor_kwargs)
+        needs_key = self.compressor.needs_key
 
         if axis_names is None:
             # --- simulation path: leaves have leading P axis ---------------
-            def leaf_fn(u, e, k):
+            def leaf_fn(i, u, e, k):
                 d = u[0].size
-                vals, idx, resid = jax.vmap(
-                    lambda uu, ee: local_select(ee + uu.astype(ee.dtype), k,
-                                                self.compressor, **kw)
-                )(u, e)
                 p = u.shape[0]
+                if needs_key:
+                    wkeys = jax.random.split(_leaf_key(key, i), p)
+                    vals, idx, resid = jax.vmap(
+                        lambda uu, ee, kk: local_select(
+                            ee + uu.astype(ee.dtype), k, self.compressor,
+                            key=kk, **kw)
+                    )(u, e, wkeys)
+                else:
+                    vals, idx, resid = jax.vmap(
+                        lambda uu, ee: local_select(ee + uu.astype(ee.dtype),
+                                                    k, self.compressor, **kw)
+                    )(u, e)
                 mean = _gathered_scatter_mean(vals, idx, d, p)
                 return mean.reshape(u.shape[1:]), resid
             flat_u, treedef = jax.tree.flatten(updates)
             flat_e = treedef.flatten_up_to(state)
             flat_k = treedef.flatten_up_to(self.ks)
-            out = [leaf_fn(u, e, k) for u, e, k in zip(flat_u, flat_e, flat_k)]
+            out = [leaf_fn(i, u, e, k)
+                   for i, (u, e, k) in enumerate(zip(flat_u, flat_e, flat_k))]
             means = treedef.unflatten([o[0] for o in out])
             resids = treedef.unflatten([o[1] for o in out])
             return means, resids
@@ -182,8 +211,12 @@ class LAGSExchange:
         # --- distributed path (inside shard_map manual axes) --------------
         axes = tuple(axis_names)
 
-        def leaf_fn(u, e, k):
-            vals, idx, resid = self._local(u, e, k)
+        def leaf_fn(i, u, e, k):
+            acc = e + u.astype(e.dtype)
+            wk = (_leaf_key(key, i, _worker_index(axes)) if needs_key
+                  else None)
+            vals, idx, resid = local_select(acc, k, self.compressor,
+                                            key=wk, **kw)
             # layer-wise sparse all-gather: ships 2*k scalars per worker
             vals_all = jax.lax.all_gather(vals, axes, tiled=False)
             idx_all = jax.lax.all_gather(idx, axes, tiled=False)
@@ -194,7 +227,8 @@ class LAGSExchange:
         flat_u, treedef = jax.tree.flatten(updates)
         flat_e = treedef.flatten_up_to(state)
         flat_k = treedef.flatten_up_to(self.ks)
-        out = [leaf_fn(u, e, k) for u, e, k in zip(flat_u, flat_e, flat_k)]
+        out = [leaf_fn(i, u, e, k)
+               for i, (u, e, k) in enumerate(zip(flat_u, flat_e, flat_k))]
         means = treedef.unflatten([o[0] for o in out])
         resids = treedef.unflatten([o[1] for o in out])
         return means, resids
@@ -219,8 +253,10 @@ class SLGSExchange:
         return jax.tree.map(
             lambda u: jnp.zeros(u.shape, self.residual_dtype), updates_like)
 
-    def exchange(self, updates, state, axis_names: Sequence[str] | None):
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
         kw = dict(self.compressor_kwargs)
+        needs_key = self.compressor.needs_key
         flat_u, treedef = jax.tree.flatten(updates)
         flat_e = treedef.flatten_up_to(state)
 
@@ -233,13 +269,15 @@ class SLGSExchange:
             p = flat_u[0].shape[0]
             d = sum(int(u[0].size) for u in flat_u)
 
-            def worker(us, es):
+            def worker(us, es, wk):
                 vec, _ = pack(us, es)
-                vals, idx, resid_vec = local_select(vec, self.k_total,
-                                                    self.compressor, **kw)
+                vals, idx, resid_vec = local_select(
+                    vec, self.k_total, self.compressor,
+                    key=(wk if needs_key else None), **kw)
                 return vals, idx, resid_vec
 
-            vals, idx, resid_vec = jax.vmap(worker)(flat_u, flat_e)
+            wkeys = jax.random.split(_leaf_key(key, 0), p)
+            vals, idx, resid_vec = jax.vmap(worker)(flat_u, flat_e, wkeys)
             mean_vec = _gathered_scatter_mean(vals, idx, d, p)
             means, resids, off = [], [], 0
             for u in flat_u:
@@ -251,7 +289,9 @@ class SLGSExchange:
 
         axes = tuple(axis_names)
         vec, _ = pack(flat_u, flat_e)
-        vals, idx, resid_vec = local_select(vec, self.k_total, self.compressor, **kw)
+        wk = _leaf_key(key, 0, _worker_index(axes)) if needs_key else None
+        vals, idx, resid_vec = local_select(vec, self.k_total,
+                                            self.compressor, key=wk, **kw)
         vals_all = jax.lax.all_gather(vals, axes, tiled=False)
         idx_all = jax.lax.all_gather(idx, axes, tiled=False)
         p = _axis_prod(axes)
@@ -368,7 +408,10 @@ class BlockLAGSExchange:
         resid_rows = rows - sel_rows
         return vals, local, resid_rows
 
-    def exchange(self, updates, state, axis_names: Sequence[str] | None):
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
+        # block-Top-k selection is deterministic; ``key`` is accepted for
+        # interface uniformity (every strategy takes the per-step stream)
         flat_u, treedef = jax.tree.flatten(updates)
         flat_e = treedef.flatten_up_to(state)
         flat_k = treedef.flatten_up_to(self.ks)
@@ -476,14 +519,18 @@ class HierLAGSExchange:
         return jax.tree.map(
             lambda u: jnp.zeros(u.shape, self.residual_dtype), updates_like)
 
-    def exchange(self, updates, state, axis_names=None):
+    def exchange(self, updates, state, axis_names=None, *, key=None):
         kw = dict(self.compressor_kwargs)
+        needs_key = self.compressor.needs_key
 
-        def leaf_fn(u, e, k):
+        def leaf_fn(i, u, e, k):
             if self.inner_axes:
                 u = _psum_mean(u, self.inner_axes)
             acc = e + u.astype(e.dtype)
-            vals, idx, resid = local_select(acc, k, self.compressor, **kw)
+            wk = (_leaf_key(key, i, _worker_index(self.outer_axes))
+                  if needs_key else None)
+            vals, idx, resid = local_select(acc, k, self.compressor,
+                                            key=wk, **kw)
             if self.outer_axes:
                 vals_all = jax.lax.all_gather(vals, self.outer_axes, tiled=False)
                 idx_all = jax.lax.all_gather(idx, self.outer_axes, tiled=False)
@@ -496,6 +543,7 @@ class HierLAGSExchange:
         flat_u, treedef = jax.tree.flatten(updates)
         flat_e = treedef.flatten_up_to(state)
         flat_k = treedef.flatten_up_to(self.ks)
-        out = [leaf_fn(u, e, k) for u, e, k in zip(flat_u, flat_e, flat_k)]
+        out = [leaf_fn(i, u, e, k)
+               for i, (u, e, k) in enumerate(zip(flat_u, flat_e, flat_k))]
         return (treedef.unflatten([o[0] for o in out]),
                 treedef.unflatten([o[1] for o in out]))

@@ -70,8 +70,9 @@ def lower_one(arch: str, shape_name: str, mesh, *, mode_override=None):
     t0 = time.time()
     with compat.set_mesh(mesh):
         if shape.kind == "train":
-            step, state_specs, meta = TR.make_train_step(
-                cfg, mesh, method=mode_override)
+            from repro import api
+            step, state_specs, meta = api.build_train_step(
+                cfg, mesh, api.RunConfig(mode=mode_override))
             bsd = SP.train_batch_specs(cfg, shape)
             manual = meta["manual"] or M.data_axis_names(mesh)
             bps = TR.batch_pspec(bsd, mesh, M.data_axis_names(mesh))

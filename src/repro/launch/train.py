@@ -1,7 +1,13 @@
 """Distributed train step: partial-auto ``shard_map`` wrapping the LAGS
 exchange (the production analogue of ``training.SimTrainer``).
 
-Three train modes (``cfg.train_mode``):
+Build steps through ``repro.api`` (``Session.train_step`` /
+``build_train_step(cfg, mesh, RunConfig)``); the exchange strategy and
+its mesh-axis plan come from the ``repro.api.registry`` string->factory
+registry, so new strategies never edit this file.  The legacy
+``make_train_step(**kwargs)`` remains as a DeprecationWarning shim.
+
+Built-in train modes (``cfg.train_mode`` / ``RunConfig.mode``):
 
   * ``lags_dp``   — paper-faithful. ``shard_map`` MANUAL over the data-
     parallel axes ('pod', 'data'): each worker computes its own gradient,
@@ -31,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Any
 
 import jax
@@ -38,6 +45,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.api import registry as R
+from repro.api.config import RunConfig, canonical_mode
 from repro.configs import base
 from repro.core import lags
 from repro.launch import mesh as M
@@ -65,20 +74,26 @@ def model_shapes_and_axes(cfg):
 def _mode(cfg, mesh, method: str | None):
     """Returns (mode, manual_axes, worker_axes).
 
-    manual_axes: shard_map-manual mesh axes (lags_dp / dense).
+    manual_axes: shard_map-manual mesh axes (lags_dp / dense / slgs).
     worker_axes: axes whose product = number of LAGS workers.  In hier mode
     the per-pod gradients are expressed as a vmap over a leading pod dim in
     pure-auto GSPMD (no shard_map): worker_axes=('pod',), manual=().
+
+    The axis plan comes from the exchange registry (``ExchangeStrategy.
+    axes``), so registering a new strategy never touches this file; an
+    unknown mode raises with the list of registered names.
     """
-    mode = method or cfg.train_mode
-    if mode == "lags_hier":
+    mode = canonical_mode(method or cfg.train_mode)
+    strat = R.get_exchange(mode)
+    if strat.axes == "pod_auto":
         worker = tuple(a for a in mesh.axis_names if a == "pod")
         manual = ()
-    elif mode in ("lags_dp", "dense", "slgs"):
+    elif strat.axes == "data_manual":
         manual = M.data_axis_names(mesh)
         worker = manual
-    else:
-        raise ValueError(mode)
+    else:  # "none": single worker, no exchange axes
+        manual = ()
+        worker = ()
     return mode, manual, worker
 
 
@@ -184,100 +199,95 @@ def shard_dims_tree(pspecs, row_axes: tuple):
 def make_exchange(cfg, params_like, *, method: str, ratio: float | None = None,
                   block_size: int = 4096, ks_override=None,
                   row_axes: tuple = (), shard_dims=None):
-    ratio = ratio if ratio is not None else cfg.compression_ratio
-    if method == "dense":
-        return lags.DenseExchange()
-    ks = ks_override if ks_override is not None \
-        else lags.ks_from_ratio(params_like, ratio)
-    if method == "slgs":
-        d_total = sum(lags._size(x) for x in jax.tree.leaves(params_like))
-        return lags.SLGSExchange(k_total=max(1, int(round(d_total / ratio))))
-    return lags.BlockLAGSExchange(ks=ks, block_size=block_size,
-                                  row_axes=row_axes, shard_dims=shard_dims)
+    """DEPRECATED shim — build exchanges through
+    ``repro.api.build_exchange(ExchangeSpec)`` instead."""
+    warnings.warn(
+        "launch.train.make_exchange is deprecated; use "
+        "repro.api.build_exchange(repro.api.ExchangeSpec(...))",
+        DeprecationWarning, stacklevel=2)
+    spec = R.ExchangeSpec(
+        mode=canonical_mode(method), params_like=params_like,
+        ratio=(ratio if ratio is not None else cfg.compression_ratio),
+        ks=ks_override, block_size=block_size, sim=False,
+        row_axes=row_axes, shard_dims=shard_dims)
+    return R.build_exchange(spec)
 
 
 def make_train_step(cfg, mesh, *, method: str | None = None,
                     ratio: float | None = None, lr: float = 0.01,
                     block_size: int = 4096, chunk: int = 1024,
                     loss_chunk: int = 512, donate: bool = True,
-                    schedule=None):
-    """Builds (step_fn, state_specs, meta).  step_fn: (state, batch) ->
-    (state, metrics), jit'd; lower with the returned specs for the dry-run.
+                    schedule=None, lr_schedule=None):
+    """DEPRECATED shim over :func:`build_train_step`.
 
-    ``schedule``: optional ``repro.autotune.Schedule`` /
+    The kwarg sprawl lives on only here, for callers that predate
+    ``repro.api``; new code builds a ``repro.api.RunConfig`` and goes
+    through ``repro.api.Session`` / ``repro.api.build_train_step``.
+    """
+    warnings.warn(
+        "launch.train.make_train_step(...) is deprecated; use "
+        "repro.api.Session(cfg, RunConfig(...), mesh).train_step() or "
+        "repro.api.build_train_step(cfg, mesh, RunConfig(...))",
+        DeprecationWarning, stacklevel=2)
+    run = RunConfig(mode=method, ratio=ratio, lr=lr, lr_schedule=lr_schedule,
+                    block_size=block_size, chunk=chunk,
+                    loss_chunk=loss_chunk, donate=donate, schedule=schedule)
+    return build_train_step(cfg, mesh, run)
+
+
+def build_train_step(cfg, mesh, run: RunConfig):
+    """Builds (step_fn, state_specs, meta) from one ``RunConfig``.
+    step_fn: (state, batch) -> (state, metrics), jit'd; lower with the
+    returned specs for the dry-run.
+
+    ``run.schedule``: optional ``repro.autotune.Schedule`` /
     ``repro.autotune.HierSchedule`` (or anything with a
     ``ks_tree(params_like)`` method).  When given, its planned per-leaf
     k^(l) replace the static ``cfg.compression_ratio`` at the same
-    ingestion point ``lags.ks_from_ratios_tree`` feeds; the schedule is
-    validated against this model's leaf structure first.  A two-tier
-    ``HierSchedule`` is only meaningful in ``lags_hier`` mode (its outer
-    tier budgets the sparse cross-pod exchange; the intra-pod reduction
-    is GSPMD's) — other modes reject it.
+    ingestion point ``lags.ks_from_ratios_tree`` feeds; validation
+    (leaf structure, tier/provenance/worker-count) is
+    ``autotune.schedule.validate_for`` — the same contract the sim path
+    enforces.
     """
-    state_specs, meta = make_state_specs(cfg, mesh, method=method)
+    state_specs, meta = make_state_specs(cfg, mesh, method=run.mode)
     mode, manual = meta["mode"], meta["manual"]
-    ks_override = None
-    if schedule is not None and mode != "dense":
-        if getattr(schedule, "n_tiers", 1) > 1 and mode != "lags_hier":
-            raise ValueError(
-                f"hierarchical schedule (n_tiers="
-                f"{schedule.n_tiers}) requires train mode 'lags_hier', "
-                f"got {mode!r}")
-        # provenance check: a flat schedule planned for one wire must not
-        # silently feed the other (per-leaf k's priced for intra-pod ICI
-        # are far too dense for the cross-pod DCN exchange, and vice versa)
-        flat_mode = getattr(schedule, "train_mode", None)
-        if (getattr(schedule, "n_tiers", 1) == 1 and flat_mode is not None
-                and (flat_mode == "lags_hier") != (mode == "lags_hier")):
-            raise ValueError(
-                f"schedule was planned for train_mode={flat_mode!r} but "
-                f"this step runs {mode!r} (re-plan, or load the matching "
-                f"cache entry)")
-        if getattr(schedule, "tier", "") == "inner":
-            raise ValueError(
-                "this is the intra-pod (inner) tier of a HierSchedule — "
-                "its near-dense k's must not feed the cross-pod exchange; "
-                "pass the full HierSchedule or its outer tier")
-        # Eq. 18 ratios are solved against a worker count; applying them
-        # on a different mesh still converges (Lemma 1) but the planned
-        # sparsity no longer matches any wire — e.g. an outer tier planned
-        # for 2 pods on a 1-pod mesh compresses hard with no comm to hide.
-        # Warn, don't fail: what-if consumption of a production-planned
-        # schedule on a host mesh is a supported flow (bench_autotune).
-        planned_p = int(getattr(schedule, "outer", schedule).n_workers)
-        if planned_p != meta["n_workers"]:
-            import warnings
-            warnings.warn(
-                f"schedule was planned for {planned_p} workers but this "
-                f"mesh runs {meta['n_workers']} (mode {mode!r}) — planned "
-                f"ratios will not match the wire", stacklevel=2)
-        ks_override = schedule.ks_tree(state_specs["params"])
+    schedule = run.schedule
+    ks_override = R.resolve_schedule_ks(schedule, mode,
+                                        state_specs["params"],
+                                        n_workers=meta["n_workers"])
     # auto axes available for block-parallel row sharding inside the exchange
     row_axes = tuple(a for a in mesh.axis_names if a not in manual
                      and a in ("data", "model"))
     # shard-aligned block layout: the exchange transposes each leaf's
     # sharded dims to the front so selection/scatter stay collective-free
     sdims = shard_dims_tree(meta["pspecs"], row_axes)
-    exch = make_exchange(cfg, state_specs["params"],
-                         method=("dense" if mode == "dense" else
-                                 "lags"),
-                         ratio=ratio, block_size=block_size,
-                         ks_override=ks_override,
-                         row_axes=row_axes, shard_dims=sdims)
+    spec = R.ExchangeSpec(
+        mode=mode, params_like=state_specs["params"],
+        ratio=run.resolved_ratio(cfg), ks=ks_override,
+        block_size=run.block_size, compressor=run.compressor, sim=False,
+        n_workers=meta["n_workers"], row_axes=row_axes, shard_dims=sdims)
+    exch = R.build_exchange(spec)
     meta["ks"] = getattr(exch, "ks", None)
     meta["schedule"] = schedule
+    meta["run"] = dataclasses.replace(run, mode=mode)
 
     def loss_fn(params, batch):
-        return T.loss_fn(params, cfg, batch, chunk=chunk,
-                         loss_chunk=loss_chunk)
+        return T.loss_fn(params, cfg, batch, chunk=run.chunk,
+                         loss_chunk=run.loss_chunk)
 
-    lr_f = jnp.float32(lr)
+    def lr_at(step_no):
+        # scheduled LR follows the SAME hook as SimTrainer._lr, so a
+        # decayed run no longer silently diverges between surfaces
+        return jnp.asarray(run.lr_at(step_no), jnp.float32)
+
+    step_key = run.key_at
 
     def worker(params, ef, batch, step_no):
         # ef arrives (1, ...) per worker under manual axes
         ef_local = jax.tree.map(lambda e: e[0], ef) if mode != "dense" else ()
         (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch)
+        lr_f = lr_at(step_no)
         updates = jax.tree.map(lambda g: lr_f * g.astype(jnp.float32), grads)
         axis_names = manual if manual else ()
         if mode == "dense":
@@ -288,7 +298,8 @@ def make_train_step(cfg, mesh, *, method: str | None = None,
             new_ef = ()
         else:
             mean_upd, new_ef_local = exch.exchange(updates, ef_local,
-                                                   axis_names)
+                                                   axis_names,
+                                                   key=step_key(step_no))
             new_ef = jax.tree.map(lambda e: e[None], new_ef_local)
         new_params = jax.tree.map(
             lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
@@ -349,20 +360,22 @@ def make_train_step(cfg, mesh, *, method: str | None = None,
                 (loss, _aux), g1 = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, batch)
                 grads = jax.tree.map(lambda g: g[None], g1)
+            lr_f = lr_at(state["step"])
             updates = jax.tree.map(lambda g: lr_f * g.astype(jnp.float32),
                                    grads)
             if mode == "dense":
                 mean_upd = jax.tree.map(lambda u: u.mean(0), updates)
                 new_ef = ()
             else:
-                mean_upd, new_ef = exch.exchange(updates, ef, None)
+                mean_upd, new_ef = exch.exchange(updates, ef, None,
+                                                 key=step_key(state["step"]))
             new_params = jax.tree.map(
                 lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
                 params, mean_upd)
             return ({"params": new_params, "ef": new_ef,
                      "step": state["step"] + 1}, {"loss": loss})
 
-    donate_args = (0,) if donate else ()
+    donate_args = (0,) if run.donate else ()
     return jax.jit(step, donate_argnums=donate_args), state_specs, meta
 
 

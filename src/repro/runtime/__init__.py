@@ -13,8 +13,8 @@ This package closes the loop **online**, in three pieces:
   * **hier** (:mod:`~repro.runtime.hier`) — two-tier planner: Eq. 18
     solved separately per tier against each tier's own fitted α/β,
     emitting a ``autotune.schedule.HierSchedule`` (schema v2) whose
-    *outer* (cross-pod) tier is what ``launch.train.make_train_step``
-    ingests in ``lags_hier`` mode.
+    *outer* (cross-pod) tier is what the ``lags_hier`` train step
+    ingests (``repro.api.build_train_step``).
   * **controller** (:mod:`~repro.runtime.controller`) — every
     ``replan_every`` steps: re-fit the wire from fresh collective
     samples, re-apportion compute budgets from the measured window,
@@ -25,12 +25,13 @@ This package closes the loop **online**, in three pieces:
 
 Usage::
 
-    from repro.runtime import ReplanController, RuntimeConfig
+    from repro import api
+    from repro.runtime import RuntimeConfig
 
-    ctl = ReplanController(cfg, mesh,
-                           rcfg=RuntimeConfig(replan_every=50,
-                                              swap_threshold=0.05))
-    state, _ = TR.init_state(cfg, mesh)
+    sess = api.Session(cfg, api.RunConfig(lr=0.01), mesh)
+    ctl = sess.controller(rcfg=RuntimeConfig(replan_every=50,
+                                             swap_threshold=0.05))
+    state, _ = sess.init_state()
     for t in range(steps):
         state, metrics = ctl.step(state, data.batch(t, B, S))
     ctl.save_state("artifacts/runtime_state")    # resume: restore_state
@@ -39,7 +40,8 @@ Usage::
     from repro.runtime import hier
     hs = hier.plan_hier_schedule(leaves, p_inner=16, p_outer=4,
                                  hw_inner=ici_fit, hw_outer=dcn_fit)
-    step_fn, _, _ = TR.make_train_step(hier_cfg, mesh, schedule=hs)
+    step_fn, _, _ = api.build_train_step(hier_cfg, mesh,
+                                         api.RunConfig(schedule=hs))
 
 End-to-end driver (injected bandwidth shift, time-to-replan report):
 ``python -m benchmarks.bench_runtime [--quick]``.

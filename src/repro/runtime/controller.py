@@ -11,7 +11,7 @@ The candidate schedule only replaces the live one under hysteresis: the
 α-β model predicts the iteration time of both the current and the
 candidate schedule against the *new* fit, and the swap happens only when
 the predicted relative improvement exceeds ``swap_threshold``.  Every
-swap rebuilds the train step through ``launch.train.make_train_step``
+swap rebuilds the train step through ``repro.api.build_train_step``
 (an XLA recompile), so the threshold directly bounds recompile churn —
 noise-level drift re-plans to a near-identical schedule and is rejected.
 
@@ -26,16 +26,17 @@ round-trips through ``checkpoint.io`` so re-planning survives restarts.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Sequence
 
 import jax
 
+from repro.api.config import RunConfig
 from repro.autotune import planner, profiler
 from repro.autotune import schedule as S
 from repro.checkpoint import io as ckpt
 from repro.core import comm_model as cm
 from repro.launch import mesh as M
-from repro.launch import train as TR
 from repro.runtime import hier
 from repro.runtime.telemetry import Telemetry
 
@@ -85,14 +86,32 @@ class ReplanController:
 
     def __init__(self, cfg, mesh, *, rcfg: RuntimeConfig | None = None,
                  schedule=None, comm_probe: Callable | None = None,
-                 lr: float = 0.01, block_size: int = 4096,
-                 chunk: int = 1024, loss_chunk: int = 512):
+                 run: RunConfig | None = None,
+                 lr: float | None = None, block_size: int | None = None,
+                 chunk: int | None = None, loss_chunk: int | None = None):
         if cfg.train_mode == "dense":
             raise ValueError("nothing to re-plan for train_mode='dense'")
+        if run is None:
+            legacy = {k: v for k, v in dict(
+                lr=lr, block_size=block_size, chunk=chunk,
+                loss_chunk=loss_chunk).items() if v is not None}
+            if legacy:
+                warnings.warn(
+                    "ReplanController(lr=/block_size=/chunk=/loss_chunk=) "
+                    "is deprecated; pass run=repro.api.RunConfig(...)",
+                    DeprecationWarning, stacklevel=2)
+            run = RunConfig(**legacy)
+        elif any(v is not None for v in (lr, block_size, chunk, loss_chunk)):
+            raise ValueError("pass knobs via run=RunConfig(...), not both "
+                             "run= and legacy kwargs")
         self.cfg, self.mesh = cfg, mesh
         self.rcfg = rcfg or RuntimeConfig()
         self.mode = cfg.train_mode
-        self.schedule = schedule
+        self.schedule = schedule if schedule is not None else run.schedule
+        # donate=False: a swap must not invalidate the live state buffers;
+        # the live schedule is owned by the controller, not the RunConfig
+        self._run = dataclasses.replace(run, mode=self.mode, schedule=None,
+                                        donate=False)
         # a replan window must accumulate >= min_step_samples fenced
         # timings, so cap the fence interval at a quarter of the window
         fence = self.rcfg.fence_every
@@ -102,9 +121,6 @@ class ReplanController:
                                    fence_every=fence)
         self.history: list[SwapEvent] = []
         self._probe = comm_probe or self._default_probe
-        # donate=False: a swap must not invalidate the live state buffers
-        self._step_kwargs = dict(lr=lr, block_size=block_size, chunk=chunk,
-                                 loss_chunk=loss_chunk, donate=False)
         self._step_count = 0
         # tokens=1.0: apportion_backward splits by FLOPs *share*, so the
         # absolute token count cancels; budgets come from measured times
@@ -113,8 +129,10 @@ class ReplanController:
 
     # -- step ownership ----------------------------------------------------
     def _build(self) -> None:
-        self.step_fn, self.state_specs, self.meta = TR.make_train_step(
-            self.cfg, self.mesh, schedule=self.schedule, **self._step_kwargs)
+        from repro import api
+        run = dataclasses.replace(self._run, schedule=self.schedule)
+        self.step_fn, self.state_specs, self.meta = api.build_train_step(
+            self.cfg, self.mesh, run)
 
     def step(self, state, batch):
         """Run one train step; ticks telemetry and re-plans on cadence."""

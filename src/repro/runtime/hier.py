@@ -13,7 +13,8 @@ dense all-reduce hides behind backward compute, which is exactly why
 leaf (huge leaves, contended links), its inner plan goes sparse — the
 current train step cannot consume that yet (the intra-pod reduction is
 GSPMD's), so the inner tier is provenance for a future sparse-intra-pod
-exchange, while the outer tier is what ``make_train_step`` ingests.
+exchange, while the outer tier is what the train step ingests
+(``repro.api.build_train_step``).
 
 Convergence is covered by the paper's Lemma 1 (any partition of the
 gradient into pieces) plus the k-contraction argument of Alistarh et

@@ -4,25 +4,36 @@ optimizer.  Two execution modes:
   * ``SimTrainer`` — simulates P workers on one device (leading P axis on
     batches and residuals); used by convergence experiments and tests.
     Numerically identical to the distributed path (verified in tests).
-  * the distributed ``make_train_step`` lives in ``repro.launch.train`` and
-    wraps the same exchange objects in a partial-auto ``shard_map``.
+  * the distributed step lives in ``repro.launch.train`` (built through
+    ``repro.api.build_train_step``) and wraps the same exchange objects
+    in a partial-auto ``shard_map``.
+
+Both surfaces build their exchange from the same ``repro.api``
+``ExchangeSpec``/registry; ``TrainConfig`` remains as the legacy knob
+container and converts losslessly via :meth:`TrainConfig.to_run_config`.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import assumption, lags
+from repro.api.config import RunConfig, canonical_mode
+from repro.core import assumption
 from repro.optim import optimizers as opt
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
-    method: str = "lags"          # dense | slgs | lags
+    """Legacy sim-surface config — prefer ``repro.api.RunConfig``.
+
+    Kept so existing callers (and serialized experiment setups) load
+    unchanged; ``SimTrainer`` converts it on entry.
+    """
+    method: str = "lags"          # dense | slgs | lags (alias of lags_dp)
     compression_ratio: float = 250.0
     compressor: str = "topk_exact"
     lr: float = 0.1
@@ -38,34 +49,67 @@ class TrainConfig:
     # ``ks_tree(params_like)`` method): planned per-leaf k's replace the
     # scalar ``compression_ratio`` for the lags method.
     schedule: Any = None
+    seed: int = 0
+
+    def to_run_config(self) -> RunConfig:
+        return RunConfig(
+            mode=canonical_mode(self.method), ratio=self.compression_ratio,
+            compressor=self.compressor, lr=self.lr,
+            lr_schedule=self.lr_schedule, momentum=self.momentum,
+            momentum_correction=self.momentum_correction,
+            measure_delta=self.measure_delta, schedule=self.schedule,
+            seed=self.seed)
+
+
+def _sim_exchange(run: RunConfig, params, *, n_workers: int | None = None):
+    """Build the simulation-surface exchange through the registry,
+    enforcing the shared schedule-ingestion contract."""
+    from repro.api import registry as R
+    mode = run.resolved_mode()
+    ks = R.resolve_schedule_ks(run.schedule, mode, params,
+                               n_workers=n_workers)
+    spec = R.ExchangeSpec(mode=mode, params_like=params,
+                          ratio=run.resolved_ratio(), ks=ks,
+                          compressor=run.compressor, sim=True,
+                          n_workers=n_workers or 1)
+    return R.build_exchange(spec)
 
 
 def make_exchange(tcfg: TrainConfig, params):
-    if tcfg.method == "dense":
-        return lags.DenseExchange()
-    if tcfg.method == "slgs":
-        d_total = sum(int(x.size) for x in jax.tree.leaves(params))
-        k_total = max(1, int(round(d_total / tcfg.compression_ratio)))
-        return lags.SLGSExchange(k_total=k_total,
-                                 compressor_name=tcfg.compressor)
-    if tcfg.method == "lags":
-        if tcfg.schedule is not None:
-            ks = tcfg.schedule.ks_tree(params)
-        else:
-            ks = lags.ks_from_ratio(params, tcfg.compression_ratio)
-        return lags.LAGSExchange(ks=ks, compressor_name=tcfg.compressor)
-    raise ValueError(tcfg.method)
+    """DEPRECATED shim — build exchanges through
+    ``repro.api.build_exchange(ExchangeSpec)`` instead."""
+    warnings.warn(
+        "training.make_exchange is deprecated; use "
+        "repro.api.build_exchange(repro.api.ExchangeSpec(...))",
+        DeprecationWarning, stacklevel=2)
+    run = tcfg if isinstance(tcfg, RunConfig) else tcfg.to_run_config()
+    return _sim_exchange(run, params)
 
 
 class SimTrainer:
-    """P simulated workers; batches arrive with a leading (P,) axis."""
+    """P simulated workers; batches arrive with a leading (P,) axis.
 
-    def __init__(self, loss_fn, params, tcfg: TrainConfig, n_workers: int):
+    Accepts a ``repro.api.RunConfig`` (preferred; what
+    ``Session.simulator`` passes) or a legacy ``TrainConfig``.
+    """
+
+    def __init__(self, loss_fn, params, tcfg: TrainConfig | RunConfig,
+                 n_workers: int):
+        if isinstance(tcfg, RunConfig):
+            run = tcfg
+        else:
+            warnings.warn(
+                "SimTrainer(TrainConfig) is deprecated; pass a "
+                "repro.api.RunConfig (or use repro.api.Session.simulator)",
+                DeprecationWarning, stacklevel=2)
+            run = tcfg.to_run_config()
         self.loss_fn = loss_fn
-        self.tcfg = tcfg
+        self.run_config = run
+        self.tcfg = tcfg          # kept for legacy attribute access
+        self.mode = run.resolved_mode()
         self.n_workers = n_workers
-        self.exchange = make_exchange(tcfg, params)
-        self.optimizer = opt.SGD(momentum=tcfg.momentum)
+        self.exchange = _sim_exchange(run, params, n_workers=n_workers)
+        self.optimizer = opt.SGD(momentum=run.momentum)
         per_worker_like = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, jnp.float32),
             params)
@@ -74,25 +118,24 @@ class SimTrainer:
             "params": params,
             "ef": (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                 per_worker_like)
-                   if tcfg.method != "dense" else ()),
+                   if self.mode != "dense" else ()),
             "mom": (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                  per_worker_like)
-                    if tcfg.momentum_correction else ()),
+                    if run.momentum_correction else ()),
             "opt": self.optimizer.init(params),
             "step": jnp.zeros((), jnp.int32),
         }
 
     def _lr(self, step):
-        if self.tcfg.lr_schedule is not None:
-            return self.tcfg.lr_schedule(step)
-        return jnp.float32(self.tcfg.lr)
+        return jnp.asarray(self.run_config.lr_at(step), jnp.float32)
 
     def _build_step(self):
         loss_fn = self.loss_fn
         exchange = self.exchange
         optimizer = self.optimizer
-        measure = self.tcfg.measure_delta
-        method = self.tcfg.method
+        run = self.run_config
+        measure = run.measure_delta
+        mode = self.mode
 
         def step(state, batch):
             params = state["params"]
@@ -104,7 +147,7 @@ class SimTrainer:
                 return loss, g
 
             losses, grads = jax.vmap(one_worker)(batch)  # grads: (P, ...)
-            mc = self.tcfg.momentum_correction
+            mc = run.momentum_correction
             if mc:
                 # per-worker velocity BEFORE sparsification (DGC)
                 new_mom = jax.tree.map(lambda m, g: mc * m + lr * g,
@@ -115,7 +158,7 @@ class SimTrainer:
                 updates = jax.tree.map(lambda g: lr * g, grads)
 
             metrics = {"loss": losses.mean(), "lr": lr}
-            if measure and method == "lags":
+            if measure and mode == "lags_dp":
                 accs = jax.tree.map(lambda e, u: e + u, state["ef"], updates)
                 deltas = assumption.delta_metric_tree(
                     accs, exchange.ks, jax.random.fold_in(
@@ -125,7 +168,10 @@ class SimTrainer:
                 metrics["delta_mean"] = flat.mean()
                 metrics["delta_per_leaf"] = flat   # order = tree.leaves
 
-            mean_update, new_ef = exchange.exchange(updates, state["ef"], None)
+            # per-step PRNG stream so key-needing compressors (randk)
+            # draw fresh indices every step, not PRNGKey(0) forever
+            mean_update, new_ef = exchange.exchange(
+                updates, state["ef"], None, key=run.key_at(state["step"]))
             deltas, new_opt = optimizer.update(mean_update, state["opt"],
                                                params, lr=1.0)
             new_params = opt.apply_deltas(params, deltas)

@@ -1,0 +1,498 @@
+"""repro.api façade: registries, RunConfig/Session, shared validate_for
+contract, scheduled-LR wiring, and per-step compressor keys."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.autotune import schedule as S
+from repro.core import compressors as C
+from repro.core import lags
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _params():
+    return {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8) / 64.0,
+            "b": jnp.ones((6,), jnp.float32)}
+
+
+def _loss(p, b):
+    return (jnp.sum((p["w"] - 0.5) ** 2) + jnp.sum((p["b"] - b) ** 2), {})
+
+
+def _sched_for(params, *, ratio=4.0, n_workers=2, train_mode="lags_dp",
+               tier=""):
+    leaves = tuple(
+        S.LeafPlan(name=n, d=int(np.prod(l.shape)), ratio=ratio,
+                   k=max(1, int(round(int(np.prod(l.shape)) / ratio))))
+        for n, l in S.leaf_entries(params))
+    return S.Schedule(arch="t", shape="u", n_workers=n_workers,
+                      hardware={"name": "unit"}, leaves=leaves,
+                      train_mode=train_mode, tier=tier)
+
+
+def _hier_for(params, *, n_workers=2):
+    inner = dataclasses.replace(
+        _sched_for(params, ratio=1.0, n_workers=n_workers,
+                   train_mode="lags_hier"), tier="inner")
+    outer = dataclasses.replace(
+        _sched_for(params, ratio=4.0, n_workers=n_workers,
+                   train_mode="lags_hier"), tier="outer")
+    return S.HierSchedule(arch="t", shape="u", inner=inner, outer=outer)
+
+
+def _model_cfg(mode="lags_dp"):
+    from repro.configs import base
+    return dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+        dtype="float32", param_dtype="float32",
+        train_mode=mode, compression_ratio=8.0)
+
+
+def _mesh():
+    from repro.launch import mesh as M
+    return M.make_host_mesh(data=1, model=1)
+
+
+def _model_sched(cfg, **kw):
+    from repro.launch import train as TR
+    sds, _ = TR.model_shapes_and_axes(cfg)
+    return _sched_for(sds, **kw)
+
+
+# ---------------------------------------------------------------------------
+# canonical vocabulary
+# ---------------------------------------------------------------------------
+
+class TestCanonicalMode:
+    def test_lags_alias(self):
+        assert api.canonical_mode("lags") == "lags_dp"
+        assert api.RunConfig(mode="lags").mode == "lags_dp"
+
+    def test_canonical_passthrough(self):
+        for m in ("dense", "slgs", "lags_dp", "lags_hier"):
+            assert api.canonical_mode(m) == m
+
+    def test_train_config_converts(self):
+        from repro.training import train_loop as TL
+        run = TL.TrainConfig(method="lags", compression_ratio=16.0,
+                             lr=0.05).to_run_config()
+        assert run.mode == "lags_dp"
+        assert run.ratio == 16.0 and run.lr == 0.05
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+class TestExchangeRegistry:
+    def test_covers_all_four_modes(self):
+        assert {"dense", "slgs", "lags_dp", "lags_hier"} <= \
+            set(api.exchange_names())
+
+    def test_roundtrip_name_factory_name(self):
+        for name in ("dense", "slgs", "lags_dp", "lags_hier"):
+            strat = api.get_exchange(name)
+            assert strat.name == name
+            # the registered factory IS what build_exchange dispatches to
+            assert api.get_exchange(name).factory is strat.factory
+
+    def test_lookup_canonicalizes_alias(self):
+        assert api.get_exchange("lags").name == "lags_dp"
+
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(KeyError, match="lags_dp"):
+            api.get_exchange("nope")
+        with pytest.raises(KeyError, match="nope"):
+            api.get_exchange("nope")
+
+    def test_sim_and_distributed_from_same_spec(self):
+        p = _params()
+        kw = dict(mode="lags_dp", params_like=p, ratio=4.0)
+        sim = api.build_exchange(api.ExchangeSpec(sim=True, **kw))
+        dist = api.build_exchange(api.ExchangeSpec(sim=False, **kw))
+        assert isinstance(sim, lags.LAGSExchange)
+        assert isinstance(dist, lags.BlockLAGSExchange)
+        assert jax.tree.leaves(sim.ks) == jax.tree.leaves(dist.ks)
+
+    def test_distributed_lags_warns_on_ignored_compressor(self):
+        """Block-LAGS selects via block top-k; asking the distributed
+        surface for another compressor must not pass silently."""
+        with pytest.warns(UserWarning, match="block top-k"):
+            exch = api.build_exchange(api.ExchangeSpec(
+                "lags_dp", _params(), ratio=4.0, compressor="randk",
+                sim=False))
+        assert isinstance(exch, lags.BlockLAGSExchange)
+
+    def test_builtin_factories_build(self):
+        p = _params()
+        assert isinstance(
+            api.build_exchange(api.ExchangeSpec("dense", p)),
+            lags.DenseExchange)
+        slgs = api.build_exchange(
+            api.ExchangeSpec("slgs", p, ratio=10.0, compressor="randk"))
+        assert isinstance(slgs, lags.SLGSExchange)
+        assert slgs.k_total == 7 and slgs.compressor_name == "randk"
+
+    def test_third_party_exchange_consumes_schedule_end_to_end(self):
+        """A strategy registered OUTSIDE the repo consumes an autotuned
+        Schedule through the same ks ingestion as the built-ins."""
+        seen = {}
+
+        @api.register_exchange("test_thirdparty")
+        def _factory(spec):
+            seen["ks"] = spec.resolved_ks()
+            return lags.LAGSExchange(ks=seen["ks"],
+                                     compressor_name=spec.compressor)
+        try:
+            params = _params()
+            sched = _sched_for(params, ratio=4.0)
+            spec = api.ExchangeSpec(
+                mode="test_thirdparty", params_like=params,
+                ks=sched.ks_tree(params), sim=True, n_workers=2)
+            exch = api.build_exchange(spec)
+            by = sched.by_name
+            for (n, _), k in zip(S.leaf_entries(params),
+                                 jax.tree.leaves(seen["ks"])):
+                assert k == by[n].k
+            u = jax.tree.map(
+                lambda x: jnp.stack([x, 2.0 * x]), params)  # P=2 workers
+            mean, ef = exch.exchange(u, exch.init(u), None)
+            for leaf, m in zip(jax.tree.leaves(params),
+                               jax.tree.leaves(mean)):
+                assert m.shape == leaf.shape
+            assert "test_thirdparty" in api.exchange_names()
+        finally:
+            from repro.api import registry as R
+            R._EXCHANGES.pop("test_thirdparty", None)
+
+
+class TestCompressorRegistry:
+    def test_both_families_registered(self):
+        names = set(api.compressor_names())
+        assert "topk_exact" in names      # magnitude family
+        assert "randk" in names           # sampled family
+        assert not api.get_compressor("topk_exact").needs_key
+        assert api.get_compressor("randk").needs_key
+
+    def test_register_and_consume(self):
+        @api.register_compressor("test_firstk")
+        def _firstk(x, k):
+            idx = jnp.arange(min(k, x.shape[0]), dtype=jnp.int32)
+            return x[idx], idx
+        try:
+            exch = api.build_exchange(api.ExchangeSpec(
+                "lags_dp", _params(), ratio=4.0,
+                compressor="test_firstk", sim=True))
+            u = jax.tree.map(lambda x: x[None], _params())   # P=1
+            mean, _ = exch.exchange(u, exch.init(u), None)
+            flat = np.asarray(mean["w"]).reshape(-1)
+            k = exch.ks["w"]
+            assert (flat[k:] == 0).all() and (flat[:k] != 0).any()
+        finally:
+            C.REGISTRY.pop("test_firstk", None)
+
+    def test_unknown_compressor_lists_registered(self):
+        with pytest.raises(KeyError, match="topk_exact"):
+            api.get_compressor("nope")
+
+
+# ---------------------------------------------------------------------------
+# validate_for: one contract, both ingestion paths
+# ---------------------------------------------------------------------------
+
+class TestValidateFor:
+    def test_unit_rejections(self):
+        p = _params()
+        hs = _hier_for(p)
+        with pytest.raises(ValueError, match="lags_hier"):
+            S.validate_for(hs, "lags_dp")
+        with pytest.raises(ValueError, match="planned for"):
+            S.validate_for(_sched_for(p, train_mode="lags_hier"), "lags_dp")
+        with pytest.raises(ValueError, match="planned for"):
+            S.validate_for(_sched_for(p, train_mode="lags_dp"), "lags_hier")
+        with pytest.raises(ValueError, match="inner"):
+            S.validate_for(hs.inner, "lags_hier")
+        with pytest.warns(UserWarning, match="planned for 2 workers"):
+            S.validate_for(_sched_for(p, n_workers=2), "lags_dp",
+                           n_workers=8)
+        with pytest.raises(ValueError, match="leaf structure"):
+            S.validate_for(_sched_for(p), "lags_dp",
+                           params_like={"other": jnp.zeros((3,))})
+        # None and matching schedules pass silently
+        S.validate_for(None, "lags_dp")
+        S.validate_for(_sched_for(p, n_workers=4), "lags_dp", n_workers=4,
+                       params_like=p)
+        S.validate_for(hs, "lags_hier")
+
+    def test_distributed_ingestion(self):
+        cfg = _model_cfg("lags_dp")
+        mesh = _mesh()
+        from repro.launch import train as TR
+        sds, _ = TR.model_shapes_and_axes(cfg)
+        hs = _hier_for(sds)
+        with pytest.raises(ValueError, match="lags_hier"):
+            api.build_train_step(cfg, mesh, api.RunConfig(
+                schedule=hs, donate=False))
+        with pytest.raises(ValueError, match="planned for"):
+            api.build_train_step(cfg, mesh, api.RunConfig(
+                schedule=hs.outer, donate=False))
+        hcfg = _model_cfg("lags_hier")
+        with pytest.raises(ValueError, match="inner"):
+            api.build_train_step(hcfg, mesh, api.RunConfig(
+                schedule=hs.inner, donate=False))
+        with pytest.warns(UserWarning, match="planned for 2 workers"):
+            _, _, meta = api.build_train_step(hcfg, mesh, api.RunConfig(
+                schedule=hs, donate=False))
+        assert meta["ks"] is not None
+
+    def test_sim_ingestion(self):
+        from repro.training import train_loop as TL
+        p = _params()
+        hs = _hier_for(p)
+        with pytest.raises(ValueError, match="lags_hier"):
+            TL.SimTrainer(_loss, p, api.RunConfig(
+                mode="lags_dp", schedule=hs), n_workers=2)
+        with pytest.raises(ValueError, match="planned for"):
+            TL.SimTrainer(_loss, p, api.RunConfig(
+                mode="lags_dp",
+                schedule=_sched_for(p, train_mode="lags_hier")), n_workers=2)
+        with pytest.raises(ValueError, match="inner"):
+            TL.SimTrainer(_loss, p, api.RunConfig(
+                mode="lags_hier", schedule=hs.inner), n_workers=2)
+        with pytest.warns(UserWarning, match="planned for 8 workers"):
+            tr = TL.SimTrainer(_loss, p, api.RunConfig(
+                mode="lags_dp", schedule=_sched_for(p, n_workers=8)),
+                n_workers=2)
+        by = _sched_for(p).by_name
+        for (n, _), k in zip(S.leaf_entries(p),
+                             jax.tree.leaves(tr.exchange.ks)):
+            assert k == by[n].k
+
+    def test_duck_typed_schedule_still_ingests(self):
+        """The documented contract is 'anything with a ks_tree method' —
+        no provenance fields required on either surface."""
+        from repro.training import train_loop as TL
+
+        class KsOnly:
+            def ks_tree(self, params_like):
+                return jax.tree.map(lambda x: 2, params_like)
+
+        p = _params()
+        tr = TL.SimTrainer(_loss, p, api.RunConfig(
+            mode="lags_dp", schedule=KsOnly()), n_workers=2)
+        assert set(jax.tree.leaves(tr.exchange.ks)) == {2}
+        _, _, meta = api.build_train_step(
+            _model_cfg("lags_dp"), _mesh(),
+            api.RunConfig(schedule=KsOnly(), donate=False))
+        assert set(jax.tree.leaves(meta["ks"])) == {2}
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+class TestSession:
+    def test_train_step_cached_and_meta(self):
+        sess = api.Session(_model_cfg("lags_dp"),
+                           api.RunConfig(ratio=8.0, donate=False),
+                           mesh=_mesh())
+        built = sess.train_step()
+        assert sess.train_step() is built
+        _, _, meta = built
+        assert meta["mode"] == "lags_dp"
+        assert meta["run"].mode == "lags_dp"
+        assert meta["ks"] is not None
+
+    def test_run_mode_overrides_cfg(self):
+        sess = api.Session(_model_cfg("lags_dp"), api.RunConfig(mode="dense"))
+        assert sess.mode == "dense"
+        assert sess.cfg.train_mode == "dense"
+
+    def test_needs_mesh_error(self):
+        with pytest.raises(ValueError, match="mesh"):
+            api.Session(_model_cfg()).train_step()
+
+    def test_simulator_resolves_cfg_defaults(self):
+        cfg = _model_cfg("lags_dp")   # compression_ratio=8.0
+        p = _params()
+        tr = api.Session(cfg, api.RunConfig()).simulator(_loss, p,
+                                                         n_workers=2)
+        assert isinstance(tr.exchange, lags.LAGSExchange)
+        assert tr.exchange.ks == lags.ks_from_ratio(p, 8.0)
+
+    def test_distributed_step_runs(self):
+        from repro import compat
+        from repro.launch import specs as SP
+        from repro.configs import base
+        cfg = _model_cfg("lags_dp")
+        mesh = _mesh()
+        sess = api.Session(cfg, api.RunConfig(lr=0.1, chunk=16,
+                                              loss_chunk=16, donate=False),
+                           mesh=mesh)
+        step, _, meta = sess.train_step()
+        state, _ = sess.init_state()
+        batch = SP.concrete_batch(cfg, base.InputShape("t", 16, 4, "train"))
+        with compat.set_mesh(mesh):
+            state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# scheduled LR on the distributed path
+# ---------------------------------------------------------------------------
+
+class TestDistributedLrSchedule:
+    def test_schedule_drives_step_updates(self):
+        """lr_schedule(t)=0.3 for t==0 else 0: step 1 moves params,
+        step 2 must not — the step counter reaches the LR hook."""
+        from repro import compat
+        from repro.launch import specs as SP
+        from repro.configs import base
+        cfg = _model_cfg("lags_dp")
+        mesh = _mesh()
+        run = api.RunConfig(
+            ratio=1.0, chunk=16, loss_chunk=16, donate=False,
+            lr_schedule=lambda t: jnp.where(t == 0, 0.3, 0.0))
+        sess = api.Session(cfg, run, mesh=mesh)
+        step, _, _ = sess.train_step()
+        state0, _ = sess.init_state()
+        batch = SP.concrete_batch(cfg, base.InputShape("t", 16, 4, "train"))
+        with compat.set_mesh(mesh):
+            state1, _ = step(state0, batch)
+            state2, _ = step(state1, batch)
+        p0 = [np.asarray(x) for x in jax.tree.leaves(state0["params"])]
+        p1 = [np.asarray(x) for x in jax.tree.leaves(state1["params"])]
+        p2 = [np.asarray(x) for x in jax.tree.leaves(state2["params"])]
+        assert any((a != b).any() for a, b in zip(p0, p1))
+        for a, b in zip(p1, p2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_sim_and_dist_share_lr_hook(self):
+        """The same RunConfig.lr_at drives both surfaces."""
+        run = api.RunConfig(lr=0.5,
+                            lr_schedule=lambda t: 0.25 * (t + 1))
+        assert float(run.lr_at(1)) == 0.5
+        flat = api.RunConfig(lr=0.5)
+        assert flat.lr_at(123) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# per-step keys for sampled compressors (randk)
+# ---------------------------------------------------------------------------
+
+class TestCompressorKeyThreading:
+    def _exch(self, p=2, d=64, k=4):
+        exch = lags.LAGSExchange(ks={"w": k}, compressor_name="randk")
+        u = {"w": jnp.tile(jnp.linspace(1.0, 2.0, d), (p, 1))}
+        return exch, u
+
+    def test_different_keys_different_selection(self):
+        exch, u = self._exch()
+        ef = exch.init(u)
+        m1, _ = exch.exchange(u, ef, None, key=jax.random.PRNGKey(1))
+        m2, _ = exch.exchange(u, ef, None, key=jax.random.PRNGKey(2))
+        s1 = np.flatnonzero(np.asarray(m1["w"]))
+        s2 = np.flatnonzero(np.asarray(m2["w"]))
+        assert not np.array_equal(s1, s2)
+
+    def test_same_key_reproducible(self):
+        exch, u = self._exch()
+        ef = exch.init(u)
+        m1, _ = exch.exchange(u, ef, None, key=jax.random.PRNGKey(3))
+        m2, _ = exch.exchange(u, ef, None, key=jax.random.PRNGKey(3))
+        np.testing.assert_array_equal(np.asarray(m1["w"]),
+                                      np.asarray(m2["w"]))
+
+    def test_workers_draw_distinct_indices(self):
+        """Identical inputs on P=2 workers must not select identical
+        coordinates (the old PRNGKey(0)-for-everyone bug)."""
+        exch, u = self._exch(p=2, d=256, k=8)
+        m, _ = exch.exchange(u, exch.init(u), None,
+                             key=jax.random.PRNGKey(0))
+        support = np.flatnonzero(np.asarray(m["w"]))
+        assert len(support) > 8   # union of two distinct 8-subsets
+
+    def test_sim_trainer_varies_selection_per_step(self):
+        """Same batch, same params — only the step counter differs; randk
+        selection (hence the update support) must differ."""
+        from repro.training import train_loop as TL
+        p = {"w": jnp.linspace(0.5, 1.5, 64)}
+
+        def loss(pp, b):
+            return (jnp.sum((pp["w"] - b) ** 2), {})
+
+        batch = jnp.zeros((2, 64))   # P=2 workers
+        run = api.RunConfig(mode="lags_dp", ratio=8.0, lr=0.1,
+                            compressor="randk")
+        tr1 = TL.SimTrainer(loss, p, run, n_workers=2)
+        s1, _ = tr1._step(tr1.state, batch)
+        tr2 = TL.SimTrainer(loss, p, run, n_workers=2)
+        late = dict(tr2.state, step=jnp.asarray(7, jnp.int32))
+        s2, _ = tr2._step(late, batch)
+        w1, w2 = np.asarray(s1["params"]["w"]), np.asarray(s2["params"]["w"])
+        assert (w1 != w2).any()
+        # determinism: identical (seed, step) -> identical result
+        tr3 = TL.SimTrainer(loss, p, run, n_workers=2)
+        s3, _ = tr3._step(tr3.state, batch)
+        np.testing.assert_array_equal(w1, np.asarray(s3["params"]["w"]))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims stay functional
+# ---------------------------------------------------------------------------
+
+class TestDeprecatedShims:
+    def test_make_train_step_warns_and_works(self):
+        from repro.launch import train as TR
+        with pytest.warns(DeprecationWarning, match="make_train_step"):
+            _, _, meta = TR.make_train_step(_model_cfg("lags_dp"), _mesh(),
+                                            donate=False)
+        assert meta["mode"] == "lags_dp"
+        assert meta["ks"] is not None
+
+    def test_launch_make_exchange_warns(self):
+        from repro.launch import train as TR
+        cfg = _model_cfg()
+        with pytest.warns(DeprecationWarning, match="make_exchange"):
+            exch = TR.make_exchange(cfg, _params(), method="lags")
+        assert isinstance(exch, lags.BlockLAGSExchange)
+
+    def test_training_make_exchange_warns(self):
+        from repro.training import train_loop as TL
+        with pytest.warns(DeprecationWarning, match="make_exchange"):
+            exch = TL.make_exchange(TL.TrainConfig(method="lags",
+                                                   compression_ratio=4.0),
+                                    _params())
+        assert isinstance(exch, lags.LAGSExchange)
+
+    def test_sim_trainer_train_config_warns(self):
+        from repro.training import train_loop as TL
+        with pytest.warns(DeprecationWarning, match="RunConfig"):
+            tr = TL.SimTrainer(_loss, _params(),
+                               TL.TrainConfig(method="dense"), n_workers=2)
+        assert isinstance(tr.exchange, lags.DenseExchange)
+
+    def test_controller_legacy_kwargs_warn(self):
+        from repro.runtime import ReplanController, RuntimeConfig
+        cfg = _model_cfg("lags_dp")
+        with pytest.warns(DeprecationWarning, match="RunConfig"):
+            ctl = ReplanController(cfg, _mesh(),
+                                   rcfg=RuntimeConfig(replan_every=0),
+                                   comm_probe=lambda m, a: [],
+                                   chunk=16, loss_chunk=16)
+        assert ctl._run.chunk == 16 and ctl._run.donate is False
+
+    def test_controller_rejects_mixed_config(self):
+        from repro.runtime import ReplanController
+        with pytest.raises(ValueError, match="not both"):
+            ReplanController(_model_cfg("lags_dp"), _mesh(),
+                             run=api.RunConfig(), chunk=16)
