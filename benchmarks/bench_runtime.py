@@ -18,6 +18,11 @@ Two sections:
      degrades; the swapped-in schedule is a ``HierSchedule`` whose JSON
      round-trip and ``repro.api.build_train_step`` consumption are
      checked.
+  3. ``lags_hier2`` on the same multipod mesh — the INTRA-pod wire
+     degrades instead: the re-plan must turn the inner tier sparse and
+     hot-swap both tiers.  The swapped schedule is saved to the stable
+     path ``<out>/hier2_schedule.json`` (CI feeds it to
+     ``examples/train_e2e.py --hier-schedule``).
 
   PYTHONPATH=src python -m benchmarks.bench_runtime [--quick]
 
@@ -55,6 +60,27 @@ def _synth_samples(hw, p, sizes=(1 << 12, 1 << 16, 1 << 20)):
 def _mean_ratio(flat_sched) -> float:
     rs = [lp.ratio for lp in flat_sched.leaves]
     return sum(rs) / len(rs)
+
+
+def _check_schedule_artifact(tag, hs, path, cfg, mesh, note) -> int:
+    """Shared post-swap checks for a hierarchical schedule: save ->
+    ``load_any`` round-trip identity, then consumption through
+    ``api.build_train_step`` in the config's own mode.  Returns the
+    number of failed checks."""
+    from repro import api
+    from repro.autotune import schedule as SCH
+    bad = 0
+    hs.save(path)
+    loaded = SCH.load_any(path)
+    ok = loaded == hs
+    emit(f"runtime/{tag}/schedule_roundtrip_identity", int(ok), path)
+    bad += 0 if ok else 1
+    _, _, meta = api.build_train_step(
+        cfg, mesh, api.RunConfig(schedule=loaded, donate=False,
+                                 chunk=16, loss_chunk=16))
+    consumed = meta["ks"] is not None
+    emit(f"runtime/{tag}/consumed_by_build_train_step", int(consumed), note)
+    return bad + (0 if consumed else 1)
 
 
 def _drive(tag, ctl, cfg, seq, global_batch, steps, shift_at,
@@ -240,21 +266,66 @@ def run(argv=None) -> int:
             path = SCH.cache_path(args.out, hcfg.name, "runtime", 2,
                                   "degraded_dcn", train_mode="lags_hier",
                                   tiers=2)
-            hs.save(path)
-            loaded = SCH.load_any(path)
-            ok = loaded == hs
-            emit("runtime/hier/schedule_roundtrip_identity", int(ok), path)
-            bad += 0 if ok else 1
-            _, _, meta = api.build_train_step(
-                hcfg, hctl.mesh,
-                api.RunConfig(schedule=loaded, donate=False,
-                              chunk=16, loss_chunk=16))
-            consumed = meta["ks"] is not None
-            emit("runtime/hier/consumed_by_build_train_step", int(consumed),
-                 "outer-tier ks ingested in lags_hier mode")
-            bad += 0 if consumed else 1
+            bad += _check_schedule_artifact(
+                "hier", hs, path, hcfg, hctl.mesh,
+                "outer-tier ks ingested in lags_hier mode")
     if not np.isfinite(hres["loss"]):
         emit("runtime/hier/FAILED_nonfinite_loss", hres["loss"], "")
+        bad += 1
+
+    # ---- 3. two-level sparse (lags_hier2), ICI-only shift ------------------
+    header("runtime lags_hier2: cross-pod wire stays DCN, INTRA-pod "
+           "degrades -> inner tier goes sparse")
+    wires2 = {"data": fast, "pod": cm.TPU_DCN}
+
+    def probe_hier2(mesh, axes):
+        axes = tuple(axes)
+        if M.n_workers(mesh, axes) <= 1:
+            return []
+        hw = wires2["pod"] if "pod" in axes else wires2["data"]
+        return _synth_samples(hw, M.n_workers(mesh, axes))
+
+    h2cfg = small_cfg("lags_hier2")
+    h2ctl = api.Session(h2cfg, run, M.make_host_mesh(data=2, model=2, pod=2)) \
+        .controller(rcfg=rcfg, comm_probe=probe_hier2)
+    h2res = _drive("hier2", h2ctl, h2cfg, seq=16, global_batch=8,
+                   steps=steps, shift_at=shift_at,
+                   shift_fn=lambda: wires2.update(data=slow))
+
+    if h2res["swap_step"] is None:
+        emit("runtime/hier2/FAILED_no_swap_after_ici_shift", 0,
+             f"{[dataclasses.asdict(e) for e in h2res['post']]}")
+        bad += 1
+    else:
+        ttr = h2res["swap_step"] - shift_at
+        emit("runtime/hier2/time_to_replan_steps", ttr,
+             f"shift@{shift_at} -> swap@{h2res['swap_step']}")
+        if ttr > replan_every:
+            emit("runtime/hier2/FAILED_swap_outside_window", ttr, "")
+            bad += 1
+        hs2 = h2ctl.schedule
+        if getattr(hs2, "n_tiers", 1) != 2:
+            emit("runtime/hier2/FAILED_not_hier_schedule", 0, f"{type(hs2)}")
+            bad += 1
+        else:
+            emit("runtime/hier2/inner_mean_ratio", _mean_ratio(hs2.inner),
+                 "ICI tier: SPARSE after the intra-pod shift")
+            emit("runtime/hier2/outer_mean_ratio", _mean_ratio(hs2.outer),
+                 "DCN tier")
+            if not _mean_ratio(hs2.inner) > 1.0:
+                emit("runtime/hier2/FAILED_inner_still_dense",
+                     _mean_ratio(hs2.inner), "")
+                bad += 1
+            if hs2.inner.train_mode != "lags_hier2":
+                emit("runtime/hier2/FAILED_provenance",
+                     hs2.inner.train_mode, "")
+                bad += 1
+            # stable artifact for CI's train_e2e --hier-schedule step
+            bad += _check_schedule_artifact(
+                "hier2", hs2, os.path.join(args.out, "hier2_schedule.json"),
+                h2cfg, h2ctl.mesh, "both tiers ingested in lags_hier2 mode")
+    if not np.isfinite(h2res["loss"]):
+        emit("runtime/hier2/FAILED_nonfinite_loss", h2res["loss"], "")
         bad += 1
     return bad
 

@@ -13,6 +13,11 @@ checkpointing and a JSONL metrics log.
   # hierarchical mode on a 2-pod mesh consuming a planned two-tier schedule:
   PYTHONPATH=src python examples/train_e2e.py --method lags_hier \
       --pod 2 --data-par 2 --hier-schedule artifacts/runtime/..._t2_....json
+  # two-level SPARSE hierarchy (sparse intra-pod + cross-pod exchange);
+  # the schedule's inner tier budgets the ICI exchange, or use
+  # --ratio-inner for a scalar inner budget without a schedule:
+  PYTHONPATH=src python examples/train_e2e.py --method lags_hier2 \
+      --pod 2 --data-par 2 --hier-schedule artifacts/runtime/hier2_schedule.json
 
 NOTE: sets XLA_FLAGS before importing jax to get an 8-device host platform.
 """
@@ -44,6 +49,10 @@ PRESETS = {
     # ~4M params: CI-speed
     "small": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
                   d_ff=512, vocab=2048, head_dim=32),
+    # unit-test scale, leaf-for-leaf the config benchmarks.bench_runtime
+    # drives — its saved hier2_schedule.json ingests directly here
+    "tiny": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                 d_ff=128, vocab=64),
 }
 
 
@@ -56,7 +65,11 @@ def main():
     ap.add_argument("--lr", type=float, default=0.25)
     ap.add_argument("--ratio", type=float, default=100.0)
     ap.add_argument("--method", default="lags_dp",
-                    choices=["lags_dp", "lags_hier", "dense"])
+                    choices=["lags_dp", "lags_hier", "lags_hier2", "dense"])
+    ap.add_argument("--ratio-inner", type=float, default=None,
+                    help="intra-pod tier compression for --method "
+                         "lags_hier2 (default: dense inner tier; a "
+                         "--hier-schedule's inner tier wins over this)")
     ap.add_argument("--data-par", type=int, default=4)
     ap.add_argument("--model-par", type=int, default=2)
     ap.add_argument("--pod", type=int, default=1,
@@ -91,7 +104,8 @@ def main():
 
     sess = api.Session(
         cfg,
-        api.RunConfig(mode=args.method, ratio=args.ratio, lr=args.lr,
+        api.RunConfig(mode=args.method, ratio=args.ratio,
+                      ratio_inner=args.ratio_inner, lr=args.lr,
                       schedule=schedule, chunk=min(1024, args.seq),
                       loss_chunk=min(512, args.seq), donate=False),
         mesh=mesh)

@@ -37,7 +37,7 @@ The legacy entry points (``launch.train.make_train_step``,
 ``DeprecationWarning``-emitting shims over this module.
 """
 from repro.api.config import RunConfig, canonical_mode
-from repro.api.registry import (ExchangeSpec, ExchangeStrategy,
+from repro.api.registry import (ExchangeSpec, ExchangeStrategy, TieredKs,
                                 build_exchange, compressor_names,
                                 exchange_names, get_compressor,
                                 get_exchange, register_compressor,
@@ -46,7 +46,7 @@ from repro.api.session import Session, build_train_step
 
 __all__ = [
     "RunConfig", "canonical_mode", "ExchangeSpec", "ExchangeStrategy",
-    "build_exchange", "compressor_names", "exchange_names",
+    "TieredKs", "build_exchange", "compressor_names", "exchange_names",
     "get_compressor", "get_exchange", "register_compressor",
     "register_exchange", "Session", "build_train_step",
 ]

@@ -53,6 +53,13 @@ class RunConfig:
     # exchange strategy (canonical vocabulary; legacy "lags" accepted)
     mode: str | None = None
     ratio: float | None = None
+    # intra-pod (inner) tier ratio for the two-level sparse "lags_hier2"
+    # mode; None = dense inner tier (ratio 1), i.e. lags_hier semantics
+    ratio_inner: float | None = None
+    # sim-surface pod factorization for "lags_hier2": the leading P axis
+    # factors as (P // inner_workers) pods x inner_workers.  The
+    # distributed surface ignores this and reads the mesh instead.
+    inner_workers: int | None = None
     compressor: str = "topk_exact"
     block_size: int = 4096
     # optional autotuned per-leaf plan (repro.autotune Schedule /
@@ -90,6 +97,10 @@ class RunConfig:
         if cfg is not None:
             return float(cfg.compression_ratio)
         return 250.0   # the legacy TrainConfig default
+
+    def resolved_ratio_inner(self) -> float:
+        """Inner-tier ratio (lags_hier2): ``None`` means dense (1.0)."""
+        return 1.0 if self.ratio_inner is None else float(self.ratio_inner)
 
     def lr_at(self, step):
         """Learning rate at ``step`` (jax scalar ok) — schedule wins."""

@@ -38,31 +38,60 @@ from repro.core import lags
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class TieredKs:
+    """Two-tier per-leaf budget container (deliberately NOT a pytree).
+
+    ``resolve_schedule_ks`` packs a ``HierSchedule``'s two ks trees into
+    one of these for strategies that consume both tiers (``ef_tiers``
+    registrations, e.g. ``lags_hier2``); either tree may be ``None``,
+    meaning that tier falls back to the spec's scalar ratio.
+    """
+    inner: Any = None
+    outer: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
 class ExchangeSpec:
     """Everything a strategy factory may need to build an exchange.
 
     Both surfaces construct one: the distributed step builder fills
     ``row_axes`` / ``shard_dims`` from the mesh and sets ``sim=False``;
     ``SimTrainer`` sets ``sim=True``.  ``ks`` (from an autotuned
-    ``Schedule``) overrides the scalar ``ratio`` when present.
+    ``Schedule``) overrides the scalar ``ratio`` when present; two-tier
+    strategies additionally read ``ks.inner`` / ``ratio_inner`` for the
+    intra-pod tier and ``n_inner`` for the sim-path pod factorization.
     """
     mode: str
     params_like: Any                 # pytree of arrays / ShapeDtypeStructs
     ratio: float = 250.0
-    ks: Any = None                   # per-leaf k^(l) override (schedule)
+    ks: Any = None                   # per-leaf k^(l) override (schedule),
+                                     # or a TieredKs for two-tier modes
     block_size: int = 4096
     compressor: str = "topk_exact"
     sim: bool = False                # leading-P simulation vs distributed
     n_workers: int = 1
+    # two-tier (lags_hier2) knobs: intra-pod ratio fallback + how many of
+    # the n_workers are intra-pod (sim path; distributed reads the mesh)
+    ratio_inner: float = 1.0
+    n_inner: int = 1
     # distributed-only layout hints (see lags.BlockLAGSExchange)
     row_axes: tuple = ()
     shard_dims: Any = None
 
     def resolved_ks(self):
-        """The per-leaf budget tree: schedule override or scalar ratio."""
-        if self.ks is not None:
-            return self.ks
+        """The per-leaf budget tree of the (outer) sparse exchange:
+        schedule override or scalar ratio."""
+        ks = self.ks.outer if isinstance(self.ks, TieredKs) else self.ks
+        if ks is not None:
+            return ks
         return lags.ks_from_ratio(self.params_like, self.ratio)
+
+    def resolved_ks_inner(self):
+        """Intra-pod tier budget tree (two-tier modes): schedule override
+        or the scalar ``ratio_inner`` (default 1.0 = dense inner)."""
+        if isinstance(self.ks, TieredKs) and self.ks.inner is not None:
+            return self.ks.inner
+        return lags.ks_from_ratio(self.params_like, self.ratio_inner)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,19 +111,27 @@ class ExchangeStrategy:
     name: str
     factory: Callable[[ExchangeSpec], Any]
     axes: str = "data_manual"
+    # EF-state layout: () = one residual tree (classic); a non-empty tuple
+    # of tier names means the exchange's state is {tier: residual_tree},
+    # and the state-spec builders (launch.train / SimTrainer) replicate
+    # the per-worker residual layout once per tier.  Two-tier schedule
+    # ingestion (resolve_schedule_ks -> TieredKs) also keys off this.
+    ef_tiers: tuple = ()
 
 
 _EXCHANGES: dict[str, ExchangeStrategy] = {}
 
 
-def register_exchange(name: str, *, axes: str = "data_manual"):
+def register_exchange(name: str, *, axes: str = "data_manual",
+                      ef_tiers: tuple = ()):
     """Decorator: register ``factory(spec) -> exchange`` under ``name``."""
     if axes not in ("data_manual", "pod_auto", "none"):
         raise ValueError(f"unknown axes plan {axes!r}")
 
     def deco(factory):
         _EXCHANGES[name] = ExchangeStrategy(name=name, factory=factory,
-                                            axes=axes)
+                                            axes=axes,
+                                            ef_tiers=tuple(ef_tiers))
         return factory
     return deco
 
@@ -125,14 +162,27 @@ def resolve_schedule_ks(schedule, mode: str, params_like, *,
                         n_workers: int | None = None):
     """Validate + ingest an autotuned schedule: the ONE sequence both
     surfaces run (``validate_for`` then ``ks_tree``).  Returns the
-    per-leaf k tree, or None when there is nothing to ingest (no
-    schedule, or a dense mode)."""
+    per-leaf k tree — or, for strategies registered with ``ef_tiers``
+    (two-tier modes), a :class:`TieredKs` carrying BOTH tiers' k trees —
+    or None when there is nothing to ingest (no schedule, or a dense
+    mode)."""
     if schedule is None or mode == "dense":
         return None
     # lazy: repro.autotune.__init__ pulls in the profiler, which imports
     # the train-step builder back
     from repro.autotune import schedule as SCH
     SCH.validate_for(schedule, mode, n_workers=n_workers)
+    strat = _EXCHANGES.get(canonical_mode(mode))
+    if strat is not None and strat.ef_tiers:
+        tiers = getattr(schedule, "tiers", None)
+        if tiers is not None:        # HierSchedule: both tiers consumed
+            return TieredKs(inner=tiers["inner"].ks_tree(params_like),
+                            outer=tiers["outer"].ks_tree(params_like))
+        if getattr(schedule, "tier", "") == "inner":
+            # a lone inner-tier plan budgets the intra-pod exchange only;
+            # the outer tier falls back to the spec's scalar ratio
+            return TieredKs(inner=schedule.ks_tree(params_like))
+        return TieredKs(outer=schedule.ks_tree(params_like))
     return schedule.ks_tree(params_like)
 
 
@@ -184,10 +234,30 @@ def _lags_factory(spec: ExchangeSpec):
 register_exchange("lags_dp")(_lags_factory)
 # lags_hier shares the exchange object (the sparse cross-pod stage runs
 # the leading-P path over the vmap'd pod dim); what differs is the axis
-# plan: pure-auto GSPMD with 'pod' as the worker dim.  A sparse-INTRA-pod
-# variant (lags.HierLAGSExchange with inner_axes) plugs in here without
-# touching the step builder — register it under its own name.
+# plan: pure-auto GSPMD with 'pod' as the worker dim.  The intra-pod
+# reduction is GSPMD's dense all-reduce; when contended ICI should go
+# sparse too, use "lags_hier2" below.
 register_exchange("lags_hier", axes="pod_auto")(_lags_factory)
+
+
+@register_exchange("lags_hier2", axes="data_manual",
+                   ef_tiers=("inner", "outer"))
+def _hier2_factory(spec: ExchangeSpec):
+    """Two-level sparse hierarchy: sparse intra-pod (ICI) LAGS exchange
+    with its own per-leaf ``ks_inner`` + residual, then the sparse
+    cross-pod (DCN) all-gather on the pod mean with a second residual.
+
+    Registered with the ``data_manual`` axis plan: every (pod, data)
+    coordinate is a worker with its own gradient (params replicated over
+    the data axes, sharded over 'model' only) — the memory/traffic
+    tradeoff vs ``lags_hier``'s FSDP is sparse ICI traffic instead of
+    param sharding.  One exchange class serves both surfaces, so a run
+    validated in simulation deploys with identical selection semantics.
+    """
+    return lags.SparseHierLAGSExchange(
+        ks=spec.resolved_ks(), ks_inner=spec.resolved_ks_inner(),
+        n_inner=max(1, int(spec.n_inner)),
+        compressor_name=spec.compressor)
 
 
 # ---------------------------------------------------------------------------

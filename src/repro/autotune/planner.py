@@ -72,6 +72,17 @@ def plan_schedule(leaves: Sequence, p: int, hw: cm.Hardware, *,
                       leaves=tuple(plans), train_mode=train_mode)
 
 
+def leaf_comm_time(d: int, ratio: float, p: int, hw: cm.Hardware) -> float:
+    """Per-leaf exchange time under a planned ratio: dense all-reduce at
+    ratio <= 1, sparse all-gather + selection overhead otherwise.  The
+    ONE pricing both predictors (flat ``predict_iteration`` and
+    ``runtime.hier.predict_hier_iteration``) use."""
+    if ratio <= 1.0:
+        return cm.allreduce_time(4 * d, p, hw)
+    return (cm.sparse_allgather_time(d, ratio, p, hw)
+            + adaptive.sparsification_overhead(d, hw))
+
+
 def predict_iteration(leaves: Sequence, sched: S.Schedule, p: int,
                       hw: cm.Hardware, t_forward: float) -> dict:
     """Predicted wall-clock for one iteration under the planned schedule.
@@ -83,12 +94,7 @@ def predict_iteration(leaves: Sequence, sched: S.Schedule, p: int,
     t_b, t_c = [], []
     for leaf in leaves:
         t_b.append(leaf.t_backward)
-        c = ratio[leaf.name]
-        if c <= 1.0:
-            t_c.append(cm.allreduce_time(4 * leaf.d, p, hw))
-        else:
-            t_c.append(cm.sparse_allgather_time(leaf.d, c, p, hw)
-                       + adaptive.sparsification_overhead(leaf.d, hw))
+        t_c.append(leaf_comm_time(leaf.d, ratio[leaf.name], p, hw))
     t_lags = cm.iteration_time_lags(t_forward, t_b, t_c)
     t_comm = sum(t_c)
     t_back = sum(t_b)

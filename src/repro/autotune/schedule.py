@@ -29,6 +29,12 @@ import jax
 
 SCHEDULE_VERSION = 2
 
+#: Train modes that split the exchange into intra-pod / cross-pod tiers
+#: and may therefore consume a two-tier ``HierSchedule``.  ``lags_hier``
+#: consumes the outer tier only (dense ICI reduction); ``lags_hier2``
+#: consumes both tiers (sparse intra-pod exchange).
+HIER_MODES = ("lags_hier", "lags_hier2")
+
 
 def _path_str(path) -> str:
     """Stable string form of a jax key path ('layers/0/attn/wq')."""
@@ -169,17 +175,20 @@ class Schedule:
 
 @dataclasses.dataclass(frozen=True)
 class HierSchedule:
-    """Two-tier schedule for the ``lags_hier`` train mode.
+    """Two-tier schedule for the hierarchical train modes (HIER_MODES).
 
-    ``inner`` plans the intra-pod tier (fast ICI — usually dense, ratio 1,
-    because the wire hides behind backward compute; recorded so a future
-    sparse-intra-pod exchange can consume it) and ``outer`` plans the
-    cross-pod tier (slow DCN — the sparse LAGS exchange).  Each tier is a
-    full flat :class:`Schedule` solved against that tier's own fitted
-    α/β ``hardware`` and worker count.  The train step's sparse exchange
-    runs over the *outer* tier, so :meth:`ks_tree` ingestion forwards to
-    ``outer`` — the same ``core.lags.ks_from_ratios_tree`` path as flat
-    schedules.
+    ``inner`` plans the intra-pod tier (fast ICI — dense, ratio 1,
+    whenever the wire hides behind backward compute; sparse when ICI is
+    contended) and ``outer`` plans the cross-pod tier (slow DCN — the
+    sparse LAGS exchange).  Each tier is a full flat :class:`Schedule`
+    solved against that tier's own fitted α/β ``hardware`` and worker
+    count.  Consumption depends on the mode: ``lags_hier`` ingests the
+    *outer* tier only (its intra-pod reduction is GSPMD's dense
+    all-reduce), while ``lags_hier2`` executes BOTH tiers — its sparse
+    intra-pod exchange takes ``inner``'s k's and the cross-pod exchange
+    takes ``outer``'s (``repro.api.registry.resolve_schedule_ks``).
+    The default :meth:`ks_tree` forwards to ``outer`` — the same
+    ``core.lags.ks_from_ratios_tree`` path as flat schedules.
     """
     arch: str
     shape: str
@@ -269,15 +278,21 @@ def validate_for(sched, mode: str, *, n_workers: int | None = None,
 
     Hoisted out of ``launch.train.make_train_step`` so the distributed
     step builder, ``SimTrainer``, and the runtime controller all enforce
-    the SAME contract:
+    the SAME contract.  Only genuinely unconsumable combinations reject:
 
-      * a two-tier ``HierSchedule`` only feeds the ``lags_hier`` mode
-        (its outer tier budgets the sparse cross-pod exchange);
-      * a flat schedule planned for one wire must not silently feed the
-        other (per-leaf k's priced for intra-pod ICI are far too dense
-        for the cross-pod DCN exchange, and vice versa);
-      * the intra-pod (inner) tier of a ``HierSchedule`` — near-dense by
-        construction — must never leak into the sparse exchange;
+      * a two-tier ``HierSchedule`` only feeds the hierarchical modes
+        (``HIER_MODES``): ``lags_hier`` ingests its outer tier,
+        ``lags_hier2`` executes both tiers;
+      * a flat schedule planned for one family of wires must not silently
+        feed the other (per-leaf k's priced for a flat data-parallel
+        exchange mis-price both tiers of a hierarchical one, and vice
+        versa);
+      * a lone intra-pod (inner) tier — near-dense by construction — may
+        ONLY feed ``lags_hier2``, the one mode that actually runs a
+        sparse intra-pod exchange (it budgets that tier; the outer tier
+        falls back to the configured ratio).  Every other mode would pipe
+        those near-dense k's into its cross-pod/flat sparse exchange, so
+        the combination rejects;
       * a worker-count mismatch WARNS rather than fails: Eq. 18 ratios
         solved for a different P still converge (Lemma 1), and what-if
         consumption of a production plan on a host mesh is a supported
@@ -290,25 +305,40 @@ def validate_for(sched, mode: str, *, n_workers: int | None = None,
     if sched is None:
         return
     n_tiers = int(getattr(sched, "n_tiers", 1))
-    if n_tiers > 1 and mode != "lags_hier":
+    if n_tiers > 1 and mode not in HIER_MODES:
         raise ValueError(
-            f"hierarchical schedule (n_tiers={n_tiers}) requires train "
-            f"mode 'lags_hier', got {mode!r}")
+            f"hierarchical schedule (n_tiers={n_tiers}) requires a "
+            f"hierarchical train mode (one of {list(HIER_MODES)}), "
+            f"got {mode!r}")
     flat_mode = getattr(sched, "train_mode", None)
     if (n_tiers == 1 and flat_mode is not None
-            and (flat_mode == "lags_hier") != (mode == "lags_hier")):
+            and (flat_mode in HIER_MODES) != (mode in HIER_MODES)):
         raise ValueError(
             f"schedule was planned for train_mode={flat_mode!r} but "
             f"this step runs {mode!r} (re-plan, or load the matching "
             f"cache entry)")
-    if getattr(sched, "tier", "") == "inner":
+    if getattr(sched, "tier", "") == "inner" and mode != "lags_hier2":
         raise ValueError(
-            "this is the intra-pod (inner) tier of a HierSchedule — "
-            "its near-dense k's must not feed the cross-pod exchange; "
-            "pass the full HierSchedule or its outer tier")
+            f"this is the intra-pod (inner) tier of a HierSchedule — "
+            f"its near-dense k's must not feed the sparse cross-pod "
+            f"exchange of {mode!r}; pass the full HierSchedule (or its "
+            f"outer tier), or consume the inner tier with "
+            f"train mode 'lags_hier2', whose intra-pod exchange is sparse")
     # duck-typed schedules ("anything with a ks_tree method") may carry no
     # worker-count provenance at all — skip the check, don't crash
-    planned = getattr(getattr(sched, "outer", sched), "n_workers", None)
+    if n_tiers > 1 and mode == "lags_hier2":
+        # both tiers execute: the mesh worker count is the tier product
+        p_in = getattr(sched.inner, "n_workers", None)
+        p_out = getattr(sched.outer, "n_workers", None)
+        planned = (int(p_in) * int(p_out)
+                   if p_in is not None and p_out is not None else None)
+    elif getattr(sched, "tier", "") == "inner":
+        # a lone inner tier budgets the intra-pod exchange only; its
+        # n_workers is the PER-POD inner count, which the total mesh
+        # worker count cannot be compared against — skip the check
+        planned = None
+    else:
+        planned = getattr(getattr(sched, "outer", sched), "n_workers", None)
     if n_workers is not None and planned is not None:
         planned_p = int(planned)
         if planned_p != int(n_workers):

@@ -51,7 +51,7 @@ class ModelConfig:
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
     # distribution / LAGS defaults
-    train_mode: str = "lags_dp"      # lags_dp | lags_hier | dense
+    train_mode: str = "lags_dp"      # lags_dp | lags_hier | lags_hier2 | dense
     moe_shard: str = "ffn"           # "ffn": shard expert d_ff over TP
                                      # "experts": shard the expert dim
     compression_ratio: float = 1000.0

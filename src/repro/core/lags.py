@@ -121,12 +121,43 @@ def _leaf_key(key, leaf_no: int, worker=None):
     fixed stream — still distinct per leaf/worker, but identical every
     step.  Train loops pass a per-step key (fold_in of the step counter)
     so sampled selection (randk) draws fresh indices each step.
+
+    ``worker`` must be the FULL linearized worker coordinate of whoever
+    runs the selection (``_worker_index`` over every axis the selected
+    data varies across).  Hierarchical exchanges fold the (outer, inner)
+    coordinate for the intra-pod tier — where each worker selects on its
+    own gradient — but only the outer (pod) coordinate for the cross-pod
+    tier, where the accumulator is replicated within the pod and every
+    inner worker must draw the SAME selection.
     """
     base = key if key is not None else jax.random.PRNGKey(0)
     k = jax.random.fold_in(base, leaf_no)
     if worker is not None:
         k = jax.random.fold_in(k, worker)
     return k
+
+
+def _worker_keys(key, leaf_no: int, p):
+    """(p,) stacked keys: ``fold_in(leaf_key, w)`` for ``w in range(p)``.
+
+    The simulation (leading-P) paths use this so worker ``w`` draws the
+    SAME stream the distributed path derives via
+    ``_leaf_key(key, leaf_no, _worker_index(axes))`` — sim and
+    distributed randk selections match coordinate for coordinate.
+    """
+    lk = _leaf_key(key, leaf_no)
+    return jax.vmap(lambda w: jax.random.fold_in(lk, w))(jnp.arange(p))
+
+
+def _sparse_mean_over(vals, idx, d: int, axes) -> jax.Array:
+    """All-gather each worker's sparse (vals, idx) over the manual
+    ``axes`` and scatter-mean into a dense d-vector; ``axes=()`` is the
+    single-worker degeneracy (plain decompress)."""
+    if axes:
+        vals_all = jax.lax.all_gather(vals, axes, tiled=False)
+        idx_all = jax.lax.all_gather(idx, axes, tiled=False)
+        return _gathered_scatter_mean(vals_all, idx_all, d, _axis_prod(axes))
+    return C.decompress(vals, idx, d)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,7 +217,7 @@ class LAGSExchange:
                 d = u[0].size
                 p = u.shape[0]
                 if needs_key:
-                    wkeys = jax.random.split(_leaf_key(key, i), p)
+                    wkeys = _worker_keys(key, i, p)
                     vals, idx, resid = jax.vmap(
                         lambda uu, ee, kk: local_select(
                             ee + uu.astype(ee.dtype), k, self.compressor,
@@ -218,10 +249,7 @@ class LAGSExchange:
             vals, idx, resid = local_select(acc, k, self.compressor,
                                             key=wk, **kw)
             # layer-wise sparse all-gather: ships 2*k scalars per worker
-            vals_all = jax.lax.all_gather(vals, axes, tiled=False)
-            idx_all = jax.lax.all_gather(idx, axes, tiled=False)
-            p = _axis_prod(axes)
-            mean = _gathered_scatter_mean(vals_all, idx_all, u.size, p)
+            mean = _sparse_mean_over(vals, idx, u.size, axes)
             return mean.reshape(u.shape).astype(u.dtype), resid
 
         flat_u, treedef = jax.tree.flatten(updates)
@@ -276,7 +304,7 @@ class SLGSExchange:
                     key=(wk if needs_key else None), **kw)
                 return vals, idx, resid_vec
 
-            wkeys = jax.random.split(_leaf_key(key, 0), p)
+            wkeys = _worker_keys(key, 0, p)
             vals, idx, resid_vec = jax.vmap(worker)(flat_u, flat_e, wkeys)
             mean_vec = _gathered_scatter_mean(vals, idx, d, p)
             means, resids, off = [], [], 0
@@ -292,10 +320,7 @@ class SLGSExchange:
         wk = _leaf_key(key, 0, _worker_index(axes)) if needs_key else None
         vals, idx, resid_vec = local_select(vec, self.k_total,
                                             self.compressor, key=wk, **kw)
-        vals_all = jax.lax.all_gather(vals, axes, tiled=False)
-        idx_all = jax.lax.all_gather(idx, axes, tiled=False)
-        p = _axis_prod(axes)
-        mean_vec = _gathered_scatter_mean(vals_all, idx_all, vec.shape[0], p)
+        mean_vec = _sparse_mean_over(vals, idx, vec.shape[0], axes)
         means, resids, off = [], [], 0
         for u in flat_u:
             n = u.size
@@ -527,17 +552,14 @@ class HierLAGSExchange:
             if self.inner_axes:
                 u = _psum_mean(u, self.inner_axes)
             acc = e + u.astype(e.dtype)
+            # the dense inner mean replicates ``acc`` within the pod, so
+            # the key folds ONLY the outer (pod) coordinate — every inner
+            # worker must draw the same selection (see _leaf_key)
             wk = (_leaf_key(key, i, _worker_index(self.outer_axes))
                   if needs_key else None)
             vals, idx, resid = local_select(acc, k, self.compressor,
                                             key=wk, **kw)
-            if self.outer_axes:
-                vals_all = jax.lax.all_gather(vals, self.outer_axes, tiled=False)
-                idx_all = jax.lax.all_gather(idx, self.outer_axes, tiled=False)
-                p = _axis_prod(self.outer_axes)
-                mean = _gathered_scatter_mean(vals_all, idx_all, u.size, p)
-            else:
-                mean = C.decompress(vals, idx, u.size)
+            mean = _sparse_mean_over(vals, idx, u.size, self.outer_axes)
             return mean.reshape(u.shape).astype(u.dtype), resid
 
         flat_u, treedef = jax.tree.flatten(updates)
@@ -547,3 +569,177 @@ class HierLAGSExchange:
                for i, (u, e, k) in enumerate(zip(flat_u, flat_e, flat_k))]
         return (treedef.unflatten([o[0] for o in out]),
                 treedef.unflatten([o[1] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# Two-level sparse hierarchy ("lags_hier2"): BOTH tiers sparse.  The inner
+# (intra-pod ICI) tier runs a per-worker LAGS selection with its own
+# per-leaf budget ks_inner and its own error-feedback residual; the outer
+# (cross-pod DCN) tier runs the sparse all-gather on the inner-tier mean
+# with a second residual.  Covered by Lemma 1 twice over: the partition
+# pieces are the leaves at each tier, and the k-contraction argument of
+# Alistarh et al. (arXiv 1809.10505) composes across the two EF levels.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SparseHierLAGSExchange:
+    """Sparse-intra-pod hierarchical LAGS ("lags_hier2").
+
+    Per leaf, per step:
+
+      1. inner tier — each worker accumulates its inner residual
+         (``acc_in = e_in + u``), selects ``ks_inner`` entries, and the
+         selections are scatter-meaned within the pod (``inner`` axes);
+      2. outer tier — the pod-level mean lands on a second accumulator
+         (``acc_out = e_out + m``, replicated across the pod), ``ks``
+         entries are selected and scatter-meaned across pods (``outer``
+         axes).
+
+    Per-tier invariant: ``acc == selected + residual`` (Algorithm 1
+    lines 7-9, applied once per tier).  State is a two-tree dict
+    ``{"inner": resid, "outer": resid}``; the outer residual is
+    replicated across the inner workers of a pod (same data, same key,
+    deterministic ops), which keeps the distributed manual path and the
+    leading-P simulation path bit-identical.
+
+    Degeneracies (pinned by tests): inner ratio 1 (ks_inner = dims)
+    reduces tier 1 to the dense intra-pod mean — the existing
+    ``lags_hier`` semantics; a single pod (no outer axes) with outer
+    ratio 1 reduces to ``lags_dp`` with ``ks = ks_inner``.
+
+    Distributed, the exchange runs inside shard_map-MANUAL axes and
+    splits ``axis_names`` itself: ``outer_axis`` (default 'pod') carries
+    the cross-pod tier, every other manual axis is intra-pod.  In
+    simulation (``axis_names=None``) the leading ``P`` axis factors as
+    ``(n_outer, n_inner)``, outer-major — the same linearization
+    ``_worker_index`` produces for ('pod', 'data')."""
+    ks: Any                        # outer-tier per-leaf k (cross-pod DCN)
+    ks_inner: Any                  # inner-tier per-leaf k (intra-pod ICI)
+    n_inner: int = 1               # leading-P factorization (sim path only)
+    outer_axis: str = "pod"
+    compressor_name: str = "topk_exact"
+    residual_dtype: Any = jnp.float32
+    name: str = "lags_hier2"
+    compressor_kwargs: tuple = ()
+
+    @property
+    def compressor(self) -> C.Compressor:
+        return C.get_compressor(self.compressor_name)
+
+    def init(self, updates_like):
+        def zeros(u):
+            return jax.tree.map(
+                lambda x: jnp.zeros(x.shape, self.residual_dtype), u)
+        return {"inner": zeros(updates_like), "outer": zeros(updates_like)}
+
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
+        kw = dict(self.compressor_kwargs)
+        needs_key = self.compressor.needs_key
+        comp = self.compressor
+
+        flat_u, treedef = jax.tree.flatten(updates)
+        flat_ei = treedef.flatten_up_to(state["inner"])
+        flat_eo = treedef.flatten_up_to(state["outer"])
+        flat_ki = treedef.flatten_up_to(self.ks_inner)
+        flat_ko = treedef.flatten_up_to(self.ks)
+
+        if axis_names is None:
+            # --- simulation path: leading P = n_outer * n_inner ------------
+            n_in = max(1, int(self.n_inner))
+
+            def leaf_fn(i, u, e_in, e_out, k_in, k_out):
+                p = u.shape[0]
+                if p % n_in:
+                    raise ValueError(
+                        f"P={p} workers do not factor into n_inner={n_in} "
+                        f"per pod (leaf {i})")
+                n_out = p // n_in
+                d = u[0].size
+                # inner tier: per-worker selection, full-coordinate keys
+                if needs_key:
+                    wkeys = _worker_keys(key, i, p)
+                    vals, idx, resid_in = jax.vmap(
+                        lambda uu, ee, kk: local_select(
+                            ee + uu.astype(ee.dtype), k_in, comp,
+                            key=kk, **kw))(u, e_in, wkeys)
+                else:
+                    vals, idx, resid_in = jax.vmap(
+                        lambda uu, ee: local_select(
+                            ee + uu.astype(ee.dtype), k_in, comp, **kw)
+                    )(u, e_in)
+                # intra-pod scatter-mean: group the (P, k) selections by pod
+                m = jax.vmap(
+                    lambda v, ix: _gathered_scatter_mean(v, ix, d, n_in))(
+                        vals.reshape(n_out, n_in, -1),
+                        idx.reshape(n_out, n_in, -1))       # (n_out, d)
+                # outer tier: one accumulator per pod (e_out is replicated
+                # within the pod — take the pod's first copy), outer-only
+                # keys.  When this leaf's inner tier is dense (k_in >= d)
+                # the exchange degenerates to lags_hier and the outer
+                # stream must be LAGSExchange's fold_in(leaf_key, o)
+                # exactly; when the inner tier is SPARSE, shift the outer
+                # stream past the inner worker-index space (p + o) so the
+                # two tiers draw independent randk samples instead of pod
+                # o's outer selection colliding with worker o's inner one
+                e_pod = e_out.reshape((n_out, n_in) + e_out.shape[1:])[:, 0]
+                acc_out = e_pod + m.reshape((n_out,) + u.shape[1:])
+                o_base = 0 if int(k_in) >= d else p
+                if needs_key:
+                    lk = _leaf_key(key, i)
+                    okeys = jax.vmap(lambda o: jax.random.fold_in(lk, o))(
+                        jnp.arange(o_base, o_base + n_out))
+                    vals2, idx2, resid_out = jax.vmap(
+                        lambda aa, kk: local_select(aa, k_out, comp,
+                                                    key=kk, **kw)
+                    )(acc_out, okeys)
+                else:
+                    vals2, idx2, resid_out = jax.vmap(
+                        lambda aa: local_select(aa, k_out, comp, **kw)
+                    )(acc_out)
+                mean = _gathered_scatter_mean(vals2, idx2, d, n_out)
+                resid_out_full = jnp.broadcast_to(
+                    resid_out[:, None],
+                    (n_out, n_in) + resid_out.shape[1:]).reshape(e_out.shape)
+                return (mean.reshape(u.shape[1:]).astype(u.dtype),
+                        resid_in, resid_out_full)
+
+            out = [leaf_fn(i, u, ei, eo, ki, ko)
+                   for i, (u, ei, eo, ki, ko) in enumerate(
+                       zip(flat_u, flat_ei, flat_eo, flat_ki, flat_ko))]
+        else:
+            # --- distributed path (shard_map manual axes) ------------------
+            axes = tuple(axis_names)
+            outer = tuple(a for a in axes if a == self.outer_axis)
+            inner = tuple(a for a in axes if a != self.outer_axis)
+
+            def leaf_fn(i, u, e_in, e_out, k_in, k_out):
+                acc_in = e_in + u.astype(e_in.dtype)
+                # inner selection runs on per-worker data: fold the FULL
+                # (outer, inner) worker coordinate into the key stream
+                wk_in = (_leaf_key(key, i, _worker_index(axes))
+                         if needs_key else None)
+                vals, idx, resid_in = local_select(acc_in, k_in, comp,
+                                                   key=wk_in, **kw)
+                m = _sparse_mean_over(vals, idx, u.size, inner)
+                acc_out = e_out + m.reshape(u.shape)
+                # outer accumulator is pod-replicated: outer-only key so
+                # every inner worker draws the SAME cross-pod selection.
+                # Sparse inner tier -> shift the outer stream past the
+                # inner worker-index space (see the sim path above)
+                o_base = 0 if int(k_in) >= u.size else _axis_prod(axes)
+                wk_out = (_leaf_key(key, i, o_base + _worker_index(outer))
+                          if needs_key else None)
+                vals2, idx2, resid_out = local_select(acc_out, k_out, comp,
+                                                      key=wk_out, **kw)
+                mean = _sparse_mean_over(vals2, idx2, u.size, outer)
+                return (mean.reshape(u.shape).astype(u.dtype),
+                        resid_in, resid_out)
+
+            out = [leaf_fn(i, u, ei, eo, ki, ko)
+                   for i, (u, ei, eo, ki, ko) in enumerate(
+                       zip(flat_u, flat_ei, flat_eo, flat_ki, flat_ko))]
+
+        return (treedef.unflatten([o[0] for o in out]),
+                {"inner": treedef.unflatten([o[1] for o in out]),
+                 "outer": treedef.unflatten([o[2] for o in out])})

@@ -25,11 +25,22 @@ def data_axis_names(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
+def inner_axis_names(mesh) -> tuple[str, ...]:
+    """Intra-pod ('inner' tier) worker axes — the fast-ICI data axis the
+    hierarchical modes reduce (lags_hier, dense) or sparsely exchange
+    (lags_hier2) within a pod."""
+    return tuple(a for a in mesh.axis_names if a == "data")
+
+
 def lags_axis_names(mesh, train_mode: str) -> tuple[str, ...]:
-    """Mesh axes acting as LAGS 'workers' (sparse-exchange axes)."""
+    """Mesh axes acting as LAGS 'workers' (sparse-exchange axes).
+
+    For the hierarchical modes this names the CROSS-POD (outer) tier;
+    lags_hier2's intra-pod tier is ``inner_axis_names``.
+    """
     if train_mode == "lags_dp":
         return data_axis_names(mesh)
-    if train_mode == "lags_hier":
+    if train_mode in ("lags_hier", "lags_hier2"):
         return tuple(a for a in mesh.axis_names if a == "pod")
     return ()
 

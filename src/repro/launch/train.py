@@ -25,6 +25,12 @@ Built-in train modes (``cfg.train_mode`` / ``RunConfig.mode``):
     'pod' only.  Covered by Lemma 1: partition pieces = gradient shards.
     On a single-pod mesh this degenerates to FSDP + single-worker
     compression (no sparse comm; the compressor and EF still run).
+  * ``lags_hier2`` — two-level SPARSE hierarchy for contended ICI: manual
+    over ('pod', 'data'); each worker runs a per-leaf sparse exchange
+    with its own inner budget within the pod, then the pod mean goes
+    through the sparse cross-pod exchange (separate EF residual per
+    tier).  Registered purely through the exchange registry — this file
+    has no lags_hier2-specific code.
   * ``dense``     — vanilla S-SGD baseline (psum mean), manual over data.
 
 State pytree: {"params", "ef", "step"}.  ``ef`` carries one residual per
@@ -154,6 +160,11 @@ def make_state_specs(cfg, mesh, *, method: str | None = None):
                                         sharding=NamedSharding(mesh, sp))
         ef = jax.tree.map(ef_sd, params_sds, pspecs,
                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        # strategies registered with ef_tiers (two-level exchanges) carry
+        # one residual tree per tier — same per-worker layout, tier-keyed
+        ef_tiers = R.get_exchange(mode).ef_tiers
+        if ef_tiers:
+            ef = {t: ef for t in ef_tiers}
         ef_pspecs = jax.tree.map(lambda s: s.sharding.spec, ef,
                                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
     step = jax.ShapeDtypeStruct((), jnp.int32,
@@ -265,7 +276,10 @@ def build_train_step(cfg, mesh, run: RunConfig):
         mode=mode, params_like=state_specs["params"],
         ratio=run.resolved_ratio(cfg), ks=ks_override,
         block_size=run.block_size, compressor=run.compressor, sim=False,
-        n_workers=meta["n_workers"], row_axes=row_axes, shard_dims=sdims)
+        n_workers=meta["n_workers"],
+        ratio_inner=run.resolved_ratio_inner(),
+        n_inner=max(1, M.n_workers(mesh, M.inner_axis_names(mesh))),
+        row_axes=row_axes, shard_dims=sdims)
     exch = R.build_exchange(spec)
     meta["ks"] = getattr(exch, "ks", None)
     meta["schedule"] = schedule
@@ -394,6 +408,9 @@ def init_state(cfg, mesh, *, method: str | None = None, seed: int = 0):
         else:
             ef = jax.tree.map(
                 lambda p: jnp.zeros((nw,) + p.shape, jnp.float32), params)
+            ef_tiers = R.get_exchange(meta["mode"]).ef_tiers
+            if ef_tiers:
+                ef = {t: ef for t in ef_tiers}
         return {"params": params, "ef": ef,
                 "step": jnp.zeros((), jnp.int32)}
 

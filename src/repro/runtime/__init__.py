@@ -12,9 +12,11 @@ This package closes the loop **online**, in three pieces:
     probe hands back.
   * **hier** (:mod:`~repro.runtime.hier`) — two-tier planner: Eq. 18
     solved separately per tier against each tier's own fitted α/β,
-    emitting a ``autotune.schedule.HierSchedule`` (schema v2) whose
-    *outer* (cross-pod) tier is what the ``lags_hier`` train step
-    ingests (``repro.api.build_train_step``).
+    emitting a ``autotune.schedule.HierSchedule`` (schema v2).  Both
+    tiers are live planning dimensions: ``lags_hier`` ingests the
+    *outer* (cross-pod) tier and dense-reduces within the pod, while
+    ``lags_hier2`` — the sparse-intra-pod mode — executes BOTH tiers'
+    k's (``repro.api.build_train_step``).
   * **controller** (:mod:`~repro.runtime.controller`) — every
     ``replan_every`` steps: re-fit the wire from fresh collective
     samples, re-apportion compute budgets from the measured window,
@@ -36,10 +38,12 @@ Usage::
         state, metrics = ctl.step(state, data.batch(t, B, S))
     ctl.save_state("artifacts/runtime_state")    # resume: restore_state
 
-    # two-tier planning without a controller:
+    # two-tier planning without a controller (train_mode="lags_hier2"
+    # consumes BOTH tiers — sparse intra-pod and cross-pod exchanges):
     from repro.runtime import hier
     hs = hier.plan_hier_schedule(leaves, p_inner=16, p_outer=4,
-                                 hw_inner=ici_fit, hw_outer=dcn_fit)
+                                 hw_inner=ici_fit, hw_outer=dcn_fit,
+                                 train_mode="lags_hier2")
     step_fn, _, _ = api.build_train_step(hier_cfg, mesh,
                                          api.RunConfig(schedule=hs))
 

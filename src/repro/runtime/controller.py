@@ -5,7 +5,11 @@
 window: the wire (α, β) are re-fitted from fresh collective samples
 (``comm_probe``), the per-leaf compute budgets are re-apportioned from
 the window's median step time, and Eq. 18 is re-solved — flat for
-``lags_dp``, two-tier (``runtime.hier``) for ``lags_hier``.
+``lags_dp``, two-tier (``runtime.hier``) for the hierarchical modes.
+For ``lags_hier`` only the outer (cross-pod) tier is executable, so the
+swap prediction prices that tier; for ``lags_hier2`` BOTH tiers are live
+— an ICI-only bandwidth shift re-prices the inner tier, and a swap
+hot-swaps both tiers' k's into the running step.
 
 The candidate schedule only replaces the live one under hysteresis: the
 α-β model predicts the iteration time of both the current and the
@@ -125,6 +129,12 @@ class ReplanController:
         # tokens=1.0: apportion_backward splits by FLOPs *share*, so the
         # absolute token count cancels; budgets come from measured times
         self._leaf_template = profiler.backprop_leaves(cfg, 1.0)
+        # (n_inner, n_outer) worker counts the two-tier planner/predictor
+        # use (hier modes only); tests on single-device meshes override
+        # this the same way they override meta["n_workers"]
+        self.tier_workers = (
+            max(1, M.n_workers(mesh, M.inner_axis_names(mesh))),
+            max(1, M.n_workers(mesh, M.lags_axis_names(mesh, self.mode))))
         self._build()
 
     # -- step ownership ----------------------------------------------------
@@ -181,26 +191,42 @@ class ReplanController:
                           hardware={"name": "static"}, leaves=plans,
                           train_mode=self.mode)
 
-    def _plan_candidate(self, leaves):
-        """(candidate schedule, flat schedule for prediction, hw, p)."""
+    def _plan_candidate(self, leaves, t_fwd):
+        """(candidate schedule, predict_fn, hw) — ``predict_fn(sched)``
+        prices any schedule (flat or hier) against the fresh fit."""
         rc = self.rcfg
-        if self.mode == "lags_hier":
-            inner_axes = tuple(a for a in self.mesh.axis_names
-                               if a == "data")
-            outer_axes = M.lags_axis_names(self.mesh, "lags_hier")
+        if self.mode in S.HIER_MODES:
+            inner_axes = M.inner_axis_names(self.mesh)
+            outer_axes = M.lags_axis_names(self.mesh, self.mode)
             s_in = self._probe(self.mesh, inner_axes) if inner_axes else []
             s_out = self._probe(self.mesh, outer_axes) if outer_axes else []
             self.telemetry.record_comm(list(s_in) + list(s_out))
             hw_in = hier.tier_hardware(s_in, rc.hw_base, name="ici_fit")
             hw_out = hier.tier_hardware(s_out, rc.hw_base_outer,
                                         name="dcn_fit")
-            p_in = M.n_workers(self.mesh, inner_axes) if inner_axes else 1
-            p_out = M.n_workers(self.mesh, outer_axes) if outer_axes else 1
+            p_in, p_out = self.tier_workers
             cand = hier.plan_hier_schedule(
                 leaves, p_inner=p_in, p_outer=p_out, hw_inner=hw_in,
                 hw_outer=hw_out, arch=self.cfg.name, shape="runtime",
-                c_upper=rc.c_upper)
-            return cand, cand.outer, hw_out, p_out
+                c_upper=rc.c_upper, train_mode=self.mode)
+
+            def predict(sched):
+                if isinstance(sched, S.HierSchedule):
+                    inner, outer = sched.inner, sched.outer
+                else:
+                    inner, outer = None, sched
+                if self.mode != "lags_hier2":
+                    # lags_hier's intra-pod reduction is GSPMD's dense
+                    # all-reduce whatever the inner plan says — price the
+                    # executable (outer) tier only
+                    return planner.predict_iteration(leaves, outer, p_out,
+                                                     hw_out, t_fwd)
+                # lags_hier2 executes both tiers: an ICI-only shift moves
+                # the prediction (and can trigger an inner-tier swap)
+                return hier.predict_hier_iteration(
+                    leaves, inner, outer, p_inner=p_in, p_outer=p_out,
+                    hw_inner=hw_in, hw_outer=hw_out, t_forward=t_fwd)
+            return cand, predict, hw_out
         axes = M.data_axis_names(self.mesh)
         samples = self._probe(self.mesh, axes)
         self.telemetry.record_comm(list(samples))
@@ -209,18 +235,19 @@ class ReplanController:
         cand = planner.plan_schedule(leaves, p=p, hw=hw, arch=self.cfg.name,
                                      shape="runtime", c_upper=rc.c_upper,
                                      train_mode=self.mode)
-        return cand, cand, hw, p
+        return (cand,
+                lambda sched: planner.predict_iteration(leaves, sched, p,
+                                                        hw, t_fwd),
+                hw)
 
     def maybe_replan(self, step_no: int) -> SwapEvent:
         """Re-fit + re-plan on the current window; swap under hysteresis."""
         leaves, t_fwd = self._measured_leaves()
-        candidate, cand_flat, hw, p = self._plan_candidate(leaves)
-        current = self.schedule
-        cur_flat = (current.outer if isinstance(current, S.HierSchedule)
-                    else current) or self._static_baseline(leaves)
-        t_cur = planner.predict_iteration(leaves, cur_flat, p, hw,
-                                          t_fwd)["t_lags"]
-        pred = planner.predict_iteration(leaves, cand_flat, p, hw, t_fwd)
+        candidate, predict, hw = self._plan_candidate(leaves, t_fwd)
+        current = (self.schedule if self.schedule is not None
+                   else self._static_baseline(leaves))
+        t_cur = predict(current)["t_lags"]
+        pred = predict(candidate)
         t_new = pred["t_lags"]
         improvement = (t_cur - t_new) / t_cur if t_cur > 0 else 0.0
         swapped = improvement > self.rcfg.swap_threshold

@@ -1,20 +1,25 @@
 """Two-tier (intra-pod ICI / cross-pod DCN) LAGS planning.
 
-``launch.train``'s ``lags_hier`` mode splits the gradient exchange into a
-dense intra-pod reduction over the fast ICI (GSPMD FSDP) and a sparse
-cross-pod LAGS exchange over the slow DCN.  A flat schedule planned
-against a single α/β fit mis-prices both tiers; this module plans them
-separately — each tier gets its own worker count and its own fitted
-``Hardware`` — and emits a ``schedule.HierSchedule``.
+The hierarchical train modes split the gradient exchange into an
+intra-pod tier over the fast ICI and a cross-pod tier over the slow DCN.
+A flat schedule planned against a single α/β fit mis-prices both tiers;
+this module plans them separately — each tier gets its own worker count
+and its own fitted ``Hardware`` — and emits a ``schedule.HierSchedule``.
 
-The inner tier usually plans dense everywhere (ratio 1): on ICI the
-dense all-reduce hides behind backward compute, which is exactly why
-``lags_hier`` dense-reduces within the pod.  When even ICI cannot hide a
-leaf (huge leaves, contended links), its inner plan goes sparse — the
-current train step cannot consume that yet (the intra-pod reduction is
-GSPMD's), so the inner tier is provenance for a future sparse-intra-pod
-exchange, while the outer tier is what the train step ingests
-(``repro.api.build_train_step``).
+Both tiers of the emitted schedule are live planning dimensions:
+
+  * ``lags_hier`` dense-reduces within the pod (GSPMD all-reduce) and
+    ingests only the *outer* tier; its inner tier records what the
+    intra-pod wire could afford.
+  * ``lags_hier2`` executes BOTH tiers — its sparse intra-pod exchange
+    takes the inner tier's per-leaf k's and its cross-pod exchange takes
+    the outer tier's (``repro.api.registry.resolve_schedule_ks``).  When
+    contended ICI cannot hide a leaf the inner plan goes sparse and the
+    train step actually runs it.
+
+The inner tier still usually plans dense (ratio 1): on healthy ICI the
+exchange hides behind backward compute, which is the same Eq. 18
+layer-wise tradeoff the paper makes per layer, applied per tier.
 
 Convergence is covered by the paper's Lemma 1 (any partition of the
 gradient into pieces) plus the k-contraction argument of Alistarh et
@@ -49,24 +54,68 @@ def plan_hier_schedule(leaves: Sequence, *, p_inner: int, p_outer: int,
                        hw_inner: cm.Hardware, hw_outer: cm.Hardware,
                        arch: str = "", shape: str = "",
                        c_upper: float = 1000.0,
-                       efficiency: float = 0.45) -> S.HierSchedule:
+                       efficiency: float = 0.45,
+                       train_mode: str = "lags_hier") -> S.HierSchedule:
     """Eq. 18 per leaf, solved once per tier against that tier's fit.
 
     ``leaves`` is the same backprop-ordered ``profiler.LeafSample``
     sequence flat planning uses; both tiers see the same measured compute
     budgets (each tier's exchange must hide behind the same backward
-    compute).  On a single-pod mesh ``p_outer == 1`` degenerates the
+    compute).  ``train_mode`` stamps the provenance both tiers carry
+    ("lags_hier" or "lags_hier2" — the same DCN/ICI pricing feeds
+    either).  On a single-pod mesh ``p_outer == 1`` degenerates the
     outer tier to all-dense plans (no cross-pod wire, zero comm time
     satisfies every budget) — matching the train step's single-pod
     behaviour of compressor+EF with no sparse comm."""
     inner = planner.plan_schedule(leaves, p=p_inner, hw=hw_inner, arch=arch,
                                   shape=shape, c_upper=c_upper,
                                   efficiency=efficiency,
-                                  train_mode="lags_hier")
+                                  train_mode=train_mode)
     outer = planner.plan_schedule(leaves, p=p_outer, hw=hw_outer, arch=arch,
                                   shape=shape, c_upper=c_upper,
                                   efficiency=efficiency,
-                                  train_mode="lags_hier")
+                                  train_mode=train_mode)
     return S.HierSchedule(arch=arch, shape=shape,
                           inner=dataclasses.replace(inner, tier="inner"),
                           outer=dataclasses.replace(outer, tier="outer"))
+
+
+def _tier_comm_time(d: int, ratio: float, p: int, hw: cm.Hardware) -> float:
+    """One tier's per-leaf exchange time (``planner.leaf_comm_time``);
+    0 for a single-worker tier, which has no wire at all."""
+    if p <= 1:
+        return 0.0
+    return planner.leaf_comm_time(d, ratio, p, hw)
+
+
+def predict_hier_iteration(leaves: Sequence, inner: "S.Schedule | None",
+                           outer: S.Schedule, *, p_inner: int, p_outer: int,
+                           hw_inner: cm.Hardware, hw_outer: cm.Hardware,
+                           t_forward: float) -> dict:
+    """Two-tier analogue of ``planner.predict_iteration``.
+
+    Per leaf, the exchange cost is the intra-pod tier (priced on the ICI
+    fit) plus the cross-pod tier (DCN fit), pipelined against the same
+    backward timeline.  ``inner=None`` prices a dense intra-pod
+    reduction on every leaf — the live behaviour when no inner plan is
+    installed (static baseline, or a flat schedule).  Returns the same
+    fields as ``planner.predict_iteration``."""
+    rin = (None if inner is None
+           else {lp.name: lp.ratio for lp in inner.leaves})
+    rout = {lp.name: lp.ratio for lp in outer.leaves}
+    t_b, t_c = [], []
+    for leaf in leaves:
+        t_b.append(leaf.t_backward)
+        c_in = 1.0 if rin is None else rin[leaf.name]
+        t_c.append(_tier_comm_time(leaf.d, c_in, p_inner, hw_inner)
+                   + _tier_comm_time(leaf.d, rout[leaf.name], p_outer,
+                                     hw_outer))
+    t_lags = cm.iteration_time_lags(t_forward, t_b, t_c)
+    t_comm = sum(t_c)
+    t_back = sum(t_b)
+    exposed = max(0.0, t_lags - t_forward - t_back)
+    return {"t_lags": t_lags,
+            "t_slgs": cm.iteration_time_slgs(t_forward, t_back, t_comm),
+            "t_comm": t_comm, "t_backward": t_back, "t_forward": t_forward,
+            "exposed_comm": exposed,
+            "overlap": 1.0 - exposed / t_comm if t_comm > 0 else 1.0}

@@ -71,7 +71,9 @@ def _sim_exchange(run: RunConfig, params, *, n_workers: int | None = None):
     spec = R.ExchangeSpec(mode=mode, params_like=params,
                           ratio=run.resolved_ratio(), ks=ks,
                           compressor=run.compressor, sim=True,
-                          n_workers=n_workers or 1)
+                          n_workers=n_workers or 1,
+                          ratio_inner=run.resolved_ratio_inner(),
+                          n_inner=run.inner_workers or 1)
     return R.build_exchange(spec)
 
 
@@ -116,9 +118,10 @@ class SimTrainer:
         self._step = jax.jit(self._build_step())
         self.state = {
             "params": params,
-            "ef": (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                per_worker_like)
-                   if self.mode != "dense" else ()),
+            # the exchange owns its EF-state layout (single residual tree,
+            # or one tree per tier for two-level strategies); DenseExchange
+            # init is ()
+            "ef": self.exchange.init(per_worker_like),
             "mom": (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                  per_worker_like)
                     if run.momentum_correction else ()),

@@ -241,6 +241,124 @@ class TestIngestion:
             TR.make_train_step(cfg, mesh, schedule=bad, donate=False)
 
 
+class TestValidateForTiers:
+    """Every accept/reject branch of the shared ingestion contract,
+    including the lags_hier2 paths where the inner tier is consumable."""
+
+    def _tree(self):
+        return {"a": jnp.zeros(64), "b": jnp.zeros(256)}
+
+    def _flat(self, train_mode="lags_dp", tier="", n_workers=4, ratio=4.0):
+        tree = self._tree()
+        leaves = tuple(
+            LeafPlan(name=n, d=int(np.prod(l.shape)), ratio=ratio,
+                     k=max(1, int(round(int(np.prod(l.shape)) / ratio))))
+            for n, l in leaf_entries(tree))
+        return Schedule(arch="t", shape="u", n_workers=n_workers,
+                        hardware={"name": "unit"}, leaves=leaves,
+                        train_mode=train_mode, tier=tier)
+
+    def _hier(self, train_mode="lags_hier", p_in=4, p_out=2):
+        from repro.autotune import schedule as S
+        inner = self._flat(train_mode, tier="inner", n_workers=p_in,
+                           ratio=1.0)
+        outer = self._flat(train_mode, tier="outer", n_workers=p_out)
+        return S.HierSchedule(arch="t", shape="u", inner=inner, outer=outer)
+
+    def test_hier_schedule_accepted_by_both_hier_modes(self):
+        from repro.autotune import schedule as S
+        hs = self._hier()
+        S.validate_for(hs, "lags_hier")        # outer tier consumed
+        S.validate_for(hs, "lags_hier2")       # BOTH tiers consumed
+        S.validate_for(self._hier("lags_hier2"), "lags_hier2",
+                       params_like=self._tree())
+
+    def test_hier_schedule_rejected_by_flat_modes(self):
+        from repro.autotune import schedule as S
+        hs = self._hier()
+        for mode in ("lags_dp", "slgs"):
+            with pytest.raises(ValueError, match="lags_hier2"):
+                S.validate_for(hs, mode)    # message lists BOTH hier modes
+
+    def test_flat_provenance_is_family_level(self):
+        from repro.autotune import schedule as S
+        # a flat dp plan must not feed either hierarchical wire...
+        for mode in ("lags_hier", "lags_hier2"):
+            with pytest.raises(ValueError, match="planned for"):
+                S.validate_for(self._flat("lags_dp"), mode)
+        # ...and hier-family flat plans must not feed dp, but DO cross
+        # between the two hier modes (same ICI/DCN pricing)
+        with pytest.raises(ValueError, match="planned for"):
+            S.validate_for(self._flat("lags_hier", tier="outer"), "lags_dp")
+        S.validate_for(self._flat("lags_hier", tier="outer"), "lags_hier2")
+        S.validate_for(self._flat("lags_hier2", tier="outer"), "lags_hier")
+
+    def test_inner_tier_feeds_only_lags_hier2(self):
+        from repro.autotune import schedule as S
+        inner = self._flat("lags_hier", tier="inner", ratio=1.0)
+        # consumable: lags_hier2 runs a sparse intra-pod exchange
+        S.validate_for(inner, "lags_hier2")
+        # unconsumable: lags_hier's sparse exchange is cross-pod only
+        with pytest.raises(ValueError, match="inner"):
+            S.validate_for(inner, "lags_hier")
+        # (for flat modes the family check rejects first — still an error)
+        with pytest.raises(ValueError):
+            S.validate_for(inner, "lags_dp")
+
+    def test_hier2_worker_count_is_tier_product(self):
+        import warnings
+        from repro.autotune import schedule as S
+        hs = self._hier("lags_hier2", p_in=4, p_out=2)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            S.validate_for(hs, "lags_hier2", n_workers=8)   # 4*2 matches
+            # lags_hier counts only the outer (cross-pod) workers
+            S.validate_for(self._hier(p_in=4, p_out=2), "lags_hier",
+                           n_workers=2)
+        with pytest.warns(UserWarning, match="planned for 8 workers"):
+            S.validate_for(hs, "lags_hier2", n_workers=4)
+
+    def test_hier2_resolves_both_tiers_ks(self):
+        """resolve_schedule_ks hands lags_hier2 a TieredKs with BOTH
+        tiers' k trees; a lone inner tier budgets only the inner tier."""
+        from repro import api
+        from repro.api import registry as R
+        tree = self._tree()
+        hs = self._hier("lags_hier2")
+        ks = R.resolve_schedule_ks(hs, "lags_hier2", tree)
+        assert isinstance(ks, api.TieredKs)
+        assert jax.tree.leaves(ks.inner) == \
+            jax.tree.leaves(hs.inner.ks_tree(tree))
+        assert jax.tree.leaves(ks.outer) == \
+            jax.tree.leaves(hs.outer.ks_tree(tree))
+        lone = R.resolve_schedule_ks(
+            self._flat("lags_hier2", tier="inner"), "lags_hier2", tree)
+        assert lone.inner is not None and lone.outer is None
+        # lags_hier keeps the flat outer-tree contract
+        flat = R.resolve_schedule_ks(hs, "lags_hier", tree)
+        assert not isinstance(flat, api.TieredKs)
+        assert jax.tree.leaves(flat) == jax.tree.leaves(hs.ks_tree(tree))
+
+    def test_sim_trainer_consumes_both_tiers(self):
+        from repro import api
+        from repro.training import train_loop as TL
+        tree = self._tree()
+        hs = self._hier("lags_hier2", p_in=2, p_out=2)
+
+        def loss(p, b):
+            return (jnp.sum((p["a"] - b) ** 2) + jnp.sum(p["b"] ** 2), {})
+
+        tr = TL.SimTrainer(loss, tree, api.RunConfig(
+            mode="lags_hier2", schedule=hs, inner_workers=2), n_workers=4)
+        by_in, by_out = hs.inner.by_name, hs.outer.by_name
+        for (n, _), ki, ko in zip(leaf_entries(tree),
+                                  jax.tree.leaves(tr.exchange.ks_inner),
+                                  jax.tree.leaves(tr.exchange.ks)):
+            assert ki == by_in[n].k and ko == by_out[n].k
+        assert tr.exchange.n_inner == 2
+        assert set(tr.state["ef"]) == {"inner", "outer"}
+
+
 class TestProfileSerialization:
     def test_model_profile_json_roundtrip(self):
         prof = profiler.ModelProfile(

@@ -1,0 +1,218 @@
+"""Property battery for the two-level sparse hierarchy (lags_hier2).
+
+Three families, all consequences of the paper's Lemma 1 (TopK-then-
+concatenate over ANY partition of the gradient vector contracts like
+whole-vector TopK) applied once per tier:
+
+  * partition invariance — at ratio 1 the two-level exchange is exact
+    for every leaf partition of the same vector;
+  * per-tier error feedback — ``acc == selected + residual`` holds
+    independently at the inner (intra-pod) and outer (cross-pod) level
+    for random shapes/dtypes/budgets;
+  * key streams — per-(step, leaf, worker) randk keys fold the FULL
+    (outer, inner) worker coordinate at the inner tier (workers draw
+    distinct selections) but only the outer coordinate at the outer tier
+    (the pod-replicated accumulator must select identically on every
+    inner worker).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests; skip cleanly on minimal envs
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lags
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _exchange(ks, ks_inner, n_inner, compressor="topk_exact"):
+    return lags.SparseHierLAGSExchange(ks=ks, ks_inner=ks_inner,
+                                       n_inner=n_inner,
+                                       compressor_name=compressor)
+
+
+def _vec(seed, p, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (p, d))
+    return (x * 3.0).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1: partition invariance at ratio 1
+# ---------------------------------------------------------------------------
+
+class TestPartitionInvariance:
+    @given(seed=st.integers(0, 2**31 - 1),
+           d=st.integers(4, 96),
+           cuts=st.lists(st.integers(1, 95), max_size=3),
+           n_inner=st.sampled_from([1, 2]),
+           n_outer=st.sampled_from([1, 2]))
+    @settings(**SETTINGS)
+    def test_ratio_one_exchange_is_partition_independent(
+            self, seed, d, cuts, n_inner, n_outer):
+        """Splitting the same vector into arbitrary leaves and running
+        the two-level exchange at ratio 1 on every leaf must equal the
+        whole-vector exchange — which in turn equals the dense mean."""
+        p = n_inner * n_outer
+        x = _vec(seed, p, d, jnp.float32)
+        bounds = sorted({c % d for c in cuts} - {0})
+        pieces = np.split(np.arange(d), bounds)
+
+        whole = {"x": x}
+        parts = {f"p{i}": x[:, idx] for i, idx in enumerate(pieces)}
+
+        def run(tree):
+            ks = jax.tree.map(lambda u: u[0].size, tree)   # ratio 1
+            ex = _exchange(ks, ks, n_inner)
+            mean, resid = ex.exchange(tree, ex.init(tree), None,
+                                      key=jax.random.PRNGKey(0))
+            return mean, resid
+
+        m_whole, r_whole = run(whole)
+        m_parts, r_parts = run(parts)
+        got = np.concatenate([np.asarray(m_parts[f"p{i}"])
+                              for i in range(len(pieces))])
+        np.testing.assert_allclose(got, np.asarray(m_whole["x"]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(m_whole["x"]),
+                                   np.asarray(x.mean(0)),
+                                   rtol=1e-5, atol=1e-6)
+        for tier in ("inner", "outer"):   # ratio 1 drops nothing
+            for r in (*jax.tree.leaves(r_whole[tier]),
+                      *jax.tree.leaves(r_parts[tier])):
+                assert float(jnp.abs(r).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-tier error feedback: acc == selected + residual at BOTH levels
+# ---------------------------------------------------------------------------
+
+class TestTwoLevelErrorFeedback:
+    @given(seed=st.integers(0, 2**31 - 1),
+           d=st.integers(6, 80),
+           k_in=st.integers(1, 80),
+           k_out=st.integers(1, 80),
+           n_inner=st.sampled_from([1, 2, 3]),
+           n_outer=st.sampled_from([1, 2]),
+           dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+           compressor=st.sampled_from(["topk_exact", "randk"]))
+    @settings(**SETTINGS)
+    def test_acc_equals_selected_plus_resid_per_tier(
+            self, seed, d, k_in, k_out, n_inner, n_outer, dtype, compressor):
+        p = n_inner * n_outer
+        k_in, k_out = min(k_in, d), min(k_out, d)
+        u = {"x": _vec(seed, p, d, dtype)}
+        ex = _exchange({"x": k_out}, {"x": k_in}, n_inner, compressor)
+        # random starting residuals: per-worker inner, pod-replicated outer
+        e_in = jax.random.normal(jax.random.PRNGKey(seed ^ 1), (p, d))
+        e_pod = jax.random.normal(jax.random.PRNGKey(seed ^ 2), (n_outer, d))
+        e_out = jnp.broadcast_to(e_pod[:, None], (n_outer, n_inner, d))
+        state = {"inner": {"x": e_in}, "outer": {"x": e_out.reshape(p, d)}}
+        mean, new = ex.exchange(u, state, None, key=jax.random.PRNGKey(7))
+
+        acc_in = np.asarray(e_in + u["x"].astype(jnp.float32))
+        resid_in = np.asarray(new["inner"]["x"])
+        sel_in = acc_in - resid_in
+        for w in range(p):
+            nz = np.abs(sel_in[w]) > 0
+            assert nz.sum() <= k_in
+            np.testing.assert_allclose(sel_in[w][nz], acc_in[w][nz],
+                                       rtol=1e-5, atol=1e-5)
+
+        # reconstruct the outer tier from the inner selections
+        m_pod = sel_in.reshape(n_outer, n_inner, d).mean(1)
+        acc_out = np.asarray(e_pod) + m_pod
+        resid_out = np.asarray(new["outer"]["x"]).reshape(n_outer, n_inner, d)
+        # pod-replicated residual: every inner copy identical
+        for j in range(1, n_inner):
+            np.testing.assert_array_equal(resid_out[:, j], resid_out[:, 0])
+        sel_out = acc_out - resid_out[:, 0]
+        for o in range(n_outer):
+            nz = np.abs(sel_out[o]) > 0
+            assert nz.sum() <= k_out
+            np.testing.assert_allclose(sel_out[o][nz], acc_out[o][nz],
+                                       rtol=1e-5, atol=1e-5)
+        # the returned mean is cast to the update dtype — compare there
+        want = np.asarray(jnp.asarray(sel_out.mean(0)).astype(dtype),
+                          np.float32)
+        np.testing.assert_allclose(np.asarray(mean["x"], np.float32),
+                                   want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# randk key streams across the two tiers
+# ---------------------------------------------------------------------------
+
+class TestRandkKeyStreams:
+    def _run(self, key, n_inner=2, n_outer=2, d=256, k=8):
+        p = n_inner * n_outer
+        u = {"x": jnp.broadcast_to(jnp.linspace(1.0, 2.0, d), (p, d))}
+        ex = _exchange({"x": k}, {"x": k}, n_inner, "randk")
+        return ex.exchange(u, ex.init(u), None, key=key)
+
+    def test_inner_workers_draw_distinct_selections(self):
+        """Identical inputs on every worker: the inner tier must still
+        select DIFFERENT coordinates per (outer, inner) coordinate — the
+        key stream folds the full worker index, not just the pod's."""
+        _, resid = self._run(jax.random.PRNGKey(3))
+        r = np.asarray(resid["inner"]["x"]).reshape(2, 2, -1)
+        for o in range(2):
+            assert (r[o, 0] != r[o, 1]).any(), "inner workers shared a key"
+        # and across pods too
+        assert (r[0, 0] != r[1, 0]).any()
+
+    def test_outer_selection_replicated_within_pod(self):
+        """The outer accumulator is pod-replicated, so its randk draw must
+        be IDENTICAL on every inner worker of a pod (outer-only fold) —
+        otherwise the replicated residual copies would diverge."""
+        _, resid = self._run(jax.random.PRNGKey(3))
+        r = np.asarray(resid["outer"]["x"]).reshape(2, 2, -1)
+        for o in range(2):
+            np.testing.assert_array_equal(r[o, 0], r[o, 1])
+        assert (r[0, 0] != r[1, 0]).any()   # but pods differ
+
+    def test_cross_tier_draws_independent_when_both_sparse(self):
+        """With BOTH tiers sparse, pod o's outer randk draw must not
+        reuse inner worker o's key: the outer stream shifts past the
+        inner worker-index space (fold_in(leaf_key, p + o)).  Only when
+        the inner tier is dense — the lags_hier degeneracy — does the
+        outer stream coincide with LAGSExchange's fold_in(leaf_key, o)."""
+        d, k, n_in, n_out = 256, 8, 2, 2
+        p = n_in * n_out
+        u = {"x": jnp.broadcast_to(jnp.linspace(1.0, 2.0, d), (p, d))}
+        ex = _exchange({"x": k}, {"x": k}, n_in, "randk")
+        # dense starting OUTER residual so the outer selection support is
+        # exactly the randk draw (randk is data-independent)
+        e_out = jnp.broadcast_to(jnp.linspace(2.0, 3.0, d), (p, d))
+        state = {"inner": ex.init(u)["inner"], "outer": {"x": e_out}}
+        _, resid = ex.exchange(u, state, None, key=jax.random.PRNGKey(3))
+        sel_in = np.asarray(u["x"]) - np.asarray(resid["inner"]["x"])
+        m = sel_in.reshape(n_out, n_in, d).mean(1)
+        acc_out = np.asarray(e_out).reshape(n_out, n_in, d)[:, 0] + m
+        sel_out = acc_out - \
+            np.asarray(resid["outer"]["x"]).reshape(n_out, n_in, d)[:, 0]
+        for o in range(n_out):
+            s_in = set(np.flatnonzero(sel_in[o]))    # global worker o
+            s_out = set(np.flatnonzero(sel_out[o]))  # pod o
+            assert s_out != s_in, "outer tier reused inner worker o's key"
+
+    def test_per_step_keys_vary_selection(self):
+        m1, _ = self._run(jax.random.PRNGKey(0))
+        m2, _ = self._run(jax.random.PRNGKey(1))
+        s1 = np.flatnonzero(np.asarray(m1["x"]))
+        s2 = np.flatnonzero(np.asarray(m2["x"]))
+        assert not np.array_equal(s1, s2)
+
+    def test_sim_stream_matches_distributed_derivation(self):
+        """The sim path's per-worker keys are fold_in(leaf_key, w) — the
+        exact stream the distributed path derives via _worker_index — so
+        sim and distributed randk selections agree coordinate for
+        coordinate."""
+        key = jax.random.PRNGKey(11)
+        ws = lags._worker_keys(key, leaf_no=2, p=4)
+        for w in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(ws[w]),
+                np.asarray(lags._leaf_key(key, 2, jnp.int32(w))))

@@ -170,6 +170,43 @@ class TestHierLAGS:
                                        rtol=1e-5, atol=1e-7)
 
 
+class TestSparseHierLAGS:
+    """Exchange-level checks for the two-level sparse hierarchy; the
+    degeneracy parity family lives in test_distributed.py and the
+    hypothesis battery in test_hier2_properties.py."""
+
+    def test_c1_both_tiers_equals_dense(self, rng):
+        u = _tree(rng)   # P=4 -> 2 pods x 2 inner workers
+        ks = lags.ks_from_ratio(_unstacked(u), 1.0)
+        exch = lags.SparseHierLAGSExchange(ks=ks, ks_inner=ks, n_inner=2)
+        mean, resid = exch.exchange(u, exch.init(u), None)
+        dense, _ = lags.DenseExchange().exchange(u, (), None)
+        for a, b in zip(jax.tree.leaves(mean), jax.tree.leaves(dense)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        for tier in ("inner", "outer"):
+            for r in jax.tree.leaves(resid[tier]):
+                np.testing.assert_allclose(np.asarray(r), 0.0, atol=1e-6)
+
+    def test_state_is_one_residual_tree_per_tier(self, rng):
+        u = _tree(rng)
+        ks = lags.ks_from_ratio(_unstacked(u), 4.0)
+        exch = lags.SparseHierLAGSExchange(ks=ks, ks_inner=ks, n_inner=2)
+        state = exch.init(u)
+        assert set(state) == {"inner", "outer"}
+        for tier in ("inner", "outer"):
+            for e, x in zip(jax.tree.leaves(state[tier]),
+                            jax.tree.leaves(u)):
+                assert e.shape == x.shape and e.dtype == jnp.float32
+
+    def test_bad_pod_factorization_raises(self, rng):
+        u = _tree(rng)   # P=4
+        ks = lags.ks_from_ratio(_unstacked(u), 2.0)
+        exch = lags.SparseHierLAGSExchange(ks=ks, ks_inner=ks, n_inner=3)
+        with pytest.raises(ValueError, match="n_inner"):
+            exch.exchange(u, exch.init(u), None)
+
+
 class TestKBookkeeping:
     def test_ks_from_ratio(self):
         tree = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((7,))}
