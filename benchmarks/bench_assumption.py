@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, header
+from repro import api
 from repro.configs import base
 from repro.data import synthetic
 from repro.models import cnn as CNN
@@ -57,9 +58,9 @@ def run() -> int:
     }
     bad = 0
     for name, (params, loss_fn, data_fn, ratio) in workloads.items():
-        tcfg = TL.TrainConfig(method="lags", compression_ratio=ratio, lr=0.1,
-                              measure_delta=True)
-        tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+        run_cfg = api.RunConfig(mode="lags_dp", ratio=ratio, lr=0.1,
+                                measure_delta=True)
+        tr = TL.SimTrainer(loss_fn, params, run_cfg, n_workers=P)
         hist = tr.run(data_fn, STEPS, log_every=1)
         leaves = jax.tree_util.tree_flatten_with_path(params)[0]
         leaf_names = ["/".join(str(getattr(q, "key", getattr(q, "idx", q)))

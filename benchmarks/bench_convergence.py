@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, header
+from repro import api
 from repro.configs import base
 from repro.data import synthetic
 from repro.models import cnn as CNN
@@ -46,8 +47,8 @@ def run() -> int:
     emit("convergence/lm/optimal_ce_floor", floor, "Markov chain entropy")
     finals = {}
     for method in ("dense", "slgs", "lags"):
-        tcfg = TL.TrainConfig(method=method, compression_ratio=8.0, lr=0.3)
-        tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+        run_cfg = api.RunConfig(mode=method, ratio=8.0, lr=0.3)
+        tr = TL.SimTrainer(loss_fn, params, run_cfg, n_workers=P)
         hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16), STEPS,
                       log_every=1)
         finals[method] = hist[-1]["loss"]
@@ -61,8 +62,8 @@ def run() -> int:
     # --- Corollary 2: larger c_max => larger terminal gap -------------------
     gaps = []
     for c in (4.0, 32.0, 256.0):
-        tcfg = TL.TrainConfig(method="lags", compression_ratio=c, lr=0.3)
-        tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+        run_cfg = api.RunConfig(mode="lags_dp", ratio=c, lr=0.3)
+        tr = TL.SimTrainer(loss_fn, params, run_cfg, n_workers=P)
         hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16), STEPS)
         # run() with log_every=0 returns []; re-run final loss measurement
         tr2 = tr
@@ -81,9 +82,9 @@ def run() -> int:
     cnn_params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
     blobs = synthetic.Blobs(n_classes=cfg.n_classes, image_size=16)
     for method in ("dense", "lags"):
-        tcfg = TL.TrainConfig(method=method, compression_ratio=16.0, lr=0.05)
+        run_cfg = api.RunConfig(mode=method, ratio=16.0, lr=0.05)
         tr = TL.SimTrainer(lambda p, b: CNN.cnn_loss(p, cfg, b), cnn_params,
-                           tcfg, n_workers=P)
+                           run_cfg, n_workers=P)
         hist = tr.run(lambda t: blobs.worker_batches(t, P, 8), 40,
                       log_every=1)
         emit(f"convergence/cnn/{method}/final_loss", hist[-1]["loss"],

@@ -23,6 +23,14 @@ Two sections:
      hot-swap both tiers.  The swapped schedule is saved to the stable
      path ``<out>/hier2_schedule.json`` (CI feeds it to
      ``examples/train_e2e.py --hier-schedule``).
+  4. ``lags_dp`` again, but **evidence-driven** (``repro.observe``): the
+     controller runs a deterministic fake-trace backend and an
+     ``AnomalyTrigger`` next to a deliberately long cadence.  The
+     injected bandwidth regression shows up in the attributed step
+     times, the anomaly fires, and the swap lands STRICTLY EARLIER than
+     the fixed cadence would have replanned — with ``costfit`` fitting
+     the attributed per-bucket samples (``attr_wire_fit``) and the
+     planner consuming the trace's measured per-leaf backward times.
 
   PYTHONPATH=src python -m benchmarks.bench_runtime [--quick]
 
@@ -326,6 +334,93 @@ def run(argv=None) -> int:
                 h2cfg, h2ctl.mesh, "both tiers ingested in lags_hier2 mode")
     if not np.isfinite(h2res["loss"]):
         emit("runtime/hier2/FAILED_nonfinite_loss", h2res["loss"], "")
+        bad += 1
+
+    # ---- 4. anomaly-triggered re-plan beats the cadence (repro.observe) ----
+    from repro.autotune import profiler
+    from repro.observe import anomaly as AN
+    from repro.observe import trace as OTR
+    from repro.observe import triggers as TG
+
+    cadence = 4 * replan_every + 2        # deliberately far boundary
+    shift4 = replan_every                 # regression lands well before it
+    steps4 = cadence - 1                  # the cadence NEVER gets a turn
+    header(f"runtime observe: fake-trace anomaly at shift@{shift4} must "
+           f"swap before the cadence boundary @{cadence}")
+    wire4 = {"flat": fast}
+    ocfg = small_cfg("lags_dp")
+    octl = api.Session(ocfg, run, M.make_host_mesh(data=4, model=2)) \
+        .controller(
+            rcfg=dataclasses.replace(rcfg, replan_every=cadence),
+            # empty probe: if the trace-attribution path regressed, the
+            # fit falls back to base constants and every check below fails
+            comm_probe=lambda mesh, axes: [],
+            triggers=(TG.CadenceTrigger(cadence),
+                      TG.AnomalyTrigger(cfg=AN.AnomalyConfig(
+                          warmup=1, recent=2, min_history=2,
+                          z=4.0, min_rel=0.2))))
+    # deterministic synthetic step: measured-style per-leaf budgets (40ms
+    # backward total split by FLOPs share), live wire, live schedule
+    fake = OTR.FakeTraceBackend(
+        profiler.apportion_backward(octl._leaf_template, 0.040),
+        wires=wire4, tier_workers={"flat": 8}, t_forward=0.020,
+        schedule_fn=lambda: octl.schedule)
+    octl.trace_source = fake.capture
+    ores = _drive("observe", octl, ocfg, seq=16, global_batch=8,
+                  steps=steps4, shift_at=shift4,
+                  shift_fn=lambda: wire4.update(flat=slow))
+
+    swaps = [e for e in octl.history if e.swapped]
+    if ores["swap_step"] is None:
+        emit("runtime/observe/FAILED_no_anomaly_swap", 0,
+             f"{[dataclasses.asdict(e) for e in octl.history]}")
+        bad += 1
+    else:
+        emit("runtime/observe/time_to_replan_steps",
+             ores["swap_step"] - shift4,
+             f"shift@{shift4} -> swap@{ores['swap_step']}")
+        ev = swaps[0]
+        emit("runtime/observe/swap_trigger", ev.trigger,
+             "evidence-driven, not the cadence")
+        if "anomaly" not in ev.trigger:
+            emit("runtime/observe/FAILED_not_anomaly_triggered",
+                 ev.trigger, "")
+            bad += 1
+        # STRICTLY earlier than the fixed cadence could have acted
+        emit("runtime/observe/steps_saved_vs_cadence",
+             cadence - ores["swap_step"],
+             f"cadence would first re-plan at step {cadence}")
+        if not ores["swap_step"] < cadence:
+            emit("runtime/observe/FAILED_not_earlier_than_cadence",
+                 ores["swap_step"], f"cadence boundary {cadence}")
+            bad += 1
+        if len(swaps) != 1:
+            emit("runtime/observe/FAILED_detector_refired", len(swaps),
+                 "one regression must produce exactly one swap")
+            bad += 1
+        # provenance: the fit consumed trace-attributed per-bucket
+        # samples, the plan consumed measured per-leaf backward times
+        emit("runtime/observe/fit_source", ev.hw_name,
+             "attr_ = per-bucket samples attributed from the trace")
+        if ev.hw_name != "attr_wire_fit":
+            emit("runtime/observe/FAILED_fit_not_attributed",
+                 ev.hw_name, "")
+            bad += 1
+        emit("runtime/observe/budget_source", octl.measurement_source,
+             "trace = measured per-leaf backward times (FLOPs-share "
+             "apportionment is the fallback only)")
+        if octl.measurement_source != "trace":
+            emit("runtime/observe/FAILED_budgets_not_measured",
+                 octl.measurement_source, "")
+            bad += 1
+        mean_c = _mean_ratio(octl.schedule)
+        emit("runtime/observe/post_swap_mean_ratio", mean_c,
+             "degraded wire must force sparsity")
+        if not mean_c > 1.0:
+            emit("runtime/observe/FAILED_post_swap_still_dense", mean_c, "")
+            bad += 1
+    if not np.isfinite(ores["loss"]):
+        emit("runtime/observe/FAILED_nonfinite_loss", ores["loss"], "")
         bad += 1
     return bad
 

@@ -4,12 +4,17 @@ Trains a ~100M-parameter llama-family model with LAGS-SGD on a multi-device
 host mesh (data x model), using the SAME production path as the dry-run:
 ``repro.api.Session`` over the partial-auto shard_map step (block-LAGS
 sparse exchange with error feedback), synthetic Markov-LM data, periodic
-checkpointing and a JSONL metrics log.
+checkpointing and a JSONL metrics log — the whole loop is one
+``Session.run`` call.
 
   PYTHONPATH=src python examples/train_e2e.py --steps 300          # ~100M
   PYTHONPATH=src python examples/train_e2e.py --preset small --steps 50
   # online schedule re-planning (repro.runtime) every 50 steps:
   PYTHONPATH=src python examples/train_e2e.py --steps 300 --replan-every 50
+  # evidence-driven re-planning: a step-time anomaly (repro.observe)
+  # re-plans immediately instead of waiting for the cadence boundary:
+  PYTHONPATH=src python examples/train_e2e.py --steps 300 \
+      --replan-every 100 --replan-on-anomaly
   # hierarchical mode on a 2-pod mesh consuming a planned two-tier schedule:
   PYTHONPATH=src python examples/train_e2e.py --method lags_hier \
       --pod 2 --data-par 2 --hier-schedule artifacts/runtime/..._t2_....json
@@ -29,14 +34,10 @@ if "--help" not in __import__("sys").argv:
 
 import argparse
 import dataclasses
-import json
-import time
 
 import jax
-import jax.numpy as jnp
 
-from repro import api, compat
-from repro.checkpoint import io as ckpt
+from repro import api
 from repro.configs import base
 from repro.data import synthetic
 from repro.launch import mesh as M
@@ -81,6 +82,10 @@ def main():
     ap.add_argument("--replan-every", type=int, default=0,
                     help="re-plan the LAGS schedule online every N steps "
                          "(0 = static; see repro.runtime)")
+    ap.add_argument("--replan-on-anomaly", action="store_true",
+                    help="also re-plan when the repro.observe step-time "
+                         "anomaly detector fires (needs --replan-every>0 "
+                         "for the cadence fallback it composes with)")
     ap.add_argument("--swap-threshold", type=float, default=0.05,
                     help="min predicted relative improvement before an "
                          "online re-plan swaps the schedule")
@@ -111,54 +116,34 @@ def main():
         mesh=mesh)
     controller = None
     if args.replan_every > 0:
+        from repro.observe import triggers as TG
         from repro.runtime import RuntimeConfig
+        trig = [TG.CadenceTrigger(args.replan_every)]
+        if args.replan_on_anomaly:
+            trig.append(TG.AnomalyTrigger())
         controller = sess.controller(
             rcfg=RuntimeConfig(replan_every=args.replan_every,
-                               swap_threshold=args.swap_threshold))
-        step_fn, meta = controller.step, controller.meta
-    else:
-        step_fn, _state_specs, meta = sess.train_step()
+                               swap_threshold=args.swap_threshold),
+            triggers=tuple(trig))
+
     state, _ = sess.init_state()
+    # the controller owns its own (already-built) step; don't make the
+    # session compile a second one just to read the meta
+    meta = controller.meta if controller is not None else sess.meta
     n_params = sum(int(x.size) for x in jax.tree.leaves(state["params"]))
     print(f"arch={cfg.name} preset={args.preset}: {n_params / 1e6:.1f}M "
           f"params | mesh {mesh.devices.shape} {mesh.axis_names} | "
           f"mode={meta['mode']} workers={meta['n_workers']} "
           f"c={args.ratio}", flush=True)
 
-    os.makedirs(args.out, exist_ok=True)
     log_path = os.path.join(args.out, "metrics.jsonl")
-    t_start = time.time()
-    n_events = 0
-    with open(log_path, "a") as log:
-        for t in range(args.steps):
-            batch = data.batch(t, args.global_batch, args.seq)
-            with compat.set_mesh(mesh):
-                state, metrics = step_fn(state, batch)
-            loss = float(metrics["loss"])
-            row = {"step": t, "loss": loss,
-                   "elapsed_s": round(time.time() - t_start, 1)}
-            if controller is not None and len(controller.history) > n_events:
-                ev = controller.last_event
-                n_events = len(controller.history)
-                row["replan"] = {"swapped": ev.swapped,
-                                 "improvement": round(ev.improvement, 4)}
-                print(f"step {t:4d}  replan: swapped={ev.swapped} "
-                      f"pred_improvement={ev.improvement:.3f}", flush=True)
-            log.write(json.dumps(row) + "\n")
-            log.flush()
-            if t % 10 == 0 or t == args.steps - 1:
-                print(f"step {t:4d}  loss {loss:.4f}  "
-                      f"({row['elapsed_s']}s)", flush=True)
-            if args.ckpt_every and t and t % args.ckpt_every == 0:
-                ckpt.save(os.path.join(args.out, f"ckpt_{t}"),
-                          {"params": state["params"], "step": state["step"]})
-                if controller is not None:
-                    controller.save_state(
-                        os.path.join(args.out, f"runtime_{t}"))
-    ckpt.save(os.path.join(args.out, "ckpt_final"),
-              {"params": state["params"], "step": state["step"]})
+    os.makedirs(args.out, exist_ok=True)
+    _, history = sess.run(
+        lambda t: data.batch(t, args.global_batch, args.seq),
+        args.steps, controller=controller, state=state,
+        log_path=log_path, log_every=10,
+        ckpt_every=args.ckpt_every, out_dir=args.out)
     if controller is not None:
-        controller.save_state(os.path.join(args.out, "runtime_final"))
         swaps = sum(1 for e in controller.history if e.swapped)
         print(f"runtime: {len(controller.history)} re-plans, "
               f"{swaps} swaps (state saved for resume)")

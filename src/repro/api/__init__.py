@@ -33,8 +33,11 @@ Quickstart::
     state, metrics = step_fn(state, batch)
 
 The legacy entry points (``launch.train.make_train_step``,
-``launch.train.make_exchange``, ``training.make_exchange``) remain as
-``DeprecationWarning``-emitting shims over this module.
+``launch.train.make_exchange``, ``training.make_exchange``, the
+``TrainConfig`` knob container) are gone — this module is the one
+public surface.  ``Session.run`` wraps the whole distributed training
+loop (data_fn -> steps -> metrics log -> checkpoints, trigger-aware
+re-plan logging) for drivers like ``examples/train_e2e.py``.
 """
 from repro.api.config import RunConfig, canonical_mode
 from repro.api.registry import (ExchangeSpec, ExchangeStrategy, TieredKs,

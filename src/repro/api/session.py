@@ -56,18 +56,18 @@ class Session:
     """
 
     def __init__(self, cfg, run: RunConfig | None = None, mesh=None):
-        self.run = run or RunConfig()
-        mode = self.run.resolved_mode(cfg)
+        self.run_config = run or RunConfig()
+        mode = self.run_config.resolved_mode(cfg)
         # one source of truth: cfg.train_mode == run.mode == canonical
         self.cfg = (cfg if cfg.train_mode == mode
                     else dataclasses.replace(cfg, train_mode=mode))
-        self.run = dataclasses.replace(self.run, mode=mode)
+        self.run_config = dataclasses.replace(self.run_config, mode=mode)
         self.mesh = mesh
         self._built = None
 
     @property
     def mode(self) -> str:
-        return self.run.mode
+        return self.run_config.mode
 
     def _need_mesh(self, what: str):
         if self.mesh is None:
@@ -81,7 +81,7 @@ class Session:
         if self._built is None:
             self._built = build_train_step(self.cfg,
                                            self._need_mesh("train_step"),
-                                           self.run)
+                                           self.run_config)
         return self._built
 
     @property
@@ -109,17 +109,109 @@ class Session:
         batches, the SAME ``ExchangeSpec``/registry the distributed step
         builds from."""
         from repro.training import train_loop as TL
-        run = self.run
+        run = self.run_config
         if run.ratio is None:
             run = dataclasses.replace(run, ratio=run.resolved_ratio(self.cfg))
         return TL.SimTrainer(loss_fn, params, run, n_workers=n_workers)
 
     # -- online re-planning -------------------------------------------------
-    def controller(self, rcfg=None, comm_probe=None):
+    def controller(self, rcfg=None, comm_probe=None, triggers=None,
+                   trace_source=None):
         """``runtime.ReplanController`` owning this session's train step
-        (re-fits/re-plans the schedule online; see ``repro.runtime``)."""
+        (re-fits/re-plans the schedule online; see ``repro.runtime``).
+
+        ``triggers``: optional ``repro.observe.triggers`` sequence (OR
+        composition; default = the ``rcfg.replan_every`` cadence).
+        ``trace_source``: optional ``step -> repro.observe.Trace`` that
+        makes telemetry trace-driven (measured per-leaf backward times,
+        per-bucket collective samples)."""
         from repro.runtime import controller as RC
         return RC.ReplanController(self.cfg,
                                    self._need_mesh("controller"),
-                                   rcfg=rcfg, run=self.run,
-                                   comm_probe=comm_probe)
+                                   rcfg=rcfg, run=self.run_config,
+                                   comm_probe=comm_probe,
+                                   triggers=triggers,
+                                   trace_source=trace_source)
+
+    # -- convenience loop ----------------------------------------------------
+    def run(self, data_fn, n_steps: int, *, controller=None, state=None,
+            log_path: str | None = None, log_every: int = 10,
+            ckpt_every: int = 0, out_dir: str | None = None,
+            print_fn=print):
+        """The whole distributed training loop in one call.
+
+        ``data_fn(step) -> batch`` supplies global batches;  the loop
+        runs inside ``compat.set_mesh``, logs one JSONL row per step to
+        ``log_path`` (loss + elapsed seconds + any re-plan event), and —
+        when ``ckpt_every``/``out_dir`` are set — checkpoints the train
+        state (and controller state) periodically plus a final
+        ``ckpt_final``/``runtime_final`` pair.
+
+        ``controller``: a ``ReplanController`` from :meth:`controller`
+        (its :meth:`~repro.runtime.ReplanController.step` replaces the
+        static step function, and its re-plan decisions — including
+        which *trigger* fired — are logged trigger-aware as they
+        happen).  ``state=None`` initializes via :meth:`init_state`.
+
+        Returns ``(state, history)`` where ``history`` is the list of
+        logged row dicts.
+        """
+        import json
+        import os
+        import time
+
+        from repro import compat
+        from repro.checkpoint import io as ckpt
+
+        mesh = self._need_mesh("run")
+        step_fn = controller.step if controller is not None else self.step_fn
+        if state is None:
+            state, _ = self.init_state()
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+
+        def save_ckpt(tag: str):
+            if not out_dir:
+                return
+            ckpt.save(os.path.join(out_dir, f"ckpt_{tag}"),
+                      {"params": state["params"], "step": state["step"]})
+            if controller is not None:
+                controller.save_state(os.path.join(out_dir,
+                                                   f"runtime_{tag}"))
+
+        history: list[dict] = []
+        n_events = 0
+        t_start = time.time()
+        log = open(log_path, "a") if log_path else None
+        try:
+            with compat.set_mesh(mesh):
+                for t in range(n_steps):
+                    state, metrics = step_fn(state, data_fn(t))
+                    row = {"step": t, "loss": float(metrics["loss"]),
+                           "elapsed_s": round(time.time() - t_start, 1)}
+                    if (controller is not None
+                            and len(controller.history) > n_events):
+                        ev = controller.last_event
+                        n_events = len(controller.history)
+                        row["replan"] = {
+                            "swapped": ev.swapped,
+                            "improvement": round(ev.improvement, 4),
+                            "trigger": ev.trigger}
+                        print_fn(f"step {t:4d}  replan[{ev.trigger}]: "
+                                 f"swapped={ev.swapped} "
+                                 f"pred_improvement={ev.improvement:.3f}")
+                    history.append(row)
+                    if log is not None:
+                        log.write(json.dumps(row) + "\n")
+                        log.flush()
+                    if log_every and (t % log_every == 0
+                                      or t == n_steps - 1):
+                        print_fn(f"step {t:4d}  loss {row['loss']:.4f}  "
+                                 f"({row['elapsed_s']}s)")
+                    if ckpt_every and t and t % ckpt_every == 0:
+                        save_ckpt(str(t))
+        finally:
+            if log is not None:
+                log.close()
+        save_ckpt("final")
+        return state, history

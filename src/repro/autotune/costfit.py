@@ -55,6 +55,26 @@ def fit_alpha_beta(samples: Sequence) -> tuple[float, float]:
     return max(float(alpha), 1e-9), max(float(beta), 1e-15)
 
 
+def rel_drift(hardware, alpha: float, beta: float) -> float:
+    """Relative drift of a live (α, β) fit from a recorded fingerprint.
+
+    ``hardware`` is a ``Schedule.hardware`` dict (or anything with
+    ``alpha``/``beta`` attributes); returns
+    ``max(|Δα|/α₀, |Δβ|/β₀)``, the quantity
+    ``observe.triggers.FingerprintTrigger`` thresholds to invalidate a
+    cached schedule.  A fingerprint with no usable wire constants (e.g.
+    the static baseline's ``{"name": "static"}``) cannot drift — 0.0.
+    """
+    if isinstance(hardware, dict):
+        a0, b0 = hardware.get("alpha"), hardware.get("beta")
+    else:
+        a0 = getattr(hardware, "alpha", None)
+        b0 = getattr(hardware, "beta", None)
+    if not a0 or not b0 or a0 <= 0 or b0 <= 0:
+        return 0.0
+    return max(abs(float(alpha) - a0) / a0, abs(float(beta) - b0) / b0)
+
+
 def fit_hardware(profile, *, name: str | None = None,
                  base: cm.Hardware = cm.TPU_V5E_ICI) -> cm.Hardware:
     """Calibrated ``Hardware`` from a ``profiler.ModelProfile``.

@@ -19,7 +19,11 @@ Per-leaf backward times are apportioned from the measured step: total
 backward time ≈ 2/3 of the dense step (fwd:bwd FLOP ratio 1:2 for
 matmul-dominated nets), split across leaves by their analytic backward
 FLOPs (4·d·tokens).  That keeps the *scale* measured while the *split*
-stays structural — exactly what the Eq. 18 budgets need.
+stays structural.  When a ``repro.observe`` trace is available
+(``profile_model(trace=...)``), per-leaf **measured** backward times and
+per-bucket collective samples attributed from it take precedence, and
+this FLOPs-share split becomes the explicit fallback for whatever the
+trace did not cover.
 """
 from __future__ import annotations
 
@@ -63,11 +67,15 @@ def _timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 @dataclasses.dataclass(frozen=True)
 class CommSample:
     """One timed collective: ``nbytes`` per-worker payload (all-gather) or
-    full buffer size (all-reduce), ``t`` seconds per op."""
+    full buffer size (all-reduce), ``t`` seconds per op.  ``label``
+    carries per-bucket provenance when the sample was attributed from a
+    trace (``"<tier>/<bucket or leaf>"``, see ``repro.observe``); the
+    α-β fit ignores it."""
     kind: str
     nbytes: float
     p: int
     t: float
+    label: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,12 +215,19 @@ def profile_model(cfg, mesh, *, seq: int = 64, global_batch: int | None = None,
                   iters: int = 3,
                   comm_sizes: Sequence[int] = DEFAULT_COMM_SIZES,
                   arch: str | None = None,
-                  shape_name: str = "profile") -> ModelProfile:
+                  shape_name: str = "profile", trace=None) -> ModelProfile:
     """Full measured profile of one (cfg × input shape) on ``mesh``.
 
     Runs instrumented micro-steps of the real jitted train step in dense
     mode (compute calibration) and the config's LAGS mode (achieved
     collective traffic), plus the collective micro-benchmarks.
+
+    ``trace``: optional ``repro.observe.Trace`` (real device capture or
+    the deterministic fake backend).  When given, its per-leaf backward
+    events replace the FLOPs-share apportionment (partial coverage
+    splits the *remainder* by FLOPs share) and its per-bucket collective
+    events replace the micro-benchmark sweep — the sweep only runs when
+    the trace carried no usable collective samples.
     """
     from repro.launch import hlo as H
     from repro.launch import mesh as M
@@ -235,11 +250,27 @@ def profile_model(cfg, mesh, *, seq: int = 64, global_batch: int | None = None,
     tokens_per_worker = global_batch * seq / n_w
     leaves = apportion_backward(backprop_leaves(cfg, tokens_per_worker),
                                 BWD_FRACTION * t_dense)
+    comm: tuple[CommSample, ...] = ()
+    if trace is not None:
+        from repro.observe import attribution as A
+        leaves = A.attribute_leaves(leaves, trace,
+                                    t_backward_total=BWD_FRACTION * t_dense)
+        # one profile fits ONE wire: prefer the flat data-parallel tier;
+        # accept a lone other tier; a multi-tier trace with no flat tier
+        # is ambiguous (two wires -> meaningless joint fit), so fall back
+        # to the micro-benchmark sweep for the comm side
+        tiers = A.comm_tiers(trace)
+        if "flat" in tiers:
+            comm = tuple(A.comm_samples(trace, tier="flat"))
+        elif len(tiers) == 1:
+            comm = tuple(A.comm_samples(trace, tier=tiers[0]))
+    if not comm:
+        comm = tuple(time_collectives(mesh, manual, comm_sizes))
     return ModelProfile(
         arch=arch or cfg.name, shape=shape_name, n_workers=n_w,
         mesh_shape=tuple(mesh.devices.shape),
         tokens_per_worker=tokens_per_worker, leaves=leaves,
-        comm_samples=tuple(time_collectives(mesh, manual, comm_sizes)),
+        comm_samples=comm,
         t_step_dense=t_dense, t_step_lags=t_lags,
         flops_per_step=float(cost.get("flops", 0.0)),
         hbm_bytes_per_step=float(cost.get("bytes accessed", 0.0)),

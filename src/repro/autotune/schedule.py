@@ -90,6 +90,14 @@ class Schedule:
     def by_name(self) -> dict[str, LeafPlan]:
         return {lp.name: lp for lp in self.leaves}
 
+    def hardware_drift(self, alpha: float, beta: float) -> float:
+        """How far a live (α, β) fit has drifted from the fit this
+        schedule was solved against (``costfit.rel_drift``) — the
+        fingerprint ``observe.triggers.FingerprintTrigger`` checks to
+        decide whether a cached schedule is stale."""
+        from repro.autotune import costfit
+        return costfit.rel_drift(self.hardware, alpha, beta)
+
     def validate(self, params_like) -> None:
         """Raise ValueError unless the schedule covers exactly the leaves of
         ``params_like`` (same path names, same parameter counts)."""
@@ -217,6 +225,12 @@ class HierSchedule:
         self.inner.validate(params_like)
         self.outer.validate(params_like)
 
+    def hardware_drift(self, alpha: float, beta: float,
+                       tier: str = "outer") -> float:
+        """Fingerprint drift of one tier's wire (default: the sparse
+        cross-pod tier — the one a degraded DCN invalidates)."""
+        return self.tiers[tier].hardware_drift(alpha, beta)
+
     def ratios_tree(self, params_like) -> Any:
         return self.outer.ratios_tree(params_like)
 
@@ -276,9 +290,8 @@ def validate_for(sched, mode: str, *, n_workers: int | None = None,
                  params_like=None) -> None:
     """Schedule-ingestion validation, shared by every consumer.
 
-    Hoisted out of ``launch.train.make_train_step`` so the distributed
-    step builder, ``SimTrainer``, and the runtime controller all enforce
-    the SAME contract.  Only genuinely unconsumable combinations reject:
+    Hoisted out of the distributed step builder so it, ``SimTrainer``,
+    and the runtime controller all enforce the SAME contract.  Only genuinely unconsumable combinations reject:
 
       * a two-tier ``HierSchedule`` only feeds the hierarchical modes
         (``HIER_MODES``): ``lags_hier`` ingests its outer tier,

@@ -149,14 +149,33 @@ def _worker_keys(key, leaf_no: int, p):
     return jax.vmap(lambda w: jax.random.fold_in(lk, w))(jnp.arange(p))
 
 
-def _sparse_mean_over(vals, idx, d: int, axes) -> jax.Array:
+def _comm_scope(tier: str, kind: str, label: str, nbytes: float, p: int):
+    """In-jit annotation carrying the ``repro.observe.names`` grammar,
+    so a real device profile attributes each collective per leaf/tier.
+    Lazy function-scope imports: observe's modules import nothing from
+    ``repro.core.lags``, so no cycle — and tracing only pays them once
+    per compile."""
+    from repro.observe import names as _obs_names
+    from repro.observe.trace import device_annotation
+    return device_annotation(
+        _obs_names.comm_name(tier, kind, label, nbytes=nbytes, p=p))
+
+
+def _sparse_mean_over(vals, idx, d: int, axes, *, tier: str = "flat",
+                      label: str = "leaf") -> jax.Array:
     """All-gather each worker's sparse (vals, idx) over the manual
     ``axes`` and scatter-mean into a dense d-vector; ``axes=()`` is the
-    single-worker degeneracy (plain decompress)."""
+    single-worker degeneracy (plain decompress).  The gather runs under
+    an observe-grammar named scope (``tier``/``label``) so device traces
+    attribute it per collective."""
     if axes:
-        vals_all = jax.lax.all_gather(vals, axes, tiled=False)
-        idx_all = jax.lax.all_gather(idx, axes, tiled=False)
-        return _gathered_scatter_mean(vals_all, idx_all, d, _axis_prod(axes))
+        # 2*k scalars per worker: fp32 values + int32 indices
+        with _comm_scope(tier, "allgather", label, 8.0 * vals.size,
+                         _axis_prod(axes)):
+            vals_all = jax.lax.all_gather(vals, axes, tiled=False)
+            idx_all = jax.lax.all_gather(idx, axes, tiled=False)
+            return _gathered_scatter_mean(vals_all, idx_all, d,
+                                          _axis_prod(axes))
     return C.decompress(vals, idx, d)
 
 
@@ -249,7 +268,8 @@ class LAGSExchange:
             vals, idx, resid = local_select(acc, k, self.compressor,
                                             key=wk, **kw)
             # layer-wise sparse all-gather: ships 2*k scalars per worker
-            mean = _sparse_mean_over(vals, idx, u.size, axes)
+            mean = _sparse_mean_over(vals, idx, u.size, axes,
+                                     label=f"l{i}")
             return mean.reshape(u.shape).astype(u.dtype), resid
 
         flat_u, treedef = jax.tree.flatten(updates)
@@ -320,7 +340,8 @@ class SLGSExchange:
         wk = _leaf_key(key, 0, _worker_index(axes)) if needs_key else None
         vals, idx, resid_vec = local_select(vec, self.k_total,
                                             self.compressor, key=wk, **kw)
-        mean_vec = _sparse_mean_over(vals, idx, vec.shape[0], axes)
+        mean_vec = _sparse_mean_over(vals, idx, vec.shape[0], axes,
+                                     label="packed")
         means, resids, off = [], [], 0
         for u in flat_u:
             n = u.size
@@ -500,8 +521,10 @@ class BlockLAGSExchange:
             to_flat(u), to_flat(e), n_blocks, bs, k_b)
         if axes:
             # layer-wise sparse all-gather: 2*k_b scalars per block per worker
-            vals_all = jax.lax.all_gather(vals, axes, tiled=False)
-            local_all = jax.lax.all_gather(local, axes, tiled=False)
+            with _comm_scope("flat", "allgather", "blocks",
+                             8.0 * vals.size, _axis_prod(axes)):
+                vals_all = jax.lax.all_gather(vals, axes, tiled=False)
+                local_all = jax.lax.all_gather(local, axes, tiled=False)
             p = _axis_prod(axes)
             pk = vals_all.shape[0] * k_b
             idx_cat = jnp.moveaxis(local_all, 0, 1).reshape(n_blocks, pk)
@@ -559,7 +582,8 @@ class HierLAGSExchange:
                   if needs_key else None)
             vals, idx, resid = local_select(acc, k, self.compressor,
                                             key=wk, **kw)
-            mean = _sparse_mean_over(vals, idx, u.size, self.outer_axes)
+            mean = _sparse_mean_over(vals, idx, u.size, self.outer_axes,
+                                     tier="outer", label=f"l{i}")
             return mean.reshape(u.shape).astype(u.dtype), resid
 
         flat_u, treedef = jax.tree.flatten(updates)
@@ -721,7 +745,8 @@ class SparseHierLAGSExchange:
                          if needs_key else None)
                 vals, idx, resid_in = local_select(acc_in, k_in, comp,
                                                    key=wk_in, **kw)
-                m = _sparse_mean_over(vals, idx, u.size, inner)
+                m = _sparse_mean_over(vals, idx, u.size, inner,
+                                      tier="inner", label=f"l{i}")
                 acc_out = e_out + m.reshape(u.shape)
                 # outer accumulator is pod-replicated: outer-only key so
                 # every inner worker draws the SAME cross-pod selection.
@@ -732,7 +757,8 @@ class SparseHierLAGSExchange:
                           if needs_key else None)
                 vals2, idx2, resid_out = local_select(acc_out, k_out, comp,
                                                       key=wk_out, **kw)
-                mean = _sparse_mean_over(vals2, idx2, u.size, outer)
+                mean = _sparse_mean_over(vals2, idx2, u.size, outer,
+                                         tier="outer", label=f"l{i}")
                 return (mean.reshape(u.shape).astype(u.dtype),
                         resid_in, resid_out)
 

@@ -4,8 +4,9 @@ exchange (the production analogue of ``training.SimTrainer``).
 Build steps through ``repro.api`` (``Session.train_step`` /
 ``build_train_step(cfg, mesh, RunConfig)``); the exchange strategy and
 its mesh-axis plan come from the ``repro.api.registry`` string->factory
-registry, so new strategies never edit this file.  The legacy
-``make_train_step(**kwargs)`` remains as a DeprecationWarning shim.
+registry, so new strategies never edit this file.  (The pre-``repro.api``
+``make_train_step``/``make_exchange`` kwarg shims are gone — RunConfig
+is the only knob surface.)
 
 Built-in train modes (``cfg.train_mode`` / ``RunConfig.mode``):
 
@@ -43,7 +44,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import warnings
 from typing import Any
 
 import jax
@@ -205,45 +205,6 @@ def shard_dims_tree(pspecs, row_axes: tuple):
         return tuple(dict.fromkeys(out))  # dedupe, keep order
 
     return jax.tree.map(leaf, pspecs, is_leaf=lambda s: isinstance(s, P))
-
-
-def make_exchange(cfg, params_like, *, method: str, ratio: float | None = None,
-                  block_size: int = 4096, ks_override=None,
-                  row_axes: tuple = (), shard_dims=None):
-    """DEPRECATED shim — build exchanges through
-    ``repro.api.build_exchange(ExchangeSpec)`` instead."""
-    warnings.warn(
-        "launch.train.make_exchange is deprecated; use "
-        "repro.api.build_exchange(repro.api.ExchangeSpec(...))",
-        DeprecationWarning, stacklevel=2)
-    spec = R.ExchangeSpec(
-        mode=canonical_mode(method), params_like=params_like,
-        ratio=(ratio if ratio is not None else cfg.compression_ratio),
-        ks=ks_override, block_size=block_size, sim=False,
-        row_axes=row_axes, shard_dims=shard_dims)
-    return R.build_exchange(spec)
-
-
-def make_train_step(cfg, mesh, *, method: str | None = None,
-                    ratio: float | None = None, lr: float = 0.01,
-                    block_size: int = 4096, chunk: int = 1024,
-                    loss_chunk: int = 512, donate: bool = True,
-                    schedule=None, lr_schedule=None):
-    """DEPRECATED shim over :func:`build_train_step`.
-
-    The kwarg sprawl lives on only here, for callers that predate
-    ``repro.api``; new code builds a ``repro.api.RunConfig`` and goes
-    through ``repro.api.Session`` / ``repro.api.build_train_step``.
-    """
-    warnings.warn(
-        "launch.train.make_train_step(...) is deprecated; use "
-        "repro.api.Session(cfg, RunConfig(...), mesh).train_step() or "
-        "repro.api.build_train_step(cfg, mesh, RunConfig(...))",
-        DeprecationWarning, stacklevel=2)
-    run = RunConfig(mode=method, ratio=ratio, lr=lr, lr_schedule=lr_schedule,
-                    block_size=block_size, chunk=chunk,
-                    loss_chunk=loss_chunk, donate=donate, schedule=schedule)
-    return build_train_step(cfg, mesh, run)
 
 
 def build_train_step(cfg, mesh, run: RunConfig):

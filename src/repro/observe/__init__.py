@@ -1,0 +1,69 @@
+"""``repro.observe`` — trace-driven attribution + anomaly-triggered
+re-planning.
+
+Until this package, the online loop saw whole-step wall times only:
+per-leaf backward budgets came from the FLOPs-share heuristic
+(``profiler.apportion_backward``), wire samples from an injectable
+micro-benchmark probe, and ``ReplanController`` re-planned on a blind
+fixed cadence.  ``repro.observe`` turns that controller from
+cadence-driven into evidence-driven, in four pieces:
+
+  * :mod:`~repro.observe.trace` — capture around instrumented steps:
+    annotation primitives (``jax.named_scope`` names on the
+    ``core.lags`` collectives follow the :mod:`~repro.observe.names`
+    grammar), a real ``jax.profiler`` capture wrapper, and a
+    **deterministic fake-trace backend** for CPU/CI where device traces
+    are unavailable/unparseable.
+  * :mod:`~repro.observe.attribution` — trace events → per-bucket
+    ``CommSample``\\ s (consumed by ``costfit``/``tier_hardware``) and
+    **measured** per-leaf backward times (consumed by
+    ``planner.plan_schedule`` / ``profiler.profile_model``), with the
+    FLOPs-share heuristic demoted to explicit fallback.
+  * :mod:`~repro.observe.anomaly` — robust median/MAD change-point
+    detector over the telemetry step window (warmup/compile-spike
+    masking, fire-exactly-once, checkpointable).
+  * :mod:`~repro.observe.triggers` — the ``ReplanTrigger`` protocol and
+    the built-ins (cadence / anomaly / hardware-fingerprint drift) the
+    controller ORs together; the default set reproduces the old
+    ``replan_every`` semantics bit-for-bit.
+
+Import is lazy (PEP 562): ``repro.core`` annotates collectives via the
+leaf module ``repro.observe.names`` without dragging the autotune stack
+into its import graph.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "names": "repro.observe.names",
+    "trace": "repro.observe.trace",
+    "attribution": "repro.observe.attribution",
+    "anomaly": "repro.observe.anomaly",
+    "triggers": "repro.observe.triggers",
+    "Trace": ("repro.observe.trace", "Trace"),
+    "TraceEvent": ("repro.observe.trace", "TraceEvent"),
+    "FakeTraceBackend": ("repro.observe.trace", "FakeTraceBackend"),
+    "capture_jax_trace": ("repro.observe.trace", "capture_jax_trace"),
+    "AnomalyConfig": ("repro.observe.anomaly", "AnomalyConfig"),
+    "StepTimeAnomalyDetector": ("repro.observe.anomaly",
+                                "StepTimeAnomalyDetector"),
+    "ReplanTrigger": ("repro.observe.triggers", "ReplanTrigger"),
+    "TriggerContext": ("repro.observe.triggers", "TriggerContext"),
+    "CadenceTrigger": ("repro.observe.triggers", "CadenceTrigger"),
+    "AnomalyTrigger": ("repro.observe.triggers", "AnomalyTrigger"),
+    "FingerprintTrigger": ("repro.observe.triggers", "FingerprintTrigger"),
+    "default_triggers": ("repro.observe.triggers", "default_triggers"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    import importlib
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro.observe' has no attribute "
+                             f"{name!r}")
+    if isinstance(target, str):
+        return importlib.import_module(target)
+    mod, attr = target
+    return getattr(importlib.import_module(mod), attr)

@@ -1,0 +1,84 @@
+"""Annotation-name vocabulary shared by every trace producer/consumer.
+
+A trace event is attributed purely from its *name*, so the exchange code
+(`core.lags` named scopes), the deterministic fake backend
+(:class:`~repro.observe.trace.FakeTraceBackend`) and real
+``jax.profiler`` captures all speak one string grammar:
+
+  * ``lags/step``                         — one whole train step
+  * ``lags/fwd``                          — the forward pass
+  * ``lags/bwd/<leaf path>``              — one leaf's backward compute
+  * ``lags/comm/<tier>/<kind>/<label>?nbytes=<B>&p=<P>``
+                                          — one collective (per bucket /
+                                            per leaf); ``tier`` is
+                                            ``flat`` | ``inner`` |
+                                            ``outer``, ``kind`` is
+                                            ``allgather`` | ``allreduce``
+
+Leaf paths may themselves contain ``/`` (``layers/0/attn/wq``): the
+``bwd`` payload is everything after the prefix, and the ``comm`` label
+is everything after the third slash-separated field.  ``nbytes``/``p``
+ride in the name because a device annotation has no other side channel
+for metadata — :func:`parse` recovers them for
+``repro.observe.attribution``.
+
+This module is import-leaf (stdlib only) so ``repro.core`` can annotate
+collectives without pulling the rest of the observe package — or any
+cycle — into its import graph.
+"""
+from __future__ import annotations
+
+STEP = "lags/step"
+FWD = "lags/fwd"
+BWD_PREFIX = "lags/bwd/"
+COMM_PREFIX = "lags/comm/"
+
+#: Tier vocabulary: flat data-parallel wire, intra-pod ICI, cross-pod DCN.
+TIERS = ("flat", "inner", "outer")
+
+
+def bwd_name(leaf: str) -> str:
+    return BWD_PREFIX + leaf
+
+
+def comm_name(tier: str, kind: str, label: str, *, nbytes: float,
+              p: int) -> str:
+    return (f"{COMM_PREFIX}{tier}/{kind}/{label}"
+            f"?nbytes={float(nbytes):.6g}&p={int(p)}")
+
+
+def parse(name: str) -> dict | None:
+    """Structured view of an annotation name, or None for foreign names.
+
+    Returns ``{"type": "step" | "fwd"}``, ``{"type": "bwd", "leaf": ...}``
+    or ``{"type": "comm", "tier", "kind", "label", "nbytes", "p"}``.
+    Malformed ``comm`` metadata parses as ``nbytes=0.0 / p=1`` rather
+    than raising — a real profiler run may mangle suffixes, and a sample
+    with no payload is simply dropped downstream.
+    """
+    if name == STEP:
+        return {"type": "step"}
+    if name == FWD:
+        return {"type": "fwd"}
+    if name.startswith(BWD_PREFIX):
+        return {"type": "bwd", "leaf": name[len(BWD_PREFIX):]}
+    if name.startswith(COMM_PREFIX):
+        rest = name[len(COMM_PREFIX):]
+        parts = rest.split("/", 2)
+        if len(parts) != 3:
+            return None
+        tier, kind, tail = parts
+        label, _, query = tail.partition("?")
+        nbytes, p = 0.0, 1
+        for field in query.split("&"):
+            key, _, val = field.partition("=")
+            try:
+                if key == "nbytes":
+                    nbytes = float(val)
+                elif key == "p":
+                    p = int(val)
+            except ValueError:
+                pass
+        return {"type": "comm", "tier": tier, "kind": kind, "label": label,
+                "nbytes": nbytes, "p": p}
+    return None

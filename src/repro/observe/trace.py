@@ -1,0 +1,233 @@
+"""Trace capture around instrumented train steps.
+
+Two backends produce the same artifact — a :class:`Trace` of named
+:class:`TraceEvent`\\ s using the ``repro.observe.names`` grammar — so
+everything downstream (:mod:`repro.observe.attribution`, the runtime
+controller, benchmarks) is backend-agnostic:
+
+  * :class:`FakeTraceBackend` — **deterministic** synthesis from the α–β
+    cost model: per-leaf backward events from measured budgets, per-leaf
+    collective events priced on the live wire, and a step event from the
+    pipelined LAGS timeline (``cm.iteration_time_lags``).  This is the
+    CPU/CI backend: host platforms produce no parseable device traces,
+    and benchmarks need an *injectable* wire anyway.
+  * :func:`capture_jax_trace` — real ``jax.profiler`` capture around N
+    calls of a step function.  The collectives in ``core.lags`` run
+    under ``jax.named_scope`` annotations carrying the same names, so a
+    real device trace groups ops per bucket/collective; jax writes
+    XPlane protos that need the TensorBoard profile plugin to decode, so
+    on this container the capture returns an *empty* Trace whose
+    ``meta["trace_dir"]`` points at the raw artifact (see README
+    caveat).  Any ``trace.json``/``trace.json.gz`` the tooling did emit
+    is parsed best-effort into events.
+
+``annotation(name)`` (host-side ``TraceAnnotation``) and
+``device_annotation(name)`` (``jax.named_scope``, usable inside jit)
+are the two instrumentation primitives.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import glob
+import gzip
+import json
+import os
+from typing import Any, Callable, Sequence
+
+from repro.core import comm_model as cm
+from repro.observe import names
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One named span: ``t_start``/``dur`` in seconds on a common clock."""
+    name: str
+    t_start: float
+    dur: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A bag of events plus provenance; JSON round-trippable."""
+    events: tuple[TraceEvent, ...]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def named(self, prefix: str) -> list[TraceEvent]:
+        return [e for e in self.events if e.name.startswith(prefix)]
+
+    def to_json(self) -> str:
+        return json.dumps({"meta": self.meta,
+                           "events": [dataclasses.asdict(e)
+                                      for e in self.events]},
+                          indent=1, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "Trace":
+        obj = json.loads(text)
+        return Trace(events=tuple(TraceEvent(**e) for e in obj["events"]),
+                     meta=dict(obj.get("meta", {})))
+
+
+def annotation(name: str):
+    """Host-side profiler annotation (no-op when jax lacks the API)."""
+    import jax
+    cls = getattr(jax.profiler, "TraceAnnotation", None)
+    return cls(name) if cls is not None else contextlib.nullcontext()
+
+
+def device_annotation(name: str):
+    """In-jit annotation: names the HLO ops traced under it, so real
+    device profiles carry the ``repro.observe.names`` grammar."""
+    import jax
+    return jax.named_scope(name)
+
+
+# ---------------------------------------------------------------------------
+# real backend: jax.profiler capture
+# ---------------------------------------------------------------------------
+
+def _parse_chrome_trace(path: str) -> list[TraceEvent]:
+    """Best-effort chrome-trace-format parse (``ts``/``dur`` in µs)."""
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        obj = json.load(f)
+    out = []
+    for ev in obj.get("traceEvents", []):
+        name = ev.get("name", "")
+        if names.parse(name) is None or ev.get("ph") not in (None, "X"):
+            continue
+        out.append(TraceEvent(name=name,
+                              t_start=float(ev.get("ts", 0.0)) * 1e-6,
+                              dur=float(ev.get("dur", 0.0)) * 1e-6))
+    return out
+
+
+def capture_jax_trace(step_fn: Callable, *args, log_dir: str,
+                      steps: int = 1) -> Trace:
+    """Run ``step_fn(*args)`` ``steps`` times under ``jax.profiler.trace``.
+
+    Returns the parsed events when the runtime emitted a chrome-format
+    trace; otherwise an empty Trace with ``meta["trace_dir"]`` pointing
+    at the XPlane artifacts (decodable offline with the TensorBoard
+    profile plugin — not available on this container).
+    """
+    import jax
+    os.makedirs(log_dir, exist_ok=True)
+    with jax.profiler.trace(log_dir):
+        out = None
+        for i in range(steps):
+            with annotation(names.STEP):
+                out = step_fn(*args)
+        jax.block_until_ready(out)
+    events: list[TraceEvent] = []
+    for pattern in ("**/*.trace.json.gz", "**/*.trace.json",
+                    "**/trace.json.gz", "**/trace.json"):
+        for path in glob.glob(os.path.join(log_dir, pattern),
+                              recursive=True):
+            events.extend(_parse_chrome_trace(path))
+    return Trace(events=tuple(events),
+                 meta={"backend": "jax.profiler", "trace_dir": log_dir,
+                       "steps": int(steps), "parsed": bool(events)})
+
+
+# ---------------------------------------------------------------------------
+# deterministic fake backend (CPU / CI)
+# ---------------------------------------------------------------------------
+
+class FakeTraceBackend:
+    """Synthesizes the trace an annotated step *would* produce.
+
+    Deterministic by construction — durations come from the α–β model of
+    the **live** wires, so CI can inject a mid-run bandwidth regression
+    by mutating ``wires`` and every downstream consumer (attribution →
+    costfit → planner, the anomaly detector) sees exactly the physics
+    the injection implies, with zero wall-clock noise.
+
+    Args:
+      leaves: backprop-ordered objects with ``name``/``d``/``t_backward``
+        (``profiler.LeafSample`` — budgets are the per-leaf backward
+        durations emitted as ``bwd`` events).
+      wires: ``{tier: cm.Hardware}`` — a LIVE mapping; callers mutate it
+        to shift a tier's wire mid-run.
+      tier_workers: ``{tier: worker count}`` for the same tiers.
+      t_forward: forward-pass duration (seconds) for the ``fwd`` event.
+      schedule_fn: ``() -> Schedule | HierSchedule | None`` — the live
+        plan; per-leaf ratios price each tier's collective (a flat
+        schedule prices the ``flat``/``outer`` tier; ``None`` falls back
+        to ``static_ratio``, today's uniform ``cfg.compression_ratio``).
+      static_ratio: ratio used when no schedule is live (1.0 = dense).
+    """
+
+    def __init__(self, leaves: Sequence, wires: dict,
+                 tier_workers: dict, *, t_forward: float,
+                 schedule_fn: Callable[[], Any] | None = None,
+                 static_ratio: float = 1.0):
+        self.leaves = tuple(leaves)
+        self.wires = wires
+        self.tier_workers = dict(tier_workers)
+        self.t_forward = float(t_forward)
+        self.schedule_fn = schedule_fn or (lambda: None)
+        self.static_ratio = float(static_ratio)
+
+    def _tier_ratios(self) -> dict[str, dict[str, float]]:
+        sched = self.schedule_fn()
+        fallback = {l.name: self.static_ratio for l in self.leaves}
+        if sched is None:
+            return {t: fallback for t in self.wires}
+        tiers = getattr(sched, "tiers", None)
+        if tiers is not None:
+            by_tier = {t: {lp.name: lp.ratio for lp in s.leaves}
+                       for t, s in tiers.items()}
+            # the inner tier of a HierSchedule prices "inner"; anything
+            # else (flat/outer wires) prices on the sparse outer tier
+            return {t: by_tier.get("inner" if t == "inner" else "outer",
+                                   fallback)
+                    for t in self.wires}
+        flat = {lp.name: lp.ratio for lp in sched.leaves}
+        # a flat schedule plans the sparse exchange: price the flat/outer
+        # wires with it; an intra-pod tier it never planned stays static
+        return {t: (fallback if t == "inner" else flat) for t in self.wires}
+
+    def _comm_event(self, leaf, tier: str, ratio: float,
+                    t_start: float) -> TraceEvent | None:
+        p = int(self.tier_workers.get(tier, 1))
+        if p <= 1:
+            return None
+        hw = self.wires[tier]
+        if ratio <= 1.0:
+            kind, nbytes = "allreduce", 4.0 * leaf.d
+            t = cm.allreduce_time(nbytes, p, hw)
+        else:
+            k = max(1, int(round(leaf.d / ratio)))
+            kind, nbytes = "allgather", 8.0 * k   # fp32 values + int32 idx
+            t = cm.allgather_time(nbytes, p, hw)
+        return TraceEvent(
+            name=names.comm_name(tier, kind, leaf.name, nbytes=nbytes, p=p),
+            t_start=t_start, dur=t)
+
+    def capture(self, step: int = 0) -> Trace:
+        """One instrumented step's worth of events (pure function of the
+        live wires/schedule — the ``step`` argument is provenance only)."""
+        ratios = self._tier_ratios()
+        events = [TraceEvent(names.FWD, 0.0, self.t_forward)]
+        clock = self.t_forward
+        t_b, t_c = [], []
+        for leaf in self.leaves:
+            events.append(TraceEvent(names.bwd_name(leaf.name), clock,
+                                     leaf.t_backward))
+            clock += leaf.t_backward
+            leaf_comm = 0.0
+            for tier in self.wires:
+                ev = self._comm_event(leaf, tier,
+                                      ratios[tier].get(leaf.name, 1.0),
+                                      clock)
+                if ev is not None:
+                    events.append(ev)
+                    leaf_comm += ev.dur
+            t_b.append(leaf.t_backward)
+            t_c.append(leaf_comm)
+        t_step = cm.iteration_time_lags(self.t_forward, t_b, t_c)
+        events.insert(0, TraceEvent(names.STEP, 0.0, t_step))
+        return Trace(events=tuple(events),
+                     meta={"backend": "fake", "step": int(step)})

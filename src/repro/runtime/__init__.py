@@ -17,13 +17,18 @@ This package closes the loop **online**, in three pieces:
     *outer* (cross-pod) tier and dense-reduces within the pod, while
     ``lags_hier2`` — the sparse-intra-pod mode — executes BOTH tiers'
     k's (``repro.api.build_train_step``).
-  * **controller** (:mod:`~repro.runtime.controller`) — every
-    ``replan_every`` steps: re-fit the wire from fresh collective
-    samples, re-apportion compute budgets from the measured window,
-    re-solve Eq. 18, and swap the live train step **only** when the
-    predicted iteration time improves by more than ``swap_threshold``
-    (hysteresis bounds recompile churn).  State survives restarts via
-    ``checkpoint.io``.
+  * **controller** (:mod:`~repro.runtime.controller`) — whenever its
+    trigger set fires (``repro.observe.triggers``: fixed cadence by
+    default, optionally step-time anomaly detection and hardware-
+    fingerprint drift): re-fit the wire from fresh collective samples
+    (trace-attributed per-bucket timings when a ``trace_source`` is
+    installed, micro-benchmark probe otherwise), re-derive compute
+    budgets (measured per-leaf backward times from the trace, FLOPs-
+    share over the fenced window as fallback), re-solve Eq. 18, and
+    swap the live train step **only** when the predicted iteration time
+    improves by more than ``swap_threshold`` (hysteresis bounds
+    recompile churn).  State — including stateful triggers — survives
+    restarts via ``checkpoint.io``.
 
 Usage::
 

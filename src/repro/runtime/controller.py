@@ -1,15 +1,28 @@
 """Online re-planning controller: measured window -> fit -> plan -> swap.
 
-``ReplanController`` owns the jitted train step and, every
-``replan_every`` steps, re-runs the autotune pipeline on the telemetry
-window: the wire (α, β) are re-fitted from fresh collective samples
-(``comm_probe``), the per-leaf compute budgets are re-apportioned from
-the window's median step time, and Eq. 18 is re-solved — flat for
-``lags_dp``, two-tier (``runtime.hier``) for the hierarchical modes.
-For ``lags_hier`` only the outer (cross-pod) tier is executable, so the
-swap prediction prices that tier; for ``lags_hier2`` BOTH tiers are live
-— an ICI-only bandwidth shift re-prices the inner tier, and a swap
-hot-swaps both tiers' k's into the running step.
+``ReplanController`` owns the jitted train step and re-runs the autotune
+pipeline whenever its *trigger set* fires (``repro.observe.triggers`` —
+the default set is a single cadence trigger reproducing the historical
+``replan_every`` semantics): the wire (α, β) are re-fitted from fresh
+collective samples, the per-leaf compute budgets are re-derived, and
+Eq. 18 is re-solved — flat for ``lags_dp``, two-tier (``runtime.hier``)
+for the hierarchical modes.  For ``lags_hier`` only the outer
+(cross-pod) tier is executable, so the swap prediction prices that tier;
+for ``lags_hier2`` BOTH tiers are live — an ICI-only bandwidth shift
+re-prices the inner tier, and a swap hot-swaps both tiers' k's into the
+running step.
+
+Measurements come from the best evidence available, in order:
+
+  * a ``trace_source`` (``step -> repro.observe.Trace``, real capture or
+    the deterministic fake backend) supplies **measured per-leaf
+    backward times** and **per-bucket collective samples**, attributed
+    by ``repro.observe.attribution`` — the planner then consumes real
+    budgets and ``costfit`` real wire points (fit names carry an
+    ``attr_`` prefix so benchmarks can assert the provenance);
+  * otherwise the fenced telemetry window supplies the step-time scale
+    (FLOPs-share apportionment — the explicit fallback) and the
+    ``comm_probe`` micro-benchmark supplies wire samples.
 
 The candidate schedule only replaces the live one under hysteresis: the
 α-β model predicts the iteration time of both the current and the
@@ -24,13 +37,13 @@ holds per partition piece, and the k-contraction analysis of Alistarh et
 al. (arXiv 1809.10505) bounds the EF residual for any step-wise k
 sequence bounded below — the c_u cap is that bound here.
 
-Controller state (current schedule, telemetry window, swap history)
-round-trips through ``checkpoint.io`` so re-planning survives restarts.
+Controller state (current schedule, telemetry window, swap history,
+stateful triggers such as the anomaly detector) round-trips through
+``checkpoint.io`` so re-planning survives restarts.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, Sequence
 
 import jax
@@ -41,6 +54,8 @@ from repro.autotune import schedule as S
 from repro.checkpoint import io as ckpt
 from repro.core import comm_model as cm
 from repro.launch import mesh as M
+from repro.observe import attribution as OA
+from repro.observe import triggers as OT
 from repro.runtime import hier
 from repro.runtime.telemetry import Telemetry
 
@@ -48,7 +63,7 @@ from repro.runtime.telemetry import Telemetry
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
     """Knobs of the online re-planning loop."""
-    replan_every: int = 50        # steps between re-plans (0 = never)
+    replan_every: int = 50        # default cadence trigger (0 = never)
     window: int = 64              # telemetry ring capacity (step samples)
     fence_every: int = 8          # block_until_ready cadence
     swap_threshold: float = 0.05  # min predicted rel. improvement to swap
@@ -70,6 +85,7 @@ class SwapEvent:
     t_pred_candidate: float
     overlap: float            # predicted comm overlap under the candidate
     hw_name: str
+    trigger: str = "cadence"  # comma-joined names of the triggers that fired
 
 
 class ReplanController:
@@ -86,28 +102,25 @@ class ReplanController:
     ``comm_probe(mesh, axes) -> [profiler.CommSample]`` defaults to the
     live ``profiler.time_collectives`` micro-benchmark; benchmarks/tests
     inject synthetic sources (e.g. a mid-run bandwidth shift).
+
+    ``triggers``: sequence of ``observe.triggers.ReplanTrigger`` ORed at
+    each step boundary; defaults to ``(CadenceTrigger(replan_every),)``.
+
+    ``trace_source``: optional ``step -> observe.Trace`` (or None for "no
+    trace this step").  When set it becomes the authoritative telemetry
+    source — the step/comm rings are fed from attributed trace events
+    instead of wall-clock fences, which is what makes anomaly-triggered
+    re-planning deterministic in CI (fake-trace backend).
     """
 
     def __init__(self, cfg, mesh, *, rcfg: RuntimeConfig | None = None,
                  schedule=None, comm_probe: Callable | None = None,
                  run: RunConfig | None = None,
-                 lr: float | None = None, block_size: int | None = None,
-                 chunk: int | None = None, loss_chunk: int | None = None):
+                 triggers: Sequence | None = None,
+                 trace_source: Callable | None = None):
         if cfg.train_mode == "dense":
             raise ValueError("nothing to re-plan for train_mode='dense'")
-        if run is None:
-            legacy = {k: v for k, v in dict(
-                lr=lr, block_size=block_size, chunk=chunk,
-                loss_chunk=loss_chunk).items() if v is not None}
-            if legacy:
-                warnings.warn(
-                    "ReplanController(lr=/block_size=/chunk=/loss_chunk=) "
-                    "is deprecated; pass run=repro.api.RunConfig(...)",
-                    DeprecationWarning, stacklevel=2)
-            run = RunConfig(**legacy)
-        elif any(v is not None for v in (lr, block_size, chunk, loss_chunk)):
-            raise ValueError("pass knobs via run=RunConfig(...), not both "
-                             "run= and legacy kwargs")
+        run = run or RunConfig()
         self.cfg, self.mesh = cfg, mesh
         self.rcfg = rcfg or RuntimeConfig()
         self.mode = cfg.train_mode
@@ -125,6 +138,15 @@ class ReplanController:
                                    fence_every=fence)
         self.history: list[SwapEvent] = []
         self._probe = comm_probe or self._default_probe
+        self.triggers = tuple(triggers) if triggers is not None else \
+            OT.default_triggers(self.rcfg.replan_every)
+        self.trace_source = trace_source
+        self._last_trace = None
+        self._last_trace_step = -1
+        #: provenance of the last re-plan's leaf budgets: "trace" when a
+        #: capture supplied measured per-leaf backward times, "window"
+        #: for the FLOPs-share fallback over the fenced median
+        self.measurement_source = "window"
         self._step_count = 0
         # tokens=1.0: apportion_backward splits by FLOPs *share*, so the
         # absolute token count cancels; budgets come from measured times
@@ -145,22 +167,72 @@ class ReplanController:
             self.cfg, self.mesh, run)
 
     def step(self, state, batch):
-        """Run one train step; ticks telemetry and re-plans on cadence."""
+        """Run one train step; ticks telemetry and re-plans when a
+        trigger fires."""
         state, metrics = self.step_fn(state, batch)
         self._step_count += 1
-        self.telemetry.tick(self._step_count, (state, metrics))
-        if self._due():
+        ingested = False
+        if self.trace_source is not None:
+            trace = self.trace_source(self._step_count)
+            if trace is not None:
+                ingested = self.ingest_trace(self._step_count, trace)
+        if not ingested:
+            # no trace this step, or one with no usable step event (e.g.
+            # the real backend's unparseable-XPlane empty Trace) — fall
+            # back to the fenced wall clock so cadence/anomaly triggers
+            # keep seeing step samples instead of starving forever
+            self.telemetry.tick(self._step_count, (state, metrics))
+        fired = self._fired_triggers()
+        if fired:
             # drain in-flight async dispatches before probing the wire —
             # collectives contending with unfinished step work would
             # inflate the α/β fit and could trigger a spurious swap
             jax.block_until_ready((state, metrics))
-            self.maybe_replan(self._step_count)
+            self.maybe_replan(self._step_count, trigger=",".join(fired))
         return state, metrics
 
+    def ingest_trace(self, step_no: int, trace) -> bool:
+        """Feed one attributed trace into the telemetry rings (step time
+        from the ``lags/step`` event, per-bucket comm samples) and keep
+        it as the budget source for the next re-plan.  Returns True when
+        the trace carried a usable step timing (``step`` then skips the
+        wall-clock fence); an eventless trace is ignored entirely."""
+        t_step = OA.step_time(trace)
+        samples = OA.comm_samples(trace)
+        if t_step <= 0.0 and not samples and not OA.backward_times(trace):
+            return False
+        self._last_trace = trace
+        self._last_trace_step = int(step_no)
+        if t_step > 0.0:
+            self.telemetry.record_step(int(step_no), t_step)
+        if samples:
+            self.telemetry.record_comm(samples)
+        return t_step > 0.0
+
+    def _fresh_trace(self):
+        """The last ingested trace, unless it has aged out of the
+        telemetry window — re-planning must not brand stale-epoch
+        evidence as measured (``attr_``/"trace") after the wire may have
+        moved on."""
+        if self._last_trace is None:
+            return None
+        if self._step_count - self._last_trace_step > self.rcfg.window:
+            return None
+        return self._last_trace
+
+    def _trigger_ctx(self) -> OT.TriggerContext:
+        return OT.TriggerContext(step=self._step_count,
+                                 telemetry=self.telemetry,
+                                 schedule=self.schedule, mode=self.mode)
+
+    def _fired_triggers(self) -> list[str]:
+        if len(self.telemetry) < self.rcfg.min_step_samples:
+            return []
+        ctx = self._trigger_ctx()
+        return [t.name for t in self.triggers if t.due(ctx)]
+
     def _due(self) -> bool:
-        return (self.rcfg.replan_every > 0
-                and self._step_count % self.rcfg.replan_every == 0
-                and len(self.telemetry) >= self.rcfg.min_step_samples)
+        return bool(self._fired_triggers())
 
     @property
     def last_event(self) -> SwapEvent | None:
@@ -173,11 +245,53 @@ class ReplanController:
             iters=self.rcfg.probe_iters)
 
     def _measured_leaves(self) -> tuple[Sequence, float]:
-        """(leaves with window-measured budgets, t_forward estimate)."""
+        """(leaves with measured budgets, t_forward estimate).
+
+        Preferred source: the last attributed trace — measured per-leaf
+        backward times with the FLOPs-share split only covering leaves
+        the trace missed.  Fallback: apportion the fenced window's
+        median step time by FLOPs share (the pre-observe behaviour)."""
         t_step = self.telemetry.median_step_time()
-        leaves = profiler.apportion_backward(
-            self._leaf_template, profiler.BWD_FRACTION * t_step)
+        t_bwd_total = profiler.BWD_FRACTION * t_step
+        trace = self._fresh_trace()
+        if trace is not None:
+            measured = OA.backward_times(trace)
+            if measured:
+                leaves = OA.attribute_leaves(
+                    self._leaf_template, trace,
+                    t_backward_total=t_bwd_total)
+                t_fwd = OA.forward_time(trace)
+                if t_fwd <= 0.0:
+                    t_fwd = max(0.0, t_step - sum(l.t_backward
+                                                  for l in leaves))
+                self.measurement_source = "trace"
+                return leaves, t_fwd
+        self.measurement_source = "window"
+        leaves = profiler.apportion_backward(self._leaf_template,
+                                             t_bwd_total)
         return leaves, max(0.0, (1.0 - profiler.BWD_FRACTION) * t_step)
+
+    def _tier_samples(self, tier: str, axes) -> tuple[list, str]:
+        """Wire samples for one tier: trace-attributed per-bucket samples
+        when the (fresh) last trace covered that tier (fit name prefixed
+        ``attr_``), else the injected/live probe."""
+        trace = self._fresh_trace()
+        if trace is not None:
+            attributed = OA.comm_samples(trace, tier=tier)
+            if attributed:
+                return attributed, "attr_"
+        if not axes:
+            return [], ""
+        # tag probe samples with their tier so downstream window fits
+        # (FingerprintTrigger) never mix two wires into one line
+        samples = [dataclasses.replace(s, label=f"{tier}/probe")
+                   for s in self._probe(self.mesh, axes)]
+        # probe samples are not already in the ring (trace samples are,
+        # via ingest_trace) — record them so FingerprintTrigger and the
+        # checkpoint see the evidence the fit consumed
+        if samples:
+            self.telemetry.record_comm(samples)
+        return samples, ""
 
     def _static_baseline(self, leaves) -> S.Schedule:
         """The live per-leaf plan when no schedule was ever installed:
@@ -198,12 +312,12 @@ class ReplanController:
         if self.mode in S.HIER_MODES:
             inner_axes = M.inner_axis_names(self.mesh)
             outer_axes = M.lags_axis_names(self.mesh, self.mode)
-            s_in = self._probe(self.mesh, inner_axes) if inner_axes else []
-            s_out = self._probe(self.mesh, outer_axes) if outer_axes else []
-            self.telemetry.record_comm(list(s_in) + list(s_out))
-            hw_in = hier.tier_hardware(s_in, rc.hw_base, name="ici_fit")
+            s_in, pre_in = self._tier_samples("inner", inner_axes)
+            s_out, pre_out = self._tier_samples("outer", outer_axes)
+            hw_in = hier.tier_hardware(s_in, rc.hw_base,
+                                       name=pre_in + "ici_fit")
             hw_out = hier.tier_hardware(s_out, rc.hw_base_outer,
-                                        name="dcn_fit")
+                                        name=pre_out + "dcn_fit")
             p_in, p_out = self.tier_workers
             cand = hier.plan_hier_schedule(
                 leaves, p_inner=p_in, p_outer=p_out, hw_inner=hw_in,
@@ -228,9 +342,9 @@ class ReplanController:
                     hw_inner=hw_in, hw_outer=hw_out, t_forward=t_fwd)
             return cand, predict, hw_out
         axes = M.data_axis_names(self.mesh)
-        samples = self._probe(self.mesh, axes)
-        self.telemetry.record_comm(list(samples))
-        hw = hier.tier_hardware(samples, rc.hw_base, name="wire_fit")
+        samples, prefix = self._tier_samples("flat", axes)
+        hw = hier.tier_hardware(samples, rc.hw_base,
+                                name=prefix + "wire_fit")
         p = int(self.meta["n_workers"])
         cand = planner.plan_schedule(leaves, p=p, hw=hw, arch=self.cfg.name,
                                      shape="runtime", c_upper=rc.c_upper,
@@ -240,7 +354,7 @@ class ReplanController:
                                                         hw, t_fwd),
                 hw)
 
-    def maybe_replan(self, step_no: int) -> SwapEvent:
+    def maybe_replan(self, step_no: int, trigger: str = "manual") -> SwapEvent:
         """Re-fit + re-plan on the current window; swap under hysteresis."""
         leaves, t_fwd = self._measured_leaves()
         candidate, predict, hw = self._plan_candidate(leaves, t_fwd)
@@ -261,13 +375,18 @@ class ReplanController:
                           improvement=float(improvement),
                           t_pred_current=float(t_cur),
                           t_pred_candidate=float(t_new),
-                          overlap=float(pred["overlap"]), hw_name=hw.name)
+                          overlap=float(pred["overlap"]), hw_name=hw.name,
+                          trigger=str(trigger))
         self.history.append(event)
+        ctx = self._trigger_ctx()
+        for t in self.triggers:
+            t.notify_replan(ctx, event)
         return event
 
     # -- checkpoint round-trip ---------------------------------------------
     def save_state(self, path: str) -> str:
-        """Persist schedule + telemetry window + swap history via
+        """Persist schedule + telemetry window (step AND per-bucket comm
+        rings) + swap history + stateful-trigger state via
         ``checkpoint.io`` (arrays in the .npz, provenance in the JSON
         sidecar)."""
         meta = {
@@ -276,8 +395,8 @@ class ReplanController:
             "schedule": (self.schedule.to_json()
                          if self.schedule is not None else None),
             "history": [dataclasses.asdict(e) for e in self.history],
-            "comm": [dataclasses.asdict(c)
-                     for c in self.telemetry.comm_samples()],
+            "triggers": {t.name: t.state_dict() for t in self.triggers
+                         if hasattr(t, "state_dict")},
         }
         ckpt.save(path, self.telemetry.state_arrays(), metadata=meta)
         return path
@@ -289,10 +408,17 @@ class ReplanController:
                 f"runtime state was saved for train_mode="
                 f"{meta.get('train_mode')!r}, controller runs {self.mode!r}")
         self.telemetry.load_state_arrays(ckpt.load_arrays(path))
-        self.telemetry.record_comm(
-            [profiler.CommSample(**c) for c in meta.get("comm", [])])
+        if not self.telemetry.comm_samples():
+            # pre-observe checkpoints carried comm samples in the JSON
+            # sidecar instead of the array payload
+            self.telemetry.record_comm(
+                [profiler.CommSample(**c) for c in meta.get("comm", [])])
         self._step_count = int(meta.get("step_count", 0))
         self.history = [SwapEvent(**e) for e in meta.get("history", [])]
+        states = meta.get("triggers", {})
+        for t in self.triggers:
+            if t.name in states and hasattr(t, "load_state_dict"):
+                t.load_state_dict(states[t.name])
         sched_json = meta.get("schedule")
         if sched_json is not None:
             self.schedule = S.schedule_from_json(sched_json)

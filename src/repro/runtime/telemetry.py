@@ -10,9 +10,12 @@ evenly across the steps in between.  The fence cost amortizes to
 ~1/fence_every and the jitted computation is never touched.
 
 Collective timings arrive the same way: the controller's comm probe (a
-micro-benchmark or an injected synthetic source) hands back
+micro-benchmark, an injected synthetic source, or per-bucket samples
+attributed from a trace by ``repro.observe.attribution``) hands back
 ``profiler.CommSample`` batches which are kept in their own ring so the
-cost fit always sees a bounded, recent window.
+cost fit always sees a bounded, recent window.  The comm ring is
+ordered oldest→newest and — like the step ring — survives
+``state_arrays`` round-trips, per-bucket kinds/labels included.
 """
 from __future__ import annotations
 
@@ -102,14 +105,22 @@ class Telemetry:
 
     # -- collective samples ------------------------------------------------
     def record_comm(self, samples: Sequence) -> None:
+        """Append in the given order: the sequence's last element becomes
+        the ring's newest sample."""
         self._comm.extend(samples)
 
     def comm_samples(self, latest: int | None = None) -> list:
+        """Samples ordered oldest-first / **newest-last** — the order they
+        were recorded in, so ``comm_samples(latest=n)[-1]`` is always the
+        most recent sample.  ``latest`` keeps only the n newest (still
+        newest-last).  Pinned by a regression test: attribution windows
+        depend on this ordering."""
         out = list(self._comm)
         return out if latest is None else out[-latest:]
 
     # -- checkpoint round-trip (arrays for ``checkpoint.io``) --------------
     def state_arrays(self) -> dict[str, np.ndarray]:
+        comm = list(self._comm)
         return {
             "telemetry/step": np.array([s.step for s in self._steps],
                                        np.int64),
@@ -117,17 +128,40 @@ class Telemetry:
                                          np.float64),
             "telemetry/fenced": np.array([s.fenced for s in self._steps],
                                          np.int64),
+            # comm ring, oldest-first; kinds/labels as unicode arrays so
+            # per-bucket provenance survives the .npz round-trip
+            "telemetry/comm_kind": np.array([s.kind for s in comm],
+                                            dtype=np.str_),
+            "telemetry/comm_nbytes": np.array([s.nbytes for s in comm],
+                                              np.float64),
+            "telemetry/comm_p": np.array([s.p for s in comm], np.int64),
+            "telemetry/comm_t": np.array([s.t for s in comm], np.float64),
+            "telemetry/comm_label": np.array(
+                [getattr(s, "label", "") for s in comm], dtype=np.str_),
         }
 
     def load_state_arrays(self, arrays: dict) -> None:
         """Replace the collector's state wholesale — both rings are
         cleared so pre-restore samples (possibly from a different wire
         epoch) cannot mix into the restored window."""
+        from repro.autotune.profiler import CommSample
         self._steps.clear()
         self._comm.clear()
         for step, t, f in zip(arrays["telemetry/step"],
                               arrays["telemetry/t_step"],
                               arrays["telemetry/fenced"]):
             self._steps.append(StepSample(int(step), float(t), int(f)))
+        if "telemetry/comm_kind" in arrays:   # absent in pre-observe ckpts
+            labels = arrays.get("telemetry/comm_label",
+                                [""] * len(arrays["telemetry/comm_kind"]))
+            for kind, nbytes, p, t, label in zip(
+                    arrays["telemetry/comm_kind"],
+                    arrays["telemetry/comm_nbytes"],
+                    arrays["telemetry/comm_p"],
+                    arrays["telemetry/comm_t"], labels):
+                self._comm.append(CommSample(kind=str(kind),
+                                             nbytes=float(nbytes),
+                                             p=int(p), t=float(t),
+                                             label=str(label)))
         self._last_fence_t = None  # re-baseline on the next tick
         self._since_fence = 0

@@ -9,56 +9,19 @@ optimizer.  Two execution modes:
     in a partial-auto ``shard_map``.
 
 Both surfaces build their exchange from the same ``repro.api``
-``ExchangeSpec``/registry; ``TrainConfig`` remains as the legacy knob
-container and converts losslessly via :meth:`TrainConfig.to_run_config`.
+``ExchangeSpec``/registry.  (The legacy ``TrainConfig`` knob container
+and its ``make_exchange``/``SimTrainer(TrainConfig)`` shims are gone —
+``repro.api.RunConfig`` is the one knob surface; DGC-style momentum
+correction lives on as ``RunConfig.momentum_correction``.)
 """
 from __future__ import annotations
-
-import dataclasses
-import warnings
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.api.config import RunConfig, canonical_mode
+from repro.api.config import RunConfig
 from repro.core import assumption
 from repro.optim import optimizers as opt
-
-
-@dataclasses.dataclass(frozen=True)
-class TrainConfig:
-    """Legacy sim-surface config — prefer ``repro.api.RunConfig``.
-
-    Kept so existing callers (and serialized experiment setups) load
-    unchanged; ``SimTrainer`` converts it on entry.
-    """
-    method: str = "lags"          # dense | slgs | lags (alias of lags_dp)
-    compression_ratio: float = 250.0
-    compressor: str = "topk_exact"
-    lr: float = 0.1
-    momentum: float = 0.0
-    # DGC-style momentum correction (Lin et al. 2018), the paper's own
-    # suggested fix for the sparsification accuracy gap (Sec. 6): momentum
-    # is applied PER WORKER BEFORE sparsification, so the EF residual
-    # accumulates velocity, not raw gradient.
-    momentum_correction: float = 0.0
-    measure_delta: bool = False   # record the Eq. 20 assumption metric
-    lr_schedule: Callable[[jax.Array], jax.Array] | None = None
-    # Optional ``repro.autotune.Schedule`` (anything with a
-    # ``ks_tree(params_like)`` method): planned per-leaf k's replace the
-    # scalar ``compression_ratio`` for the lags method.
-    schedule: Any = None
-    seed: int = 0
-
-    def to_run_config(self) -> RunConfig:
-        return RunConfig(
-            mode=canonical_mode(self.method), ratio=self.compression_ratio,
-            compressor=self.compressor, lr=self.lr,
-            lr_schedule=self.lr_schedule, momentum=self.momentum,
-            momentum_correction=self.momentum_correction,
-            measure_delta=self.measure_delta, schedule=self.schedule,
-            seed=self.seed)
 
 
 def _sim_exchange(run: RunConfig, params, *, n_workers: int | None = None):
@@ -77,37 +40,20 @@ def _sim_exchange(run: RunConfig, params, *, n_workers: int | None = None):
     return R.build_exchange(spec)
 
 
-def make_exchange(tcfg: TrainConfig, params):
-    """DEPRECATED shim — build exchanges through
-    ``repro.api.build_exchange(ExchangeSpec)`` instead."""
-    warnings.warn(
-        "training.make_exchange is deprecated; use "
-        "repro.api.build_exchange(repro.api.ExchangeSpec(...))",
-        DeprecationWarning, stacklevel=2)
-    run = tcfg if isinstance(tcfg, RunConfig) else tcfg.to_run_config()
-    return _sim_exchange(run, params)
-
-
 class SimTrainer:
     """P simulated workers; batches arrive with a leading (P,) axis.
 
-    Accepts a ``repro.api.RunConfig`` (preferred; what
-    ``Session.simulator`` passes) or a legacy ``TrainConfig``.
+    Takes a ``repro.api.RunConfig`` (what ``Session.simulator`` passes).
     """
 
-    def __init__(self, loss_fn, params, tcfg: TrainConfig | RunConfig,
-                 n_workers: int):
-        if isinstance(tcfg, RunConfig):
-            run = tcfg
-        else:
-            warnings.warn(
-                "SimTrainer(TrainConfig) is deprecated; pass a "
-                "repro.api.RunConfig (or use repro.api.Session.simulator)",
-                DeprecationWarning, stacklevel=2)
-            run = tcfg.to_run_config()
+    def __init__(self, loss_fn, params, run: RunConfig, n_workers: int):
+        if not isinstance(run, RunConfig):
+            raise TypeError(
+                f"SimTrainer takes a repro.api.RunConfig, got "
+                f"{type(run).__name__} (the legacy TrainConfig shim was "
+                f"removed; use api.Session(cfg, run).simulator(...))")
         self.loss_fn = loss_fn
         self.run_config = run
-        self.tcfg = tcfg          # kept for legacy attribute access
         self.mode = run.resolved_mode()
         self.n_workers = n_workers
         self.exchange = _sim_exchange(run, params, n_workers=n_workers)

@@ -81,12 +81,12 @@ class TestCanonicalMode:
         for m in ("dense", "slgs", "lags_dp", "lags_hier"):
             assert api.canonical_mode(m) == m
 
-    def test_train_config_converts(self):
+    def test_sim_trainer_requires_run_config(self):
+        """The TrainConfig shim is gone: SimTrainer now rejects anything
+        that is not a RunConfig, pointing at the migration."""
         from repro.training import train_loop as TL
-        run = TL.TrainConfig(method="lags", compression_ratio=16.0,
-                             lr=0.05).to_run_config()
-        assert run.mode == "lags_dp"
-        assert run.ratio == 16.0 and run.lr == 0.05
+        with pytest.raises(TypeError, match="RunConfig"):
+            TL.SimTrainer(_loss, _params(), {"method": "lags"}, n_workers=2)
 
 
 # ---------------------------------------------------------------------------
@@ -447,52 +447,81 @@ class TestCompressorKeyThreading:
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims stay functional
+# shims are gone + Session.run convenience loop
 # ---------------------------------------------------------------------------
 
-class TestDeprecatedShims:
-    def test_make_train_step_warns_and_works(self):
+class TestShimsDeleted:
+    def test_legacy_entry_points_removed(self):
+        """The PR-3 deprecation shims were deleted outright: the legacy
+        names must not resolve (a lingering shim would silently bypass
+        the RunConfig contract)."""
         from repro.launch import train as TR
-        with pytest.warns(DeprecationWarning, match="make_train_step"):
-            _, _, meta = TR.make_train_step(_model_cfg("lags_dp"), _mesh(),
-                                            donate=False)
-        assert meta["mode"] == "lags_dp"
-        assert meta["ks"] is not None
-
-    def test_launch_make_exchange_warns(self):
-        from repro.launch import train as TR
-        cfg = _model_cfg()
-        with pytest.warns(DeprecationWarning, match="make_exchange"):
-            exch = TR.make_exchange(cfg, _params(), method="lags")
-        assert isinstance(exch, lags.BlockLAGSExchange)
-
-    def test_training_make_exchange_warns(self):
         from repro.training import train_loop as TL
-        with pytest.warns(DeprecationWarning, match="make_exchange"):
-            exch = TL.make_exchange(TL.TrainConfig(method="lags",
-                                                   compression_ratio=4.0),
-                                    _params())
-        assert isinstance(exch, lags.LAGSExchange)
+        assert not hasattr(TR, "make_train_step")
+        assert not hasattr(TR, "make_exchange")
+        assert not hasattr(TL, "make_exchange")
+        assert not hasattr(TL, "TrainConfig")
 
-    def test_sim_trainer_train_config_warns(self):
-        from repro.training import train_loop as TL
-        with pytest.warns(DeprecationWarning, match="RunConfig"):
-            tr = TL.SimTrainer(_loss, _params(),
-                               TL.TrainConfig(method="dense"), n_workers=2)
-        assert isinstance(tr.exchange, lags.DenseExchange)
-
-    def test_controller_legacy_kwargs_warn(self):
+    def test_controller_rejects_legacy_kwargs(self):
         from repro.runtime import ReplanController, RuntimeConfig
-        cfg = _model_cfg("lags_dp")
-        with pytest.warns(DeprecationWarning, match="RunConfig"):
-            ctl = ReplanController(cfg, _mesh(),
-                                   rcfg=RuntimeConfig(replan_every=0),
-                                   comm_probe=lambda m, a: [],
-                                   chunk=16, loss_chunk=16)
-        assert ctl._run.chunk == 16 and ctl._run.donate is False
-
-    def test_controller_rejects_mixed_config(self):
-        from repro.runtime import ReplanController
-        with pytest.raises(ValueError, match="not both"):
+        with pytest.raises(TypeError):
             ReplanController(_model_cfg("lags_dp"), _mesh(),
-                             run=api.RunConfig(), chunk=16)
+                             rcfg=RuntimeConfig(replan_every=0),
+                             comm_probe=lambda m, a: [],
+                             chunk=16, loss_chunk=16)
+
+
+class TestSessionRun:
+    def test_loop_logs_and_checkpoints(self, tmp_path):
+        """examples/train_e2e.py's whole body: data_fn -> steps ->
+        metrics log + checkpoints, in one Session.run call."""
+        import json
+        import os
+        cfg = _model_cfg("lags_dp")
+        sess = api.Session(cfg, api.RunConfig(lr=0.1, chunk=16,
+                                              loss_chunk=16, donate=False),
+                           mesh=_mesh())
+        from repro.launch import specs as SP
+        from repro.configs import base
+        shape = base.InputShape("t", 16, 4, "train")
+        printed = []
+        log_path = str(tmp_path / "metrics.jsonl")
+        state, history = sess.run(
+            lambda t: SP.concrete_batch(cfg, shape,
+                                        key=jax.random.PRNGKey(t)),
+            3, log_path=log_path, log_every=1, ckpt_every=2,
+            out_dir=str(tmp_path), print_fn=printed.append)
+        assert len(history) == 3
+        assert all(np.isfinite(r["loss"]) for r in history)
+        assert int(np.asarray(state["step"])) == 3
+        rows = [json.loads(l) for l in open(log_path)]
+        assert [r["step"] for r in rows] == [0, 1, 2]
+        assert os.path.exists(str(tmp_path / "ckpt_2.npz"))
+        assert os.path.exists(str(tmp_path / "ckpt_final.npz"))
+        assert printed  # log_every printed progress lines
+
+    def test_trigger_aware_replan_rows(self, tmp_path):
+        """With a controller attached, Session.run logs each re-plan
+        decision — including WHICH trigger fired — as it happens."""
+        from repro.runtime import RuntimeConfig
+        cfg = _model_cfg("lags_dp")
+        sess = api.Session(cfg, api.RunConfig(lr=0.1, chunk=16,
+                                              loss_chunk=16, donate=False),
+                           mesh=_mesh())
+        ctl = sess.controller(
+            rcfg=RuntimeConfig(replan_every=2, fence_every=1,
+                               min_step_samples=1),
+            comm_probe=lambda mesh, axes: [])
+        _, history = sess.run(
+            lambda t: _e2e_batch(cfg, t), 4, controller=ctl,
+            out_dir=str(tmp_path), print_fn=lambda *_: None)
+        replans = [r["replan"] for r in history if "replan" in r]
+        assert replans and all(r["trigger"] == "cadence" for r in replans)
+        assert (tmp_path / "runtime_final.npz").exists()
+
+
+def _e2e_batch(cfg, t):
+    from repro.configs import base
+    from repro.launch import specs as SP
+    return SP.concrete_batch(cfg, base.InputShape("t", 16, 4, "train"),
+                             key=jax.random.PRNGKey(t))

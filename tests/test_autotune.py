@@ -201,26 +201,29 @@ class TestIngestion:
                         hardware={"name": "unit"}, leaves=tuple(leaves))
 
     def test_sim_trainer_consumes_schedule(self):
+        from repro import api
         from repro.training import train_loop as TL
         cfg, params = self._model()
         sched = self._sched_for(
             params, lambda name, d: 16.0 if d > 4096 else 1.0)
-        tcfg = TL.TrainConfig(method="lags", lr=0.1, schedule=sched)
-        exch = TL.make_exchange(tcfg, params)
+        tr = TL.SimTrainer(lambda p, b: (jnp.float32(0.0), {}), params,
+                           api.RunConfig(mode="lags_dp", lr=0.1,
+                                         schedule=sched), n_workers=4)
         by = sched.by_name
         for (name, leaf), k in zip(leaf_entries(params),
-                                   jax.tree.leaves(exch.ks)):
+                                   jax.tree.leaves(tr.exchange.ks)):
             assert k == max(1, round(int(np.prod(leaf.shape))
                                      / by[name].ratio))
 
-    def test_make_train_step_consumes_schedule(self):
+    def test_build_train_step_consumes_schedule(self):
+        from repro import api
         from repro.launch import mesh as M, train as TR
         cfg, params = self._model()
         mesh = M.make_host_mesh(data=1, model=1)
         sds, _ = TR.model_shapes_and_axes(cfg)
         sched = self._sched_for(sds, lambda name, d: 8.0 if d > 4096 else 1.0)
-        _, _, meta = TR.make_train_step(cfg, mesh, schedule=sched,
-                                        donate=False)
+        _, _, meta = api.build_train_step(
+            cfg, mesh, api.RunConfig(schedule=sched, donate=False))
         assert meta["ks"] is not None
         ks = {n: k for (n, _), k in zip(leaf_entries(sds),
                                         jax.tree.leaves(meta["ks"]))}
@@ -230,15 +233,17 @@ class TestIngestion:
         for n, k in ks.items():
             assert k == by[n].k or k == max(1, round(by[n].d / by[n].ratio))
 
-    def test_make_train_step_rejects_mismatched_schedule(self):
-        from repro.launch import mesh as M, train as TR
+    def test_build_train_step_rejects_mismatched_schedule(self):
+        from repro import api
+        from repro.launch import mesh as M
         cfg, params = self._model()
         mesh = M.make_host_mesh(data=1, model=1)
         bad = Schedule(arch="other", shape="unit", n_workers=4,
                        hardware={"name": "unit"},
                        leaves=(LeafPlan("nope", 3, 1.0, 3),))
         with pytest.raises(ValueError, match="leaf structure"):
-            TR.make_train_step(cfg, mesh, schedule=bad, donate=False)
+            api.build_train_step(cfg, mesh,
+                                 api.RunConfig(schedule=bad, donate=False))
 
 
 class TestValidateForTiers:

@@ -51,8 +51,9 @@ mesh = M.make_host_mesh(data=4, model=2)
 shape = base.InputShape("t", 16, 8, "train")
 batch = SP.concrete_batch(cfg, shape)
 
-step, state_specs, meta = TR.make_train_step(cfg, mesh, lr=0.1, chunk=16,
-                                             loss_chunk=16, donate=False)
+from repro import api
+step, state_specs, meta = api.build_train_step(
+    cfg, mesh, api.RunConfig(lr=0.1, chunk=16, loss_chunk=16, donate=False))
 state, _ = TR.init_state(cfg, mesh)
 with compat.set_mesh(mesh):
     new_state, metrics = step(state, batch)
@@ -83,7 +84,9 @@ def test_lags_dp_matches_simulation():
 row_axes = tuple(a for a in mesh.axis_names
                  if a not in meta["manual"] and a in ("data", "model"))
 sdims = TR.shard_dims_tree(meta["pspecs"], row_axes)
-exch = TR.make_exchange(cfg, params0, method="lags", shard_dims=sdims)
+exch = api.build_exchange(api.ExchangeSpec(
+    mode="lags_dp", params_like=params0, ratio=cfg.compression_ratio,
+    sim=False, shard_dims=sdims))
 mean_upd, _ = exch.exchange(updates, exch.init(updates), None)
 params_sim = jax.tree.map(
     lambda p, d: np.asarray((p.astype(jnp.float32) - d), np.float32),
@@ -133,8 +136,9 @@ cfg = dataclasses.replace(
 mesh = M.make_host_mesh(data=2, model=2, pod=2)
 shape = base.InputShape("t", 16, 8, "train")
 batch = SP.concrete_batch(cfg, shape)
-step, state_specs, meta = TR.make_train_step(cfg, mesh, lr=0.1, chunk=16,
-                                             loss_chunk=16, donate=False)
+from repro import api
+step, state_specs, meta = api.build_train_step(
+    cfg, mesh, api.RunConfig(lr=0.1, chunk=16, loss_chunk=16, donate=False))
 assert meta["n_workers"] == 2, meta
 state, _ = TR.init_state(cfg, mesh)
 with compat.set_mesh(mesh):
@@ -174,8 +178,10 @@ def one_step(mode):
         train_mode=mode, compression_ratio=1.0,
         dtype="float32", param_dtype="float32")
     batch = SP.concrete_batch(cfg, shape)
-    step, _specs, meta = TR.make_train_step(cfg, mesh, lr=0.1, chunk=16,
-                                            loss_chunk=16, donate=False)
+    from repro import api
+    step, _specs, meta = api.build_train_step(
+        cfg, mesh, api.RunConfig(lr=0.1, chunk=16, loss_chunk=16,
+                                 donate=False))
     state, _ = TR.init_state(cfg, mesh)
     with compat.set_mesh(mesh):
         new_state, metrics = step(state, batch)

@@ -82,6 +82,40 @@ class TestTelemetry:
         assert len(t.comm_samples()) == 4
         assert len(t.comm_samples(latest=2)) == 2
 
+    def test_comm_samples_newest_last(self):
+        """Regression pin: ``record_comm`` appends in sequence order and
+        ``comm_samples(latest=n)`` returns the n NEWEST samples, still
+        oldest-first/newest-last — attribution windows (and the
+        FingerprintTrigger fit) depend on this ordering."""
+        t = Telemetry(comm_window=8)
+        batches = [[profiler.CommSample("allgather", float(1 << i), 4,
+                                        1e-5 * i, label=f"b{i}")]
+                   for i in range(5)]
+        for b in batches:
+            t.record_comm(b)
+        got = t.comm_samples()
+        assert [s.label for s in got] == [f"b{i}" for i in range(5)]
+        assert got[-1] is batches[-1][0]              # newest last
+        latest = t.comm_samples(latest=2)
+        assert [s.label for s in latest] == ["b3", "b4"]
+        # a multi-sample batch keeps its internal order too
+        t.record_comm([dataclasses.replace(got[0], label="x"),
+                       dataclasses.replace(got[0], label="y")])
+        assert [s.label for s in t.comm_samples(latest=2)] == ["x", "y"]
+
+    def test_comm_ring_survives_state_arrays(self):
+        """Per-bucket sample kinds/labels round-trip with the window."""
+        t = Telemetry(window=8)
+        t.record_step(3, 0.25, fenced=4)
+        t.record_comm(_synth(FAST, p=4)[:3]
+                      + [profiler.CommSample("allgather", 1024.0, 4, 2e-5,
+                                             label="outer/l7")])
+        t2 = Telemetry(window=8)
+        t2.load_state_arrays(t.state_arrays())
+        assert t2.step_samples() == t.step_samples()
+        assert t2.comm_samples() == t.comm_samples()
+        assert t2.comm_samples()[-1].label == "outer/l7"
+
 
 # ---------------------------------------------------------------------------
 # satellite: bucketing payload bytes from value dtype
@@ -205,14 +239,20 @@ def _hier_sched_for(sds):
                                    arch="tiny", shape="unit")
 
 
+def _build_step(cfg, mesh, schedule):
+    from repro import api
+    return api.build_train_step(
+        cfg, mesh, api.RunConfig(schedule=schedule, donate=False))
+
+
 class TestHierIngestion:
-    def test_make_train_step_consumes_hier_schedule(self):
+    def test_build_train_step_consumes_hier_schedule(self):
         from repro.launch import mesh as M, train as TR
         cfg = _model_cfg("lags_hier")
         mesh = M.make_host_mesh(data=1, model=1)
         sds, _ = TR.model_shapes_and_axes(cfg)
         hs = _hier_sched_for(sds)
-        _, _, meta = TR.make_train_step(cfg, mesh, schedule=hs, donate=False)
+        _, _, meta = _build_step(cfg, mesh, hs)
         assert meta["ks"] is not None
         by = hs.outer.by_name
         for (n, leaf), k in zip(S.leaf_entries(sds),
@@ -226,7 +266,7 @@ class TestHierIngestion:
         sds, _ = TR.model_shapes_and_axes(cfg)
         hs = _hier_sched_for(sds)
         with pytest.raises(ValueError, match="lags_hier"):
-            TR.make_train_step(cfg, mesh, schedule=hs, donate=False)
+            _build_step(cfg, mesh, hs)
 
     def test_flat_schedule_provenance_enforced(self):
         """A lags_dp-planned flat schedule must not silently feed the
@@ -237,22 +277,17 @@ class TestHierIngestion:
         hs = _hier_sched_for(sds)   # tiers carry train_mode="lags_hier"
         dp_flat = dataclasses.replace(hs.outer, train_mode="lags_dp")
         with pytest.raises(ValueError, match="planned for"):
-            TR.make_train_step(_model_cfg("lags_hier"), mesh,
-                               schedule=dp_flat, donate=False)
+            _build_step(_model_cfg("lags_hier"), mesh, dp_flat)
         with pytest.raises(ValueError, match="planned for"):
-            TR.make_train_step(_model_cfg("lags_dp"), mesh,
-                               schedule=hs.outer, donate=False)
+            _build_step(_model_cfg("lags_dp"), mesh, hs.outer)
         # the inner (ICI-priced, near-dense) tier must never feed the
         # cross-pod exchange, even though its train_mode matches
         assert hs.inner.tier == "inner" and hs.outer.tier == "outer"
         with pytest.raises(ValueError, match="inner"):
-            TR.make_train_step(_model_cfg("lags_hier"), mesh,
-                               schedule=hs.inner, donate=False)
+            _build_step(_model_cfg("lags_hier"), mesh, hs.inner)
         # matching provenance passes in both modes
-        _, _, m1 = TR.make_train_step(_model_cfg("lags_hier"), mesh,
-                                      schedule=hs.outer, donate=False)
-        _, _, m2 = TR.make_train_step(_model_cfg("lags_dp"), mesh,
-                                      schedule=dp_flat, donate=False)
+        _, _, m1 = _build_step(_model_cfg("lags_hier"), mesh, hs.outer)
+        _, _, m2 = _build_step(_model_cfg("lags_dp"), mesh, dp_flat)
         assert m1["ks"] is not None and m2["ks"] is not None
 
 
@@ -260,14 +295,17 @@ class TestHierIngestion:
 # controller: hysteresis + checkpoint round-trip
 # ---------------------------------------------------------------------------
 
-def _controller(mode="lags_dp", probe=None, **rkw):
+def _controller(mode="lags_dp", probe=None, triggers=None, trace_source=None,
+                **rkw):
+    from repro.api import RunConfig as RC
     from repro.launch import mesh as M
     cfg = _model_cfg(mode)
     mesh = M.make_host_mesh(data=1, model=1)
     rcfg = RuntimeConfig(replan_every=10, fence_every=1,
                          swap_threshold=0.05, min_step_samples=1, **rkw)
     ctl = ReplanController(cfg, mesh, rcfg=rcfg, comm_probe=probe,
-                           chunk=16, loss_chunk=16)
+                           run=RC(chunk=16, loss_chunk=16),
+                           triggers=triggers, trace_source=trace_source)
     # single-device mesh: pretend the data axis had 8 workers so the
     # planner/predictor see real collective costs (the probe is synthetic
     # anyway; plan ingestion itself is worker-count independent)

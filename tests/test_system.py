@@ -11,6 +11,7 @@ from repro.checkpoint import io as ckpt
 from repro.configs import base
 from repro.core import adaptive, bucketing, comm_model as cm, lags
 from repro.data import synthetic
+from repro import api
 from repro.models import cnn as CNN
 from repro.models import transformer as T
 from repro.training import train_loop as TL
@@ -35,9 +36,9 @@ def _markov_trainer(method, steps=30, ratio=8.0, lr=0.3, seed=0,
     def loss_fn(p, b):
         return T.loss_fn(p, cfg, b, chunk=16, loss_chunk=16)
 
-    tcfg = TL.TrainConfig(method=method, compression_ratio=ratio, lr=lr,
-                          measure_delta=measure)
-    tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+    run = api.RunConfig(mode=method, ratio=ratio, lr=lr,
+                        measure_delta=measure)
+    tr = TL.SimTrainer(loss_fn, params, run, n_workers=P)
     hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16),
                   steps, log_every=1)
     return hist, data
@@ -72,9 +73,9 @@ class TestConvergenceParity:
         params = CNN.init_cnn(jax.random.PRNGKey(0), cfg)
         data = synthetic.Blobs(n_classes=cfg.n_classes, image_size=8,
                                channels=cfg.channels)
-        tcfg = TL.TrainConfig(method="lags", compression_ratio=4.0, lr=0.05)
+        run = api.RunConfig(mode="lags_dp", ratio=4.0, lr=0.05)
         tr = TL.SimTrainer(lambda p, b: CNN.cnn_loss(p, cfg, b), params,
-                           tcfg, n_workers=P)
+                           run, n_workers=P)
         hist = tr.run(lambda t: data.worker_batches(t, P, 16), 25,
                       log_every=1)
         assert hist[-1]["loss"] < hist[0]["loss"] - 0.2
@@ -105,10 +106,10 @@ class TestCheckpoint:
         cfg = _tiny_lm_cfg()
         params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
         data = synthetic.MarkovLM(vocab=cfg.vocab, seed=3)
-        tcfg = TL.TrainConfig(method="lags", compression_ratio=8.0, lr=0.3)
+        run = api.RunConfig(mode="lags_dp", ratio=8.0, lr=0.3)
         tr = TL.SimTrainer(lambda p, b: T.loss_fn(p, cfg, b, chunk=16,
                                                   loss_chunk=16),
-                           params, tcfg, n_workers=P)
+                           params, run, n_workers=P)
         tr.run(lambda t: data.worker_batches(t, P, 8, 16), 3)
         st = {"params": tr.state["params"], "ef": tr.state["ef"],
               "step": tr.state["step"]}
@@ -237,9 +238,9 @@ class TestMomentumCorrection:
 
         finals = {}
         for mc in (0.0, 0.9):
-            tcfg = TL.TrainConfig(method="lags", compression_ratio=8.0,
-                                  lr=0.1, momentum_correction=mc)
-            tr = TL.SimTrainer(loss_fn, params, tcfg, n_workers=P)
+            run = api.RunConfig(mode="lags_dp", ratio=8.0,
+                                lr=0.1, momentum_correction=mc)
+            tr = TL.SimTrainer(loss_fn, params, run, n_workers=P)
             hist = tr.run(lambda t: data.worker_batches(t, P, 8, 16), 30,
                           log_every=1)
             finals[mc] = hist[-1]["loss"]
@@ -252,11 +253,11 @@ class TestMomentumCorrection:
         from repro.models import transformer as T
         params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
         data = synthetic.MarkovLM(vocab=cfg.vocab, seed=3)
-        tcfg = TL.TrainConfig(method="lags", compression_ratio=8.0, lr=0.1,
-                              momentum_correction=0.9)
+        run = api.RunConfig(mode="lags_dp", ratio=8.0, lr=0.1,
+                            momentum_correction=0.9)
         tr = TL.SimTrainer(lambda p, b: T.loss_fn(p, cfg, b, chunk=16,
                                                   loss_chunk=16),
-                           params, tcfg, n_workers=P)
+                           params, run, n_workers=P)
         tr.run(lambda t: data.worker_batches(t, P, 8, 16), 3)
         mom_leaf = jax.tree.leaves(tr.state["mom"])[0]
         assert mom_leaf.shape[0] == P
