@@ -14,6 +14,11 @@
                         a fresh process — run it directly
                         (``python -m benchmarks.bench_autotune``) or as
                         ``python -m benchmarks.run autotune`` FIRST.
+  bench_stream          (system) sparse-delta weight streaming from a
+                        live training Session into a served subscriber:
+                        bytes vs full-checkpoint cadence, bitwise parity
+                        after flush, rollout-guard trip on a poisoned
+                        packet (repro.stream).
   bench_runtime         (system) online re-planning controller under an
                         injected mid-run bandwidth shift: hysteresis
                         (no-swap on a stable wire), time-to-replan, and
@@ -35,7 +40,7 @@ import sys
 import time
 
 BENCHES = ("speedup_bound", "adaptive", "iteration_time", "kernels",
-           "assumption", "convergence", "roofline")
+           "assumption", "convergence", "roofline", "stream")
 
 
 def main(argv=None) -> int:

@@ -137,7 +137,7 @@ class Session:
     def run(self, data_fn, n_steps: int, *, controller=None, state=None,
             log_path: str | None = None, log_every: int = 10,
             ckpt_every: int = 0, out_dir: str | None = None,
-            print_fn=print):
+            publisher=None, print_fn=print):
         """The whole distributed training loop in one call.
 
         ``data_fn(step) -> batch`` supplies global batches;  the loop
@@ -152,6 +152,12 @@ class Session:
         static step function, and its re-plan decisions — including
         which *trigger* fired — are logged trigger-aware as they
         happen).  ``state=None`` initializes via :meth:`init_state`.
+
+        ``publisher``: a ``repro.stream.StreamPublisher`` — after every
+        step it is offered the live params
+        (``publisher.maybe_publish(t, params)``) and any emitted
+        ``DeltaPacket`` is logged as a ``publish`` row field, so a
+        serving fleet can follow this run at delta-bandwidth.
 
         Returns ``(state, history)`` where ``history`` is the list of
         logged row dicts.
@@ -189,6 +195,12 @@ class Session:
                     state, metrics = step_fn(state, data_fn(t))
                     row = {"step": t, "loss": float(metrics["loss"]),
                            "elapsed_s": round(time.time() - t_start, 1)}
+                    if publisher is not None:
+                        pkt = publisher.maybe_publish(t, state["params"])
+                        if pkt is not None:
+                            row["publish"] = {"version": pkt.version,
+                                              "kind": pkt.kind,
+                                              "nbytes": pkt.nbytes}
                     if (controller is not None
                             and len(controller.history) > n_events):
                         ev = controller.last_event

@@ -110,7 +110,14 @@ def batch_spec(shape, mesh) -> P:
 def make_prefill_step(cfg, mesh, shape: base.InputShape, *,
                       chunk: int = 1024):
     """Prompt prefill: returns (jit'd fn(params, batch) -> (logits, states),
-    arg specs)."""
+    arg specs).
+
+    Resolves the same ``serve_cfg`` rewrite ``state_specs`` applies, so the
+    caches prefill builds agree with the caches decode expects — under
+    ``long_500k`` a gemma3-style global layer prefills with the sliding
+    window it will decode with, not a full-sequence cache.
+    """
+    cfg = serve_cfg(cfg, shape.name)
     params_sds, pspecs = serve_param_specs(cfg, mesh)
     bsd = SP.train_batch_specs(cfg, shape)
     data_axes = M.data_axis_names(mesh)

@@ -248,11 +248,15 @@ def decode_attention(p, x, cache, pos, *, n_kv_heads: int,
 
     if win is not None and cap <= win:
         # ring: every entry is within the window; positions are implicit and
-        # rope was applied at write time — attend to all, no extra mask.
+        # rope was applied at write time — attend to all written slots.
+        # Slots fill in order (token i -> i % cap), so until the ring wraps
+        # only the first pos+1 slots hold real keys; masking the rest makes
+        # cold-start / short-prompt decode exact instead of steady-state-only.
         k_positions = jnp.zeros((cap,), jnp.int32)  # pass-through (no causal)
         o = chunked_attention(q, k, v, q_positions=posv,
                               k_positions=k_positions, causal=False,
-                              chunk=chunk)
+                              chunk=chunk,
+                              k_valid_len=jnp.minimum(pos + 1, cap))
     else:
         k_positions = jnp.arange(cap)
         o = chunked_attention(q, k, v, q_positions=posv,

@@ -14,6 +14,9 @@ A trace event is attributed purely from its *name*, so the exchange code
                                             ``flat`` | ``inner`` |
                                             ``outer``, ``kind`` is
                                             ``allgather`` | ``allreduce``
+  * ``serve/<kind>/<label>?version=<V>``  — serving-path work
+                                            (``repro.stream``); ``kind``
+                                            is one of :data:`SERVE_KINDS`
 
 Leaf paths may themselves contain ``/`` (``layers/0/attn/wq``): the
 ``bwd`` payload is everything after the prefix, and the ``comm`` label
@@ -32,13 +35,31 @@ STEP = "lags/step"
 FWD = "lags/fwd"
 BWD_PREFIX = "lags/bwd/"
 COMM_PREFIX = "lags/comm/"
+SERVE_PREFIX = "serve/"
 
 #: Tier vocabulary: flat data-parallel wire, intra-pod ICI, cross-pod DCN.
 TIERS = ("flat", "inner", "outer")
 
+#: Serve-side work kinds (``repro.stream`` subscriber): prompt prefill,
+#: one-token decode, a delta-packet apply, a full-checkpoint resync, and
+#: a rollout-guard quality eval.
+SERVE_KINDS = ("prefill", "decode", "apply", "resync", "eval")
+
 
 def bwd_name(leaf: str) -> str:
     return BWD_PREFIX + leaf
+
+
+def serve_name(kind: str, label: str = "", *,
+               version: int | None = None) -> str:
+    """``serve/<kind>/<label>[?version=<v>]`` — the serving-path analogue
+    of the ``lags/`` training grammar.  ``version`` rides in the name for
+    the same reason ``nbytes`` does on ``comm``: a device annotation has
+    no other metadata side channel."""
+    name = f"{SERVE_PREFIX}{kind}/{label}"
+    if version is not None:
+        name += f"?version={int(version)}"
+    return name
 
 
 def comm_name(tier: str, kind: str, label: str, *, nbytes: float,
@@ -81,4 +102,21 @@ def parse(name: str) -> dict | None:
                 pass
         return {"type": "comm", "tier": tier, "kind": kind, "label": label,
                 "nbytes": nbytes, "p": p}
+    if name.startswith(SERVE_PREFIX):
+        rest = name[len(SERVE_PREFIX):]
+        parts = rest.split("/", 1)
+        if len(parts) != 2:
+            return None
+        kind, tail = parts
+        label, _, query = tail.partition("?")
+        version = None
+        for field in query.split("&"):
+            key, _, val = field.partition("=")
+            if key == "version":
+                try:
+                    version = int(val)
+                except ValueError:
+                    pass
+        return {"type": "serve", "kind": kind, "label": label,
+                "version": version}
     return None

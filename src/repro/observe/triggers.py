@@ -99,15 +99,30 @@ class FingerprintTrigger:
     The fit comes from the newest ``latest`` samples of the telemetry
     comm ring (newest-last ordering, pinned by test) — no fresh probe is
     issued just to check the fingerprint.  For hierarchical schedules
-    the drift is measured against the *outer* tier's fingerprint, using
-    outer-tier samples when the ring carries tier labels (attributed
-    traces do; raw probe batches may not).
+    EVERY tier is checked against its own fingerprint: inner-tier (ICI)
+    samples are fitted against the inner tier's recorded (α, β) and
+    outer-tier (DCN) samples against the outer's, so an ICI-only
+    degradation fires here instead of waiting on the anomaly path.
+    Unlabelled samples (raw probe batches; attributed traces carry tier
+    labels) default to the outer tier, which preserves the flat-schedule
+    behaviour.  ``last_tier`` records which tier fired (diagnostics).
     """
     name = "fingerprint"
 
     def __init__(self, drift: float = 0.5, latest: int = 32):
         self.drift = float(drift)
         self.latest = int(latest)
+        self.last_tier: str | None = None
+
+    @staticmethod
+    def _tier_samples(samples, tier: str) -> list:
+        labelled = [s for s in samples
+                    if getattr(s, "label", "").startswith(f"{tier}/")]
+        if labelled or tier != "outer":
+            return labelled
+        # unlabelled rings (probe batches) check the sparse outer wire
+        return [s for s in samples
+                if not getattr(s, "label", "").startswith(("inner/",))]
 
     def due(self, ctx: TriggerContext) -> bool:
         sched = ctx.schedule
@@ -116,16 +131,19 @@ class FingerprintTrigger:
             return False
         from repro.autotune import costfit
         samples = ctx.telemetry.comm_samples(latest=self.latest)
-        outer = [s for s in samples
-                 if getattr(s, "label", "").startswith("outer/")]
-        flat = [s for s in samples
-                if not getattr(s, "label", "").startswith(("inner/",))]
-        use = outer or flat
-        try:
-            alpha, beta = costfit.fit_alpha_beta(use)
-        except ValueError:
-            return False
-        return drift_fn(alpha, beta) > self.drift
+        tiers = getattr(sched, "tiers", None)
+        for tier in (tiers if tiers is not None else ("outer",)):
+            try:
+                alpha, beta = costfit.fit_alpha_beta(
+                    self._tier_samples(samples, tier))
+            except ValueError:
+                continue           # tier window cannot support a fit
+            drifted = (drift_fn(alpha, beta, tier=tier)
+                       if tiers is not None else drift_fn(alpha, beta))
+            if drifted > self.drift:
+                self.last_tier = tier
+                return True
+        return False
 
     def notify_replan(self, ctx, event) -> None:
         pass

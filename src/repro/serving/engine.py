@@ -94,6 +94,63 @@ def states_axes(cfg):
                      for i in range(n_periods * p, len(specs))]}
 
 
+def _fit_cache_time(x, cap: int, prompt_len: int, ring: bool):
+    """Reshape one prefill cache leaf onto the decode slot layout.
+
+    The time axis is ``-3`` — ``(B, S, KV, hd)`` per layer, with an extra
+    leading n_periods dim under the stacked ``blocks`` layout.  Decode
+    writes token ``pos`` at slot ``pos % cap`` (ring) or ``min(pos,
+    cap-1)`` (full), so a prefill cache holding tokens in order must be
+    zero-padded at the end (prompt shorter than the cache) or rotated so
+    token ``j`` lands at slot ``j % cap`` (full ring).
+    """
+    axis = x.ndim - 3
+    s = x.shape[axis]
+    if s > cap:
+        if not ring:
+            raise ValueError(f"prompt of {prompt_len} tokens cannot hand "
+                             f"off to a full cache of capacity {cap}")
+        x = jax.lax.slice_in_dim(x, s - cap, s, axis=axis)
+        s = cap
+    if s < cap:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, cap - s)
+        return jnp.pad(x, pad)
+    if ring:
+        return jnp.roll(x, prompt_len % cap, axis=axis)
+    return x
+
+
+def pad_states_for_decode(cfg, states, prompt_len: int, capacity: int):
+    """Grow ``prefill`` caches to the ``init_states`` decode layout.
+
+    ``prefill`` returns self-attention caches sized to the prompt
+    (ring-truncated to the window for sliding-window layers); ``serve_step``
+    expects capacity-sized caches with tokens at their decode slots.  This
+    bridges the two so a prompt is processed exactly once — no
+    token-by-token replay.  SSM/xLSTM O(1) states and cross-attention
+    caches pass through unchanged.
+    """
+    specs = T.build_blockspecs(cfg)
+    p = T.find_period(specs)
+    n_periods = len(specs) // p
+
+    def fix(spec: T.BlockSpec, st):
+        if spec.kind != "attn":
+            return st
+        cap = _attn_capacity(spec, capacity)
+        out = dict(st)
+        out["self"] = jax.tree.map(
+            lambda x: _fit_cache_time(x, cap, prompt_len,
+                                      ring=bool(spec.window)), st["self"])
+        return out
+
+    return {"blocks": [fix(specs[j], st)
+                       for j, st in enumerate(states["blocks"])],
+            "tail": [fix(specs[n_periods * p + i], st)
+                     for i, st in enumerate(states["tail"])]}
+
+
 # ---------------------------------------------------------------------------
 # per-block decode
 # ---------------------------------------------------------------------------
@@ -144,8 +201,13 @@ def _decode_block(bp, spec: T.BlockSpec, x, state, pos, cfg,
     elif spec.ffn == "moe":
         from repro.models import moe as M
         h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        # single-token decode must never capacity-drop: with b*s tokens in
+        # flight the GShard capacity 1.25*t*top_k/e rounds to ~1 and ties
+        # get dropped — size capacity to hold every token instead
+        e = bp["moe"]["w_up"].shape[0]
         out, _ = M.moe_forward_auto(bp["moe"], h, top_k=cfg.moe_top_k,
-                                    activation=cfg.activation)
+                                    activation=cfg.activation,
+                                    capacity_factor=float(e) / cfg.moe_top_k)
         x = x + out
     return x, new_state
 
@@ -234,8 +296,13 @@ def _prefill_block(bp, spec: T.BlockSpec, x, pos0, cfg, memory=None,
     elif spec.ffn == "moe":
         from repro.models import moe as M
         h = L.apply_norm(cfg.norm, x, bp["ln_ffn"])
+        # serving is drop-free (capacity >= every token): decode runs with
+        # b*s ~ b tokens where the trained 1.25x capacity rounds to ~1, and
+        # prefill must route identically to decode for cache handoff parity
+        e = bp["moe"]["w_up"].shape[0]
         out, _ = M.moe_forward_auto(bp["moe"], h, top_k=cfg.moe_top_k,
-                                    activation=cfg.activation)
+                                    activation=cfg.activation,
+                                    capacity_factor=float(e) / cfg.moe_top_k)
         x = x + out
     return x, state
 

@@ -1,0 +1,25 @@
+"""repro.stream — sparse-delta weight streaming from training to serving.
+
+The LAGS selection machinery (top-k + error feedback, per-leaf budgets)
+applied to ``params_now - params_published``: a training ``Session``
+publishes versioned delta packets at a tiny fraction of full-checkpoint
+bandwidth, and a serving ``ServeSession`` follows them live.
+
+    codec      — per-leaf sparse-delta encode/apply, EF residual,
+                 exact-dense fallback, packet (de)serialization
+    publisher  — cadence + byte/time budgets, Eq.-18-style per-leaf
+                 split priced by ``planner.leaf_comm_time``
+    subscriber — ``ServeSession``: versioned in-place applies over the
+                 production serve path, resync-on-gap
+    guard      — ``RolloutGuard``: held-out NLL change-point detection,
+                 halts the stream and pins the last-good version
+"""
+from repro.stream.codec import (DeltaCodec, DeltaPacket, load_packet,
+                                packet_path, save_packet, tree_fingerprint)
+from repro.stream.guard import RolloutGuard, quality_probe
+from repro.stream.publisher import StreamPublisher
+from repro.stream.subscriber import ServeSession
+
+__all__ = ["DeltaCodec", "DeltaPacket", "load_packet", "packet_path",
+           "save_packet", "tree_fingerprint", "RolloutGuard",
+           "quality_probe", "StreamPublisher", "ServeSession"]

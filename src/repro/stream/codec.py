@@ -1,0 +1,235 @@
+"""Sparse-delta weight codec: the LAGS selection trick on the param stream.
+
+Training moves weights a little every step; a serving fleet following the
+run does not need full checkpoints — it needs ``params_now -
+params_published``, which is exactly the kind of vector top-k +
+error-feedback was built for.  Per leaf:
+
+    acc       = residual + (now - published)        # nothing is dropped
+    selected  = TopK(acc, k)                        # registry compressor
+    residual' = acc - selected                      # carried to next packet
+
+The EF residual makes the stream *error-bounded*: weight-change that
+misses one packet's budget rides in the next (the contraction argument of
+"The Convergence of Sparsified Gradient Methods" applied to the parameter
+stream).  When a leaf's delta is too dense for sparse coding to win —
+``k * payload_bytes_per_elem >= d * itemsize`` — the codec falls back to
+shipping the leaf's raw bytes (``kind="full"``), which costs the same as
+the dense delta but is *exact*: the residual drains to zero and the
+subscriber lands bitwise on the publisher's leaf.
+
+Bitwise parity contract: the publisher applies every packet it emits to
+its own ``published`` copy through the SAME :meth:`DeltaCodec.apply` the
+subscriber uses, so both sides run the identical compiled update and stay
+bitwise in lockstep; a flush (all-leaves-full packet) then equals the live
+params exactly.
+
+Compressors are resolved by name through the ``@api.register_compressor``
+registry (``core.compressors.REGISTRY``), so anything usable in the
+gradient exchange is usable here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketing
+from repro.core import compressors as C
+
+#: int32 index bytes on the wire (matches the exchange payload layout).
+INDEX_BYTES = 4
+
+
+def leaf_items(tree) -> list[tuple[str, Any]]:
+    """``[(key, leaf)]`` with ``/``-joined keypaths — the same key
+    convention ``checkpoint.io`` persists, so packet payload keys line up
+    with checkpoint keys."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path), leaf) for path, leaf in flat]
+
+
+def _shape_of(v) -> tuple:
+    return tuple(getattr(v, "shape", np.shape(v)))
+
+
+def _dtype_of(v) -> np.dtype:
+    return np.dtype(getattr(v, "dtype", None) or np.asarray(v).dtype)
+
+
+def tree_fingerprint(tree) -> str:
+    """Structure hash (leaf keys + shapes + dtypes): a packet applies only
+    to the param tree it was cut against."""
+    desc = [(k, _shape_of(v), _dtype_of(v).name) for k, v in leaf_items(tree)]
+    return hashlib.sha1(json.dumps(desc).encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class DeltaPacket:
+    """One versioned weight update.
+
+    ``payload`` maps leaf key -> {"values": arr[, "idx": arr]}; entries
+    with "idx" are sparse deltas (f32 values + int32 indices into the
+    flat leaf), entries without are the leaf's full raw bytes.  ``kind``
+    is "full" when EVERY leaf is full (baseline / flush / resync packet),
+    else "delta".
+    """
+    version: int
+    step: int
+    fingerprint: str
+    kind: str
+    payload: dict[str, dict[str, np.ndarray]]
+    nbytes: int
+
+
+def _apply_tree(params, payload):
+    """The one update rule both ends run (jitted below)."""
+    flat = leaf_items(params)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for (key, leaf), _ in zip(flat, leaves):
+        entry = payload.get(key)
+        if entry is None:
+            out.append(leaf)
+        elif "idx" in entry:
+            d = leaf.size
+            dense = C.decompress(entry["values"], entry["idx"], d)
+            new = (leaf.astype(jnp.float32).reshape(-1) + dense)
+            out.append(new.astype(leaf.dtype).reshape(leaf.shape))
+        else:
+            out.append(entry["values"].reshape(leaf.shape).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _apply_jit_donate(params, payload):
+    return _apply_tree(params, payload)
+
+
+@jax.jit
+def _apply_jit(params, payload):
+    return _apply_tree(params, payload)
+
+
+class DeltaCodec:
+    """Per-leaf sparse-delta encode/apply over one param structure."""
+
+    def __init__(self, params_like, *, compressor: str = "topk_exact",
+                 value_dtype: str = "float32"):
+        from repro.api import registry
+        self.compressor = registry.get_compressor(compressor)
+        if self.compressor.needs_key:
+            raise ValueError(f"stream codec needs a deterministic "
+                             f"compressor; {compressor!r} takes a key")
+        self.value_dtype = np.dtype(value_dtype)
+        self.bpe = bucketing.payload_bytes_per_elem(value_dtype,
+                                                    index_bytes=INDEX_BYTES)
+        items = leaf_items(params_like)
+        self.keys = [k for k, _ in items]
+        self.sizes = {k: int(np.prod(_shape_of(v), dtype=np.int64))
+                      for k, v in items}
+        self.itemsizes = {k: _dtype_of(v).itemsize for k, v in items}
+        self.fingerprint = tree_fingerprint(params_like)
+
+    @property
+    def full_bytes(self) -> int:
+        """One full checkpoint's payload bytes (raw leaf bytes)."""
+        return sum(self.sizes[k] * self.itemsizes[k] for k in self.keys)
+
+    def zero_residual(self) -> dict[str, np.ndarray]:
+        return {k: np.zeros(self.sizes[k], np.float32) for k in self.keys}
+
+    def dense_bytes(self, key: str) -> int:
+        return self.sizes[key] * self.itemsizes[key]
+
+    def sparse_wins(self, key: str, k: int) -> bool:
+        return k < self.sizes[key] and k * self.bpe < self.dense_bytes(key)
+
+    # -- encode -------------------------------------------------------------
+    def encode(self, published, now, residual: dict, ks: dict):
+        """One delta packet payload.  Returns ``(payload, residual',
+        nbytes, kinds)``; ``residual`` is NOT mutated."""
+        pub = dict(leaf_items(published))
+        payload, new_res, kinds = {}, {}, {}
+        nbytes = 0
+        for key, now_leaf in leaf_items(now):
+            d = self.sizes[key]
+            k = int(ks.get(key, d))
+            if not self.sparse_wins(key, k):
+                payload[key] = {"values": np.asarray(now_leaf).reshape(-1)}
+                new_res[key] = np.zeros(d, np.float32)
+                kinds[key] = "full"
+                nbytes += self.dense_bytes(key)
+                continue
+            delta = (jnp.asarray(now_leaf, jnp.float32).reshape(-1)
+                     - jnp.asarray(pub[key], jnp.float32).reshape(-1))
+            acc = jnp.asarray(residual[key]) + delta
+            vals, idx = self.compressor(acc, k)
+            payload[key] = {"values": np.asarray(vals, self.value_dtype),
+                            "idx": np.asarray(idx, np.int32)}
+            new_res[key] = np.asarray(acc - C.decompress(vals, idx, d),
+                                      np.float32)
+            kinds[key] = "sparse"
+            nbytes += int(vals.shape[0]) * self.bpe  # block modes may ceil
+        return payload, new_res, nbytes, kinds
+
+    def encode_full(self, now):
+        """All-leaves-full payload (baseline / flush): residual drains to
+        zero and apply() lands bitwise on ``now``."""
+        payload = {k: {"values": np.asarray(v).reshape(-1)}
+                   for k, v in leaf_items(now)}
+        return payload, self.zero_residual(), self.full_bytes
+
+    # -- apply --------------------------------------------------------------
+    def apply(self, params, packet: DeltaPacket, *, donate: bool = True):
+        """New params with ``packet`` applied.  ``donate=True`` donates the
+        incoming buffer (in-place on accelerators); pass False when the
+        caller must keep the old params (guarded applies)."""
+        fn = _apply_jit_donate if donate else _apply_jit
+        return fn(params, packet.payload)
+
+    def materialize(self, packet: DeltaPacket, like):
+        """Params tree from a full packet alone (subscriber bootstrap)."""
+        if packet.kind != "full":
+            raise ValueError("materialize needs a full packet")
+        return _apply_jit(like, packet.payload)
+
+
+# ---------------------------------------------------------------------------
+# persistence (checkpoint.io JSON + array artifacts)
+# ---------------------------------------------------------------------------
+
+def packet_path(out_dir: str, version: int) -> str:
+    return os.path.join(out_dir, f"delta_{version:06d}")
+
+
+def save_packet(out_dir: str, packet: DeltaPacket) -> str:
+    """``delta_<version>.npz`` + ``.json`` sidecar via ``checkpoint.io``."""
+    from repro.checkpoint import io
+    path = packet_path(out_dir, packet.version)
+    io.save(path, packet.payload,
+            metadata={"version": packet.version, "step": packet.step,
+                      "fingerprint": packet.fingerprint,
+                      "kind": packet.kind, "nbytes": packet.nbytes})
+    return path
+
+
+def load_packet(path: str) -> DeltaPacket:
+    from repro.checkpoint import io
+    arrays = io.load_arrays(path)
+    meta = io.load_metadata(path)["metadata"]
+    payload: dict[str, dict[str, np.ndarray]] = {}
+    for key, arr in arrays.items():
+        leaf, field = key.rsplit("/", 1)
+        payload.setdefault(leaf, {})[field] = arr
+    return DeltaPacket(version=int(meta["version"]), step=int(meta["step"]),
+                       fingerprint=meta["fingerprint"], kind=meta["kind"],
+                       payload=payload, nbytes=int(meta["nbytes"]))

@@ -1,0 +1,105 @@
+"""Rollout guard: quality change-point detection over the weight stream.
+
+The same median/MAD change-point machinery that flags wire regressions in
+training (``observe.anomaly.StepTimeAnomalyDetector``) flags *quality*
+regressions in serving: each candidate update is scored with a held-out
+prompt negative-log-likelihood ring, and the detector watches the
+(version, NLL) series exactly as it watches (step, seconds).  A fresh
+training run drifts the NLL slowly downward — quiet; a poisoned packet
+(diverged run, corrupted artifact, wrong stream) jumps it — the guard
+fires once, the subscriber keeps the last-good params live, and the
+stream stays halted until an operator :meth:`resume`\\ s it.
+
+Defaults differ from the step-time tuning: ``recent=1`` (a single bad
+*version* should veto — there is no noise-averaging argument for weights,
+the eval batch is fixed and the NLL deterministic) and ``warmup=0`` (no
+compile spike to mask; version 1 is a real sample).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+from repro.observe.anomaly import (Anomaly, AnomalyConfig,
+                                   StepTimeAnomalyDetector)
+
+
+@dataclasses.dataclass(frozen=True)
+class QualitySample:
+    """Duck-typed for the detector: ``step`` is the packet version and
+    ``t_step`` the held-out NLL."""
+    step: int
+    t_step: float
+
+
+def default_guard_config() -> AnomalyConfig:
+    return AnomalyConfig(warmup=0, recent=1, min_history=3, z=4.0,
+                         min_rel=0.1, mad_floor_rel=0.02, window=64)
+
+
+def quality_probe(cfg, batch, *, chunk: int = 64, loss_chunk: int = 64):
+    """``eval_fn(params) -> float`` — mean next-token NLL ("ce") of a
+    fixed held-out batch ({"tokens", "labels"}), jitted once."""
+    import jax
+
+    from repro.models import transformer as T
+
+    @jax.jit
+    def nll(params):
+        _, parts = T.loss_fn(params, cfg, batch, chunk=chunk, remat=False,
+                             loss_chunk=loss_chunk)
+        return parts["ce"]
+
+    return lambda params: float(nll(params))
+
+
+class RolloutGuard:
+    """Scores candidate param updates; halts the stream on a regression.
+
+    ``eval_fn(params) -> float`` — lower is better (an NLL); build one
+    with :func:`quality_probe`.  ``observe`` returns the triggering
+    :class:`Anomaly` (and latches ``halted``) or None; the subscriber
+    then pins its last-good version via :meth:`pin`.
+    """
+
+    def __init__(self, eval_fn, cfg: AnomalyConfig | None = None,
+                 history: int = 64):
+        self.eval_fn = eval_fn
+        self.detector = StepTimeAnomalyDetector(cfg or
+                                                default_guard_config())
+        self.samples: collections.deque[QualitySample] = \
+            collections.deque(maxlen=int(history))
+        self.halted = False
+        self.pinned_version: int | None = None
+        self.anomaly: Anomaly | None = None
+
+    def observe(self, version: int, params) -> Anomaly | None:
+        """Score one candidate (version, params); fire on a quality jump."""
+        nll = float(self.eval_fn(params))
+        self.samples.append(QualitySample(step=int(version), t_step=nll))
+        anomaly = self.detector.observe(self.samples)
+        if anomaly is not None:
+            self.anomaly = anomaly
+            self.halted = True
+        return anomaly
+
+    def pin(self, version: int) -> None:
+        """Record the last-good version (the subscriber's live params)."""
+        self.pinned_version = int(version)
+        self.halted = True
+
+    def allow(self, version: int | None = None) -> bool:
+        return not self.halted
+
+    @property
+    def last_nll(self) -> float | None:
+        return self.samples[-1].t_step if self.samples else None
+
+    def resume(self) -> None:
+        """Operator override after a halt (e.g. post-resync): unlatch and
+        re-base the detector on the next samples."""
+        self.halted = False
+        self.anomaly = None
+        self.pinned_version = None
+        self.samples.clear()
+        self.detector.reset()

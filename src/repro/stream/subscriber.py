@@ -1,0 +1,163 @@
+"""Serving-side subscriber: a live model that follows a delta stream.
+
+``ServeSession`` wraps the production serving launch path
+(``launch/serve.make_serve_step`` / ``make_prefill_step``) around a params
+buffer that delta packets update in place between decode steps:
+
+  * **ordering** — packet versions must be monotone +1; a gap (dropped
+    packet) poisons the EF alignment, so the session refuses the packet,
+    raises ``needs_resync`` and waits for :meth:`resync` from a full
+    checkpoint (``StreamPublisher.save_full``).
+  * **identity** — the packet's base fingerprint must match this param
+    structure; a stream cut against a different model never applies.
+  * **safety** — an optional :class:`~repro.stream.guard.RolloutGuard`
+    scores every candidate update on a held-out prompt ring *before* it
+    is committed; a quality anomaly leaves the last-good params live and
+    halts further applies (pinned version).
+
+Applies, prefills, decodes, resyncs and guard evals are annotated with
+the ``serve/`` vocabulary of ``repro.observe.names`` so serve-side traces
+attribute the same way train-side ones do.
+
+Staleness note: between packets the subscriber serves weights up to one
+publish interval old — the asynchronous-sparsification setting whose
+convergence tolerance is argued in PAPERS.md (gradient staleness and
+parameter staleness bound each other through the EF residual).
+"""
+from __future__ import annotations
+
+import dataclasses
+import jax.numpy as jnp
+
+from repro.observe import names
+from repro.observe import trace
+from repro.stream import codec as CD
+
+
+class ServeSession:
+    """A served model following a :class:`StreamPublisher`'s packets."""
+
+    def __init__(self, cfg, shape, params, *, mesh=None, chunk: int = 64,
+                 guard=None):
+        from repro.launch import mesh as M
+        from repro.launch import serve as SV
+        self.mesh = mesh if mesh is not None else M.make_host_mesh(
+            data=1, model=1)
+        self.raw_cfg = cfg
+        self.cfg = SV.serve_cfg(cfg, shape.name)
+        self.shape = shape
+        self.chunk = int(chunk)
+        self.params = params
+        self.codec = CD.DeltaCodec(params)
+        self.fingerprint = self.codec.fingerprint
+        self.version = 0
+        self.guard = guard
+        self.needs_resync = False
+        self.log: list[dict] = []      # one row per packet offered
+        self._steps: dict = {}         # (kind, key) -> jitted fn cache
+
+    # -- stream ingestion ---------------------------------------------------
+    def apply_packet(self, packet: CD.DeltaPacket) -> str:
+        """Offer one packet; returns the outcome:
+
+        ``applied`` | ``stale`` (full packet at/behind our version) |
+        ``fingerprint`` / ``gap`` (refused, ``needs_resync`` set) |
+        ``halted`` (guard veto — params unchanged, last-good pinned).
+        """
+        status = self._apply_packet(packet)
+        self.log.append({"version": packet.version, "kind": packet.kind,
+                         "nbytes": packet.nbytes, "status": status})
+        return status
+
+    def _apply_packet(self, packet: CD.DeltaPacket) -> str:
+        with trace.annotation(names.serve_name(
+                "apply", packet.kind, version=packet.version)):
+            if packet.fingerprint != self.fingerprint:
+                self.needs_resync = True
+                return "fingerprint"
+            if self.guard is not None and self.guard.halted:
+                return "halted"
+            if packet.kind == "full":
+                if packet.version <= self.version:
+                    return "stale"
+            elif packet.version != self.version + 1:
+                self.needs_resync = True
+                return "gap"
+            candidate = self.codec.apply(self.params, packet,
+                                         donate=self.guard is None)
+        if self.guard is not None:
+            with trace.annotation(names.serve_name(
+                    "eval", "quality", version=packet.version)):
+                anomaly = self.guard.observe(packet.version, candidate)
+            if anomaly is not None:
+                self.guard.pin(self.version)   # last-good stays live
+                return "halted"
+        self.params = candidate
+        self.version = packet.version
+        self.needs_resync = False
+        return "applied"
+
+    def apply_packet_file(self, path: str) -> str:
+        return self.apply_packet(CD.load_packet(path))
+
+    def resync(self, path: str) -> int:
+        """Reload from a full checkpoint (``StreamPublisher.save_full``);
+        returns the restored version.  Clears ``needs_resync`` but not a
+        guard halt — resuming a halted stream is an operator decision
+        (``guard.resume()``)."""
+        from repro.checkpoint import io
+        with trace.annotation(names.serve_name("resync", "full")):
+            meta = io.load_metadata(path)["metadata"]
+            if meta.get("fingerprint") not in (None, self.fingerprint):
+                raise ValueError("resync checkpoint fingerprint mismatch: "
+                                 f"{meta.get('fingerprint')} != "
+                                 f"{self.fingerprint}")
+            self.params = io.restore(path, {"params": self.params})["params"]
+            self.version = int(meta["version"])
+            self.needs_resync = False
+        return self.version
+
+    # -- serving ------------------------------------------------------------
+    def _prefill_fn(self, prompt_len: int, batch: int):
+        key = ("prefill", prompt_len, batch)
+        if key not in self._steps:
+            from repro.launch import serve as SV
+            shape = dataclasses.replace(self.shape, seq_len=prompt_len,
+                                        global_batch=batch, kind="prefill")
+            self._steps[key], _ = SV.make_prefill_step(
+                self.raw_cfg, self.mesh, shape, chunk=self.chunk)
+        return self._steps[key]
+
+    def _serve_fn(self, capacity: int, batch: int):
+        key = ("decode", capacity, batch)
+        if key not in self._steps:
+            from repro.launch import serve as SV
+            shape = dataclasses.replace(self.shape, seq_len=capacity,
+                                        global_batch=batch, kind="decode")
+            self._steps[key], _ = SV.make_serve_step(
+                self.raw_cfg, self.mesh, shape, chunk=self.chunk)
+        return self._steps[key]
+
+    def generate(self, prompts, n_tokens: int):
+        """Prefill ``prompts`` (B, L) once, hand the caches to decode, and
+        greedily generate ``n_tokens``.  Returns (B, n_tokens) int32."""
+        from repro.serving import engine
+        b, prompt_len = prompts.shape
+        capacity = prompt_len + n_tokens
+        with trace.annotation(names.serve_name(
+                "prefill", f"b{b}xl{prompt_len}", version=self.version)):
+            logits, states = self._prefill_fn(prompt_len, b)(
+                self.params, {"tokens": jnp.asarray(prompts, jnp.int32)})
+            states = engine.pad_states_for_decode(self.cfg, states,
+                                                  prompt_len, capacity)
+        step = self._serve_fn(capacity, b)
+        out = []
+        with trace.annotation(names.serve_name(
+                "decode", f"b{b}xn{n_tokens}", version=self.version)):
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            for i in range(n_tokens):
+                out.append(tok)
+                logits, states = step(self.params, tok, states,
+                                      jnp.int32(prompt_len + i))
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(out, axis=1)

@@ -65,6 +65,16 @@ class TestNames:
         got = names.parse("lags/comm/flat/allgather/l0?nbytes=oops&p=bad")
         assert got["nbytes"] == 0.0 and got["p"] == 1
 
+    def test_serve_names_roundtrip(self):
+        n = names.serve_name("apply", "delta", version=7)
+        assert names.parse(n) == {"type": "serve", "kind": "apply",
+                                  "label": "delta", "version": 7}
+        assert names.parse(names.serve_name("prefill", "b2xl8")) == \
+            {"type": "serve", "kind": "prefill", "label": "b2xl8",
+             "version": None}
+        assert names.parse("serve/oops") is None
+        assert names.parse("serve/apply/x?version=bad")["version"] is None
+
 
 # ---------------------------------------------------------------------------
 # fake backend + trace container
@@ -305,6 +315,52 @@ class TestTriggers:
         tel2.record_comm(OA.comm_samples(
             _fake(wires={"flat": FAST}).capture(0)))
         assert not trig.due(_ctx(1, tel2, schedule=sched))
+
+    def test_fingerprint_hier_quiet_when_both_tiers_match(self):
+        from repro.runtime import hier
+        DCN = cm.TPU_DCN
+        hs = hier.plan_hier_schedule(_leaves(), p_inner=4, p_outer=2,
+                                     hw_inner=FAST, hw_outer=DCN,
+                                     train_mode="lags_hier")
+        tel = Telemetry()
+        tel.record_comm(OA.comm_samples(
+            _fake(wires={"inner": FAST, "outer": DCN},
+                  tier_workers={"inner": 4, "outer": 2}).capture(0)))
+        trig = TG.FingerprintTrigger(drift=0.5)
+        assert not trig.due(_ctx(1, tel, schedule=hs))
+        assert trig.last_tier is None
+
+    def test_fingerprint_hier_ici_only_drift_fires(self):
+        """An intra-pod (ICI) degradation must fire even while the DCN
+        tier still matches its fingerprint — each tier is checked
+        against its OWN recorded (alpha, beta)."""
+        from repro.runtime import hier
+        DCN = cm.TPU_DCN
+        hs = hier.plan_hier_schedule(_leaves(), p_inner=4, p_outer=2,
+                                     hw_inner=FAST, hw_outer=DCN,
+                                     train_mode="lags_hier")
+        tel = Telemetry()
+        tel.record_comm(OA.comm_samples(
+            _fake(wires={"inner": SLOW, "outer": DCN},
+                  tier_workers={"inner": 4, "outer": 2}).capture(0)))
+        trig = TG.FingerprintTrigger(drift=0.5)
+        assert trig.due(_ctx(1, tel, schedule=hs))
+        assert trig.last_tier == "inner"
+
+    def test_fingerprint_hier_unlabelled_samples_check_outer(self):
+        """Raw probe batches carry no tier prefix: they fall back to the
+        outer (sparse-exchange) fingerprint, preserving the flat-schedule
+        behaviour."""
+        from repro.runtime import hier
+        hs = hier.plan_hier_schedule(_leaves(), p_inner=4, p_outer=2,
+                                     hw_inner=FAST, hw_outer=FAST,
+                                     train_mode="lags_hier")
+        tel = Telemetry()
+        tel.record_comm(OA.comm_samples(        # labels: "flat/..."
+            _fake(wires={"flat": SLOW}).capture(0)))
+        trig = TG.FingerprintTrigger(drift=0.5)
+        assert trig.due(_ctx(1, tel, schedule=hs))
+        assert trig.last_tier == "outer"
 
     def test_fingerprint_silent_without_schedule_or_samples(self):
         trig = TG.FingerprintTrigger()

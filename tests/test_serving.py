@@ -1,0 +1,182 @@
+"""Serving-path contracts: prefill->decode cache handoff parity across
+every cache regime (full KV, sliding-window ring, mamba O(1), m/sLSTM,
+local/global hybrids, MoE), the ``serve_cfg`` resolution in
+``make_prefill_step`` (long_500k windowed rewrite), and handoff-vs-replay
+equivalence for the batched-serving example path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models import transformer as T
+from repro.serving import engine
+
+
+def _params(cfg, seed=0):
+    params, _ = T.init_model(jax.random.PRNGKey(seed), cfg)
+    return params
+
+
+def _handoff_worst_err(cfg, prompt_len, gen=3, capacity=None, seed=3):
+    """Prefill the prompt once, bridge with ``pad_states_for_decode``,
+    decode ``gen`` known tokens; compare each step's logits against a
+    fresh prefill of the extended prompt (the ground truth: both are the
+    same causal model on the same token sequence)."""
+    params = _params(cfg)
+    cap = capacity if capacity is not None else prompt_len + gen
+    toks = jax.random.randint(jax.random.PRNGKey(seed),
+                              (2, prompt_len + gen), 0, cfg.vocab)
+    _, st = jax.jit(lambda p: engine.prefill(
+        p, cfg, toks[:, :prompt_len], chunk=8))(params)
+    st = jax.jit(lambda s: engine.pad_states_for_decode(
+        cfg, s, prompt_len, cap))(st)
+    step = jax.jit(lambda p, t, s, pos: engine.serve_step(
+        p, cfg, t, s, pos, chunk=8))
+    ref_fn = jax.jit(lambda p, t: engine.prefill(p, cfg, t, chunk=8)[0])
+    worst = 0.0
+    for i in range(gen):
+        tok = toks[:, prompt_len + i][:, None].astype(jnp.int32)
+        got, st = step(params, tok, st, jnp.int32(prompt_len + i))
+        ref = ref_fn(params, toks[:, :prompt_len + i + 1])
+        worst = max(worst, float(jnp.max(jnp.abs(
+            got.astype(jnp.float32) - ref.astype(jnp.float32)))))
+    return worst
+
+
+def _tiny(**kw):
+    return dataclasses.replace(base.get_smoke_config("tinyllama_1_1b"), **kw)
+
+
+class TestHandoffParity:
+    def test_full_kv(self):
+        assert _handoff_worst_err(_tiny(), prompt_len=8) < 1e-4
+
+    def test_ring_prompt_longer_than_window(self):
+        # prompt 8 > window 6: prefill ring-truncates, handoff must
+        # rotate tokens onto their pos % cap decode slots
+        assert _handoff_worst_err(_tiny(sliding_window=6),
+                                  prompt_len=8) < 1e-4
+
+    def test_ring_prompt_shorter_than_window(self):
+        # prompt 8 < window 10: zero-padded slots must be masked out of
+        # decode attention (k_valid_len), not attended as real keys
+        assert _handoff_worst_err(_tiny(sliding_window=10),
+                                  prompt_len=8) < 1e-4
+
+    def test_ring_prompt_equals_window(self):
+        assert _handoff_worst_err(_tiny(sliding_window=8),
+                                  prompt_len=8) < 1e-4
+
+    def test_local_global(self):
+        # gemma3-style: window-16 local layers + full-attention global
+        # layers in one stack; prompt 20 > window exercises both the
+        # ring rotation and the full-cache pad in the same handoff
+        cfg = base.get_smoke_config("gemma3_27b")
+        assert cfg.sliding_window and cfg.local_global_period
+        assert _handoff_worst_err(cfg, prompt_len=20) < 1e-4
+
+    def test_xlstm_o1_state(self):
+        # m/sLSTM states are O(1) — pass through the handoff untouched
+        cfg = base.get_smoke_config("xlstm_1_3b")
+        assert _handoff_worst_err(cfg, prompt_len=8) < 1e-4
+
+    def test_mamba_moe_hybrid(self):
+        # jamba: mamba scan states + router'd MoE + one attn layer; the
+        # serving path routes drop-free so prefill and decode see the
+        # same experts (GShard capacity would drop differently at s=1)
+        cfg = base.get_smoke_config("jamba_v0_1_52b")
+        assert _handoff_worst_err(cfg, prompt_len=8, gen=3) < 1e-3
+
+    def test_prompt_overflowing_full_cache_raises(self):
+        cfg = _tiny()
+        params = _params(cfg)
+        toks = jnp.zeros((2, 8), jnp.int32)
+        _, st = jax.jit(lambda p: engine.prefill(p, cfg, toks, chunk=8))(
+            params)
+        with pytest.raises(ValueError, match="cannot hand off"):
+            engine.pad_states_for_decode(cfg, st, 8, 4)
+
+
+class TestHandoffVsReplay:
+    def test_handoff_matches_token_by_token_replay(self):
+        """The serve_batched example used to replay the prompt through
+        ``serve_step`` and throw the prefill states away; the handoff
+        path must generate the identical logits stream."""
+        cfg = _tiny()
+        params = _params(cfg)
+        b, prompt_len, gen = 2, 8, 3
+        cap = prompt_len + gen
+        toks = jax.random.randint(jax.random.PRNGKey(5), (b, prompt_len),
+                                  0, cfg.vocab)
+        step = jax.jit(lambda p, t, s, pos: engine.serve_step(
+            p, cfg, t, s, pos, chunk=8))
+
+        # replay: feed the prompt one token at a time from cold caches
+        st = engine.init_states(cfg, b, cap, jnp.dtype(cfg.dtype))
+        for i in range(prompt_len):
+            logits_r, st = step(params, toks[:, i][:, None].astype(jnp.int32),
+                                st, jnp.int32(i))
+        replay = [logits_r]
+        tok = jnp.argmax(logits_r, -1)[:, None].astype(jnp.int32)
+        for i in range(gen - 1):
+            logits_r, st = step(params, tok, st, jnp.int32(prompt_len + i))
+            replay.append(logits_r)
+            tok = jnp.argmax(logits_r, -1)[:, None].astype(jnp.int32)
+
+        # handoff: prefill once, bridge, decode
+        logits_h, st2 = jax.jit(lambda p: engine.prefill(
+            p, cfg, toks, chunk=8))(params)
+        st2 = engine.pad_states_for_decode(cfg, st2, prompt_len, cap)
+        handoff = [logits_h]
+        tok = jnp.argmax(logits_h, -1)[:, None].astype(jnp.int32)
+        for i in range(gen - 1):
+            logits_h, st2 = step(params, tok, st2, jnp.int32(prompt_len + i))
+            handoff.append(logits_h)
+            tok = jnp.argmax(logits_h, -1)[:, None].astype(jnp.int32)
+
+        for i, (r, h) in enumerate(zip(replay, handoff)):
+            np.testing.assert_allclose(np.asarray(h, np.float32),
+                                       np.asarray(r, np.float32),
+                                       atol=1e-4, rtol=1e-4,
+                                       err_msg=f"decode step {i}")
+
+
+class TestServeCfgResolution:
+    def test_make_prefill_step_applies_long_context_rewrite(self):
+        """Regression: ``make_prefill_step`` must resolve the same
+        ``serve_cfg`` rewrite ``state_specs`` does — under ``long_500k``
+        a gemma3 global layer prefills with the sliding window it will
+        decode with, not a full-sequence cache."""
+        from repro.launch import mesh as M
+        from repro.launch import serve as SV
+        cfg = base.get_smoke_config("gemma3_27b")
+        win, s = cfg.sliding_window, 32
+        assert win and win < s and cfg.local_global_period
+        mesh = M.make_host_mesh(data=1, model=1)
+        shape = base.InputShape("long_500k", s, 2, "prefill")
+        fn, (psh, bsh) = SV.make_prefill_step(cfg, mesh, shape, chunk=8)
+        _, states = jax.eval_shape(fn, psh, bsh)
+        dims = [leaf.shape[leaf.ndim - 3]
+                for st in states["blocks"] + states["tail"]
+                if isinstance(st, dict) and "self" in st
+                for leaf in jax.tree.leaves(st["self"])]
+        # pre-fix the global layer prefilled a full s-length cache here
+        assert dims and set(dims) == {win}
+        # and decode's caches agree (state_specs applies the same rewrite)
+        sds, cfg2 = SV.state_specs(
+            cfg, mesh, base.InputShape("long_500k", s, 2, "decode"))
+        assert cfg2.local_global_period is None
+        ddims = [leaf.shape[leaf.ndim - 3]
+                 for st in sds["states"]["blocks"] + sds["states"]["tail"]
+                 if isinstance(st, dict) and "self" in st
+                 for leaf in jax.tree.leaves(st["self"])]
+        assert ddims and set(ddims) == {win}
+
+    def test_short_shapes_unchanged(self):
+        from repro.launch import serve as SV
+        cfg = base.get_smoke_config("gemma3_27b")
+        assert SV.serve_cfg(cfg, "decode_32k") is cfg
+        assert SV.serve_cfg(cfg, "long_500k").local_global_period is None

@@ -1,0 +1,392 @@
+"""repro.stream: sparse-delta codec EF/bitwise contracts, publisher
+budget split + pricing, subscriber ordering/resync, rollout guard, and
+the Session.run publish hook — including this subsystem's acceptance
+criteria: (a) streamed bytes <= 25% of full-checkpoint bytes at matched
+cadence, (b) a subscriber applying every packet lands bitwise on the
+publisher's params after a flush, (c) an injected quality regression
+trips the guard, halts applies, and pins the last-good version."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm_model as cm
+from repro.core import compressors as C
+from repro.stream import (DeltaCodec, DeltaPacket, RolloutGuard,
+                          ServeSession, StreamPublisher, load_packet,
+                          quality_probe, save_packet, tree_fingerprint)
+from repro.stream import codec as CD
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"w": jax.random.normal(k[0], (16, 16), jnp.float32),
+            "b": jax.random.normal(k[1], (24,), jnp.float32),
+            "emb": {"table": jax.random.normal(k[2], (32, 8), jnp.float32)}}
+
+
+def _drift(tree, seed, scale=1e-2):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [x + scale * jax.random.normal(k, x.shape, x.dtype)
+                  for x, k in zip(leaves, keys)])
+
+
+def _bitwise(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _zeros_like(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+class TestCodec:
+    def test_ef_invariant_selected_plus_residual_is_acc(self):
+        """Nothing is dropped: selected + residual' == residual + delta,
+        elementwise EXACT (topk_exact zeroes selected slots exactly)."""
+        codec = DeltaCodec(_tree())
+        pub, now = _tree(), _drift(_tree(), 1)
+        res = {k: np.full(codec.sizes[k], 1e-3, np.float32)
+               for k in codec.keys}
+        ks = {k: 5 for k in codec.keys}
+        payload, res2, _, kinds = codec.encode(pub, now, res, ks)
+        for key, now_leaf in CD.leaf_items(now):
+            assert kinds[key] == "sparse"
+            d = codec.sizes[key]
+            # same association the codec uses: res + (now - pub)
+            acc = res[key] + (
+                np.asarray(now_leaf, np.float32).reshape(-1)
+                - np.asarray(dict(CD.leaf_items(pub))[key],
+                             np.float32).reshape(-1))
+            dense = np.asarray(C.decompress(payload[key]["values"],
+                                            payload[key]["idx"], d))
+            assert np.array_equal(dense + res2[key], acc)
+            # and the residual is exactly drained where we shipped
+            assert np.all(res2[key][payload[key]["idx"]] == 0.0)
+
+    def test_dense_fallback_is_exact(self):
+        """A too-dense delta ships the leaf's raw bytes: the residual
+        drains to zero and apply() lands bitwise on the live leaf."""
+        codec = DeltaCodec(_tree())
+        pub, now = _tree(), _drift(_tree(), 2)
+        res = codec.zero_residual()
+        ks = {k: codec.sizes[k] for k in codec.keys}      # never wins
+        payload, res2, nbytes, kinds = codec.encode(pub, now, res, ks)
+        assert all(v == "full" for v in kinds.values())
+        assert nbytes == codec.full_bytes
+        assert all(np.all(r == 0.0) for r in res2.values())
+        pkt = DeltaPacket(version=1, step=0, fingerprint=codec.fingerprint,
+                          kind="delta", payload=payload, nbytes=nbytes)
+        assert _bitwise(codec.apply(pub, pkt, donate=False), now)
+
+    def test_sparse_wins_boundary(self):
+        codec = DeltaCodec(_tree())
+        d = codec.sizes["b"]                              # 24 elems, f32
+        assert codec.sparse_wins("b", (d * 4) // codec.bpe - 1)
+        assert not codec.sparse_wins("b", d)
+
+    def test_fingerprint_tracks_structure_not_values(self):
+        assert tree_fingerprint(_tree(0)) == tree_fingerprint(_tree(9))
+        other = dict(_tree(), extra=jnp.zeros((3,), jnp.float32))
+        assert tree_fingerprint(other) != tree_fingerprint(_tree())
+
+    def test_packet_disk_roundtrip(self, tmp_path):
+        codec = DeltaCodec(_tree())
+        payload, _, nbytes, _ = codec.encode(
+            _tree(), _drift(_tree(), 3), codec.zero_residual(),
+            {k: 4 for k in codec.keys})
+        pkt = DeltaPacket(version=7, step=42, fingerprint=codec.fingerprint,
+                          kind="delta", payload=payload, nbytes=nbytes)
+        got = load_packet(save_packet(str(tmp_path), pkt))
+        assert (got.version, got.step, got.kind, got.nbytes) == (7, 42,
+                                                                 "delta",
+                                                                 nbytes)
+        assert got.fingerprint == codec.fingerprint
+        for key in pkt.payload:
+            for field in pkt.payload[key]:
+                assert np.array_equal(got.payload[key][field],
+                                      pkt.payload[key][field])
+
+    def test_keyed_compressor_rejected(self):
+        with pytest.raises(ValueError, match="deterministic"):
+            DeltaCodec(_tree(), compressor="randk")
+
+
+# ---------------------------------------------------------------------------
+# publisher
+# ---------------------------------------------------------------------------
+
+class TestPublisher:
+    def test_first_packet_full_then_budgeted_deltas(self):
+        pub = StreamPublisher(_tree(), every=1, budget_bytes=256)
+        p1 = pub.publish(0, _tree())
+        assert p1.kind == "full" and p1.version == 1
+        for step in range(1, 5):
+            pkt = pub.publish(step, _drift(_tree(), step))
+            assert pkt.kind == "delta" and pkt.nbytes <= 256
+        assert pub.version == 5
+
+    def test_budget_from_link_rate(self):
+        pub = StreamPublisher(_tree(), every=5, bytes_per_sec=100.0,
+                              step_time_s=2.0)
+        assert pub.budget_bytes == 1000
+
+    def test_split_proportional_to_leaf_size(self):
+        """One shared ratio c: k_l = d_l / c, so the big leaf gets the
+        big share (the Eq.-18 shape on the stream)."""
+        pub = StreamPublisher(_tree(), budget_bytes=400)
+        plan = {e.key: e for e in pub.split_budget()}
+        assert sum(e.nbytes for e in plan.values()) <= 400
+        assert plan["w"].k > plan["b"].k            # 256 vs 24 elems
+        assert plan["w"].d == 256 and plan["b"].d == 24
+
+    def test_time_budget_priced_by_wire_model(self):
+        pub = StreamPublisher(_tree(), hw=cm.TPU_DCN, p=4,
+                              time_budget_s=1e-3)
+        plan = pub.split_budget()
+        assert all(e.t_pred > 0.0 for e in plan)
+        assert sum(e.t_pred for e in plan) <= 1e-3
+        # a tighter time budget can only shrink the per-leaf k
+        tight = {e.key: e.k
+                 for e in StreamPublisher(_tree(), hw=cm.TPU_DCN, p=4,
+                                          time_budget_s=1e-5).split_budget()}
+        assert all(tight[e.key] <= e.k for e in plan)
+
+    def test_flush_every_drains_on_schedule(self):
+        pub = StreamPublisher(_tree(), every=1, budget_bytes=128,
+                              flush_every=3)
+        kinds = [pub.publish(s, _drift(_tree(), s)).kind for s in range(6)]
+        assert kinds == ["full", "delta", "full", "delta", "delta", "full"]
+
+    def test_acceptance_bytes_and_bitwise_parity(self):
+        """Acceptance (a): at a matched cadence the stream costs <= 25%
+        of full checkpoints.  Acceptance (b): a subscriber applying every
+        packet is bitwise-identical to the publisher mid-stream, and to
+        the LIVE params after a flush (EF residual drained)."""
+        codec_probe = DeltaCodec(_tree())
+        pub = StreamPublisher(_tree(), every=1,
+                              budget_bytes=codec_probe.full_bytes // 10)
+        sub = None
+        live = _tree()
+        for step in range(8):
+            live = _drift(live, 100 + step, scale=1e-3)
+            pkt = pub.publish(step, live)
+            if sub is None:
+                sub = pub.codec.materialize(pkt, _zeros_like(live))
+            else:
+                sub = pub.codec.apply(sub, pkt)
+            # (b) mid-stream: both ends ran the identical compiled update
+            assert _bitwise(sub, pub.published)
+        assert pub.bytes_streamed <= 0.25 * pub.bytes_full_equiv
+        # before the flush the EF residual still holds unsent change
+        assert not _bitwise(sub, live)
+        sub = pub.codec.apply(sub, pub.flush(8, live))
+        assert _bitwise(sub, live)
+
+    def test_save_full_records_stream_position(self, tmp_path):
+        from repro.checkpoint import io
+        pub = StreamPublisher(_tree(), every=1, budget_bytes=128)
+        for step in range(3):
+            pub.publish(step, _drift(_tree(), step))
+        path = pub.save_full(str(tmp_path / "full"), step=2)
+        meta = io.load_metadata(path)["metadata"]
+        assert meta["version"] == 3 and meta["step"] == 2
+        assert meta["fingerprint"] == pub.codec.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# subscriber + guard over a real served model
+# ---------------------------------------------------------------------------
+
+def _model_cfg():
+    from repro.configs import base
+    return dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+        dtype="float32", param_dtype="float32", compression_ratio=1.0)
+
+
+def _shape(seq=8, batch=2):
+    from repro.configs import base
+    return base.InputShape("serve", seq, batch, "decode")
+
+
+def _model_params(cfg, seed=0):
+    from repro.models import transformer as T
+    params, _ = T.init_model(jax.random.PRNGKey(seed), cfg)
+    return params
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _model_cfg()
+    return cfg, _model_params(cfg)
+
+
+class TestServeSession:
+    def test_follow_stream_bitwise(self, served, tmp_path):
+        """Acceptance (b) end-to-end through packet files: a cold
+        ServeSession bootstraps from the full baseline, follows every
+        delta, and lands bitwise on the publisher after a flush."""
+        cfg, params = served
+        pub = StreamPublisher(params, every=1,
+                              budget_bytes=DeltaCodec(params).full_bytes
+                              // 10, out_dir=str(tmp_path))
+        sub = ServeSession(cfg, _shape(), _zeros_like(params))
+        live = params
+        for step in range(4):
+            live = _drift(live, step, scale=1e-3)
+            pub.publish(step, live)
+        pub.flush(4, live)
+        for path in pub.packet_paths:
+            assert sub.apply_packet_file(path) == "applied"
+        assert sub.version == pub.version == 5
+        assert _bitwise(sub.params, live)
+        assert _bitwise(sub.params, pub.published)
+
+    def test_gap_refused_then_resync(self, served, tmp_path):
+        cfg, params = served
+        pub = StreamPublisher(params, every=1, budget_bytes=512)
+        sub = ServeSession(cfg, _shape(), _zeros_like(params))
+        pkts = [pub.publish(s, _drift(params, s)) for s in range(4)]
+        assert sub.apply_packet(pkts[0]) == "applied"
+        assert sub.apply_packet(pkts[2]) == "gap"        # v3 after v1
+        assert sub.needs_resync
+        before = sub.params
+        assert _bitwise(sub.params, before)              # untouched
+        path = pub.save_full(str(tmp_path / "resync"), step=3)
+        assert sub.resync(path) == pub.version == 4
+        assert not sub.needs_resync
+        assert _bitwise(sub.params, pub.published)
+        pkt5 = pub.publish(4, _drift(params, 9))
+        assert sub.apply_packet(pkt5) == "applied"
+
+    def test_foreign_and_stale_packets_refused(self, served):
+        cfg, params = served
+        pub = StreamPublisher(params, every=1, budget_bytes=512)
+        sub = ServeSession(cfg, _shape(), _zeros_like(params))
+        p1 = pub.publish(0, params)
+        assert sub.apply_packet(p1) == "applied"
+        assert sub.apply_packet(p1) == "stale"           # full, replayed
+        alien = dataclasses.replace(pub.publish(1, _drift(params, 1)),
+                                    fingerprint="deadbeef")
+        assert sub.apply_packet(alien) == "fingerprint"
+        assert sub.needs_resync
+
+    def test_generate_matches_direct_engine_path(self, served):
+        """ServeSession.generate == greedy decode on the raw engine:
+        the session only wraps the production prefill/decode steps."""
+        from repro.serving import engine
+        cfg, params = served
+        sub = ServeSession(cfg, _shape(), params, chunk=16)
+        prompts = jax.random.randint(jax.random.PRNGKey(7), (2, 4), 0,
+                                     cfg.vocab)
+        got = sub.generate(prompts, 3)
+        assert got.shape == (2, 3) and got.dtype == jnp.int32
+
+        logits, st = jax.jit(lambda p: engine.prefill(
+            p, cfg, prompts, chunk=16))(params)
+        st = engine.pad_states_for_decode(cfg, st, 4, 7)
+        step = jax.jit(lambda p, t, s, pos: engine.serve_step(
+            p, cfg, t, s, pos, chunk=16))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        want = []
+        for i in range(3):
+            want.append(tok)
+            logits, st = step(params, tok, st, jnp.int32(4 + i))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        assert np.array_equal(np.asarray(got),
+                              np.asarray(jnp.concatenate(want, axis=1)))
+
+
+class TestRolloutGuard:
+    def _guard(self, cfg):
+        from repro.configs import base
+        from repro.launch import specs as SP
+        batch = SP.concrete_batch(cfg, base.InputShape("t", 16, 2, "train"),
+                                  key=jax.random.PRNGKey(11))
+        return RolloutGuard(quality_probe(cfg, batch, chunk=16,
+                                          loss_chunk=16))
+
+    def test_acceptance_regression_trips_and_pins(self, served):
+        """Acceptance (c): gentle drift streams quietly; a poisoned
+        packet jumps the held-out NLL, the guard fires BEFORE commit,
+        the last-good version is pinned and stays live."""
+        cfg, params = served
+        guard = self._guard(cfg)
+        pub = StreamPublisher(params, every=1, budget_bytes=512)
+        sub = ServeSession(cfg, _shape(), _zeros_like(params), guard=guard)
+        live = params
+        for step in range(4):
+            live = _drift(live, step, scale=1e-4)
+            assert sub.apply_packet(pub.publish(step, live)) == "applied"
+        assert not guard.halted and guard.last_nll is not None
+        good_params, good_version = sub.params, sub.version
+
+        poisoned = jax.tree.map(lambda x: x + 50.0, live)
+        pkt = pub.flush(4, poisoned)                 # full: exact poison
+        assert sub.apply_packet(pkt) == "halted"
+        assert guard.halted and guard.anomaly is not None
+        assert guard.pinned_version == good_version == 4
+        assert sub.version == good_version
+        assert _bitwise(sub.params, good_params)     # last-good stays live
+        # the stream stays halted without another eval
+        nll_at_halt = guard.last_nll
+        assert sub.apply_packet(pub.publish(5, live)) == "halted"
+        assert guard.last_nll == nll_at_halt
+        # resuming is an operator decision
+        guard.resume()
+        assert guard.allow() and not guard.halted
+
+    def test_quiet_on_gentle_drift(self, served):
+        cfg, params = served
+        guard = self._guard(cfg)
+        pub = StreamPublisher(params, every=1, budget_bytes=512)
+        sub = ServeSession(cfg, _shape(), _zeros_like(params), guard=guard)
+        live = params
+        for step in range(6):
+            live = _drift(live, 30 + step, scale=1e-4)
+            assert sub.apply_packet(pub.publish(step, live)) == "applied"
+        assert not guard.halted and len(guard.samples) == 6
+
+
+# ---------------------------------------------------------------------------
+# Session.run publish hook
+# ---------------------------------------------------------------------------
+
+class TestSessionPublisher:
+    def test_run_offers_params_every_step(self, tmp_path):
+        from repro import api
+        from repro.configs import base
+        from repro.launch import mesh as M
+        from repro.launch import specs as SP
+        cfg = dataclasses.replace(_model_cfg(), train_mode="lags_dp",
+                                  compression_ratio=8.0)
+        sess = api.Session(cfg, api.RunConfig(lr=0.1, chunk=16,
+                                              loss_chunk=16, donate=False),
+                           mesh=M.make_host_mesh(data=1, model=1))
+        state, _ = sess.init_state()
+        pub = StreamPublisher(state["params"], every=2,
+                              out_dir=str(tmp_path))
+        shape = base.InputShape("t", 16, 4, "train")
+        _, history = sess.run(
+            lambda t: SP.concrete_batch(cfg, shape,
+                                        key=jax.random.PRNGKey(t)),
+            4, state=state, publisher=pub, print_fn=lambda *_: None)
+        published = [r["publish"] for r in history if "publish" in r]
+        assert [p["version"] for p in published] == [1, 2]
+        assert published[0]["kind"] == "full"
+        assert pub.n_publishes == 2 and len(pub.packet_paths) == 2
+        assert load_packet(pub.packet_paths[-1]).version == 2
