@@ -339,6 +339,8 @@ def run(argv=None) -> int:
     # ---- 4. anomaly-triggered re-plan beats the cadence (repro.observe) ----
     from repro.autotune import profiler
     from repro.observe import anomaly as AN
+    from repro.observe import events as OE
+    from repro.observe import metrics as OM
     from repro.observe import trace as OTR
     from repro.observe import triggers as TG
 
@@ -346,8 +348,10 @@ def run(argv=None) -> int:
     shift4 = replan_every                 # regression lands well before it
     steps4 = cadence - 1                  # the cadence NEVER gets a turn
     header(f"runtime observe: fake-trace anomaly at shift@{shift4} must "
-           f"swap before the cadence boundary @{cadence}")
+           f"swap before the cadence boundary @{cadence} — swap/trigger "
+           "read back from the exported metrics snapshot")
     wire4 = {"flat": fast}
+    oreg, oevs = OM.MetricsRegistry(), OE.EventLog()   # isolated plane
     ocfg = small_cfg("lags_dp")
     octl = api.Session(ocfg, run, M.make_host_mesh(data=4, model=2)) \
         .controller(
@@ -358,7 +362,8 @@ def run(argv=None) -> int:
             triggers=(TG.CadenceTrigger(cadence),
                       TG.AnomalyTrigger(cfg=AN.AnomalyConfig(
                           warmup=1, recent=2, min_history=2,
-                          z=4.0, min_rel=0.2))))
+                          z=4.0, min_rel=0.2))),
+            metrics=oreg, events=oevs)
     # deterministic synthetic step: measured-style per-leaf budgets (40ms
     # backward total split by FLOPs share), live wire, live schedule
     fake = OTR.FakeTraceBackend(
@@ -370,29 +375,43 @@ def run(argv=None) -> int:
                   steps=steps4, shift_at=shift4,
                   shift_fn=lambda: wire4.update(flat=slow))
 
-    swaps = [e for e in octl.history if e.swapped]
-    if ores["swap_step"] is None:
-        emit("runtime/observe/FAILED_no_anomaly_swap", 0,
-             f"{[dataclasses.asdict(e) for e in octl.history]}")
+    # the assertions below come from the exported snapshot, not from
+    # octl.history — the bench checks what an operator's scrape would see
+    snap = OM.load_snapshot(OM.save_snapshot(
+        os.path.join(args.out, "observe_snapshot"), oreg, oevs,
+        meta={"bench": "runtime", "section": "observe"}))
+    replans = [e for e in snap["events"] if e["kind"] == "replan"]
+    swaps = [e for e in replans if e["data"]["swapped"]]
+    swap_step = swaps[0]["step"] if swaps else None
+    if swap_step is None:
+        emit("runtime/observe/FAILED_no_anomaly_swap", 0, f"{replans}")
         bad += 1
     else:
-        emit("runtime/observe/time_to_replan_steps",
-             ores["swap_step"] - shift4,
-             f"shift@{shift4} -> swap@{ores['swap_step']}")
-        ev = swaps[0]
-        emit("runtime/observe/swap_trigger", ev.trigger,
+        emit("runtime/observe/time_to_replan_steps", swap_step - shift4,
+             f"shift@{shift4} -> swap@{swap_step} (snapshot replan event)")
+        ev = swaps[0]["data"]
+        emit("runtime/observe/swap_trigger", ev["trigger"],
              "evidence-driven, not the cadence")
-        if "anomaly" not in ev.trigger:
+        if "anomaly" not in ev["trigger"]:
             emit("runtime/observe/FAILED_not_anomaly_triggered",
-                 ev.trigger, "")
+                 ev["trigger"], "")
+            bad += 1
+        fired = {r["labels"]["trigger"]: r["value"]
+                 for r in snap["metrics"]
+                 if r["name"] == "replan_triggers_total"}
+        emit("runtime/observe/trigger_fire_counts",
+             ";".join(f"{k}={v:.0f}" for k, v in sorted(fired.items())),
+             "replan_triggers_total by trigger label")
+        if not any("anomaly" in k for k in fired):
+            emit("runtime/observe/FAILED_anomaly_never_fired", 0, f"{fired}")
             bad += 1
         # STRICTLY earlier than the fixed cadence could have acted
         emit("runtime/observe/steps_saved_vs_cadence",
-             cadence - ores["swap_step"],
+             cadence - swap_step,
              f"cadence would first re-plan at step {cadence}")
-        if not ores["swap_step"] < cadence:
+        if not swap_step < cadence:
             emit("runtime/observe/FAILED_not_earlier_than_cadence",
-                 ores["swap_step"], f"cadence boundary {cadence}")
+                 swap_step, f"cadence boundary {cadence}")
             bad += 1
         if len(swaps) != 1:
             emit("runtime/observe/FAILED_detector_refired", len(swaps),
@@ -400,11 +419,11 @@ def run(argv=None) -> int:
             bad += 1
         # provenance: the fit consumed trace-attributed per-bucket
         # samples, the plan consumed measured per-leaf backward times
-        emit("runtime/observe/fit_source", ev.hw_name,
+        emit("runtime/observe/fit_source", ev["hw"],
              "attr_ = per-bucket samples attributed from the trace")
-        if ev.hw_name != "attr_wire_fit":
+        if ev["hw"] != "attr_wire_fit":
             emit("runtime/observe/FAILED_fit_not_attributed",
-                 ev.hw_name, "")
+                 ev["hw"], "")
             bad += 1
         emit("runtime/observe/budget_source", octl.measurement_source,
              "trace = measured per-leaf backward times (FLOPs-share "

@@ -15,10 +15,16 @@ contracts:
 Also emits the served-quality trajectory: held-out NLL of the streamed
 subscriber at each version vs the frozen v1 baseline a non-streaming
 fleet would keep serving.
+
+The (a) bytes-ratio and (c) guard-trip acceptance checks are read back
+from an **exported metrics snapshot** (``observe.metrics.save_snapshot``
+on an isolated registry/event log), not from the publisher/guard return
+values — the bench asserts what an operator's scrape would see.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +35,8 @@ from repro import api
 from repro.configs import base
 from repro.data import synthetic
 from repro.launch import mesh as M
+from repro.observe import events as OE
+from repro.observe import metrics as OM
 from repro.stream import (DeltaCodec, RolloutGuard, ServeSession,
                           StreamPublisher, quality_probe)
 
@@ -50,6 +58,7 @@ def run() -> int:
         train_mode="lags_dp", compression_ratio=8.0)
     mesh = M.make_host_mesh(data=1, model=1)
     data = synthetic.MarkovLM(vocab=cfg.vocab, seed=11)
+    reg, evs = OM.MetricsRegistry(), OE.EventLog()   # isolated plane
 
     header("stream — train 12 steps, publish every step at 1/16 budget")
     sess = api.Session(
@@ -58,20 +67,23 @@ def run() -> int:
     state, _ = sess.init_state()
     full_bytes = DeltaCodec(state["params"]).full_bytes
     pub = StreamPublisher(state["params"], every=1,
-                          budget_bytes=full_bytes // 16)
+                          budget_bytes=full_bytes // 16,
+                          metrics=reg, events=evs)
 
     holdout = data.batch(10_000, 2, SEQ)
     guard = RolloutGuard(quality_probe(cfg, holdout, chunk=16,
-                                       loss_chunk=16))
+                                       loss_chunk=16),
+                         metrics=reg, events=evs)
     zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
                          state["params"])
     sub = ServeSession(cfg, base.InputShape("serve", SEQ, 2, "decode"),
-                       zeros, mesh=mesh, chunk=16, guard=guard)
+                       zeros, mesh=mesh, chunk=16, guard=guard,
+                       metrics=reg, events=evs)
 
     nll_by_version = {}
     state, _ = sess.run(
         lambda t: data.batch(t, BATCH, SEQ), STEPS, state=state,
-        publisher=pub, print_fn=lambda *_: None)
+        publisher=pub, metrics=reg, events=evs, print_fn=lambda *_: None)
     pub.flush(STEPS, state["params"])
     frozen_nll = None
     for pkt in pub.packets:
@@ -86,15 +98,26 @@ def run() -> int:
         emit(f"stream/nll/v{pkt.version}", guard.last_nll,
              f"{pkt.kind} {pkt.nbytes}B (frozen v1 serves {frozen_nll:.4f})")
 
-    header("stream — acceptance (a): bytes vs full-checkpoint cadence")
-    ratio = pub.bytes_streamed / pub.bytes_full_equiv
-    emit("stream/bytes_streamed", pub.bytes_streamed,
-         f"{pub.n_publishes} packets")
-    emit("stream/bytes_full_equiv", pub.bytes_full_equiv,
-         f"{pub.n_publishes} x {full_bytes}B checkpoints")
+    header("stream — acceptance (a): bytes vs full-checkpoint cadence "
+           "(from the exported snapshot)")
+    out = os.path.join("artifacts", "bench_stream")
+    snap = OM.load_snapshot(OM.save_snapshot(
+        os.path.join(out, "metrics_publish"), reg, evs,
+        meta={"bench": "stream", "section": "publish"}))
+    streamed = OM.metric_total(snap, "publish_bytes_total")
+    full_equiv = OM.metric_total(snap, "publish_bytes_full_equiv_total")
+    n_pub = OM.metric_total(snap, "publish_packets_total")
+    ratio = streamed / max(full_equiv, 1)
+    emit("stream/bytes_streamed", streamed, f"{n_pub:.0f} packets")
+    emit("stream/bytes_full_equiv", full_equiv,
+         f"{n_pub:.0f} x {full_bytes}B checkpoints")
     emit("stream/bytes_ratio", ratio, "must be <= 0.25")
     if ratio > 0.25:
         bad += 1
+    if streamed != pub.bytes_streamed or full_equiv != pub.bytes_full_equiv:
+        bad += 1
+        emit("stream/snapshot_consistent", 0,
+             "snapshot disagrees with publisher counters")
 
     header("stream — acceptance (b): bitwise parity after flush")
     parity = _bitwise(sub.params, state["params"])
@@ -110,23 +133,36 @@ def run() -> int:
     if not improved:
         bad += 1
 
-    header("stream — acceptance (c): guard trips on a poisoned packet")
+    header("stream — acceptance (c): guard trips on a poisoned packet "
+           "(from the exported snapshot)")
     good_version, good_params = sub.version, sub.params
     poisoned = jax.tree.map(lambda x: x + 50.0, state["params"])
-    status = sub.apply_packet(pub.flush(STEPS + 1, poisoned))
-    tripped = (status == "halted" and guard.halted
-               and guard.pinned_version == good_version
+    sub.apply_packet(pub.flush(STEPS + 1, poisoned))
+    # and the halt latches: the next packet is refused without an eval
+    sub.apply_packet(pub.flush(STEPS + 2, state["params"]))
+    snap = OM.load_snapshot(OM.save_snapshot(
+        os.path.join(out, "metrics_snapshot"), reg, evs,
+        meta={"bench": "stream", "section": "final"}))
+    trips = [e for e in snap["events"] if e["kind"] == "guard_trip"]
+    pins = [e for e in snap["events"] if e["kind"] == "guard_pin"]
+    halted = sum(r["value"] for r in snap["metrics"]
+                 if r["name"] == "serve_packets_total"
+                 and r["labels"].get("status") == "halted")
+    tripped = (OM.metric_total(snap, "guard_trips_total") == 1
+               and len(trips) == 1
+               and pins and pins[-1]["step"] == good_version
                and sub.version == good_version
                and _bitwise(sub.params, good_params))
     emit("stream/guard_tripped", int(tripped),
-         f"status={status} pinned=v{guard.pinned_version} "
-         f"nll_jump={guard.last_nll:.2f}")
+         f"trip@v{trips[-1]['step'] if trips else '?'} "
+         f"pinned=v{pins[-1]['step'] if pins else '?'} "
+         f"nll_jump={trips[-1]['data']['nll'] if trips else 0:.2f}")
     if not tripped:
         bad += 1
-    # and the halt latches: the next packet is refused without an eval
-    status2 = sub.apply_packet(pub.flush(STEPS + 2, state["params"]))
-    emit("stream/halt_latches", int(status2 == "halted"), status2)
-    if status2 != "halted":
+    emit("stream/halt_latches", int(halted == 2),
+         f"serve_packets_total{{status=halted}} = {halted:.0f} "
+         "(trip + latched refusal)")
+    if halted != 2:
         bad += 1
     return bad
 

@@ -16,6 +16,11 @@ One process plays both ends of the ``repro.stream`` pipeline:
      be bitwise-identical to the trained params; then it generates a few
      tokens from the streamed weights.
 
+Because train, publish, guard and serve all report into the process-wide
+metrics plane, the final ``--out``/metrics_snapshot artifact covers all
+four subsystems in one export — CI validates it with
+``python -m repro.observe.check``.
+
   PYTHONPATH=src python examples/train_and_serve.py --steps 20
   PYTHONPATH=src python examples/train_and_serve.py --steps 2   # CI smoke
 """
@@ -115,6 +120,17 @@ def main():
     toks = sub.generate(prompts, args.gen)
     print(f"generate: {toks.shape[1]} tokens from streamed v{sub.version} "
           f"weights -> {np.asarray(toks).tolist()}")
+    rec = sub.requests[-1]
+    print(f"request: prefill {rec.prefill_s * 1e3:.1f}ms "
+          f"({rec.prefill_jit})  decode {rec.decode_tok_s:.1f} tok/s "
+          f"({rec.decode_jit})  v{rec.version} cache={rec.cache}")
+
+    # one snapshot over the whole round trip: train + stream + serve
+    from repro.observe import metrics as OM
+    snap = OM.save_snapshot(
+        os.path.join(args.out, "metrics_snapshot"),
+        meta={"example": "train_and_serve", "n_steps": int(args.steps)})
+    print(f"metrics: snapshot -> {snap}")
 
 
 if __name__ == "__main__":

@@ -89,6 +89,10 @@ def main():
     ap.add_argument("--swap-threshold", type=float, default=0.05,
                     help="min predicted relative improvement before an "
                          "online re-plan swaps the schedule")
+    ap.add_argument("--fence-every", type=int, default=8,
+                    help="telemetry fence cadence (block_until_ready "
+                         "every N steps); short CI runs need 1 so the "
+                         "trigger window fills before the run ends")
     ap.add_argument("--hier-schedule", default=None,
                     help="two-tier HierSchedule JSON for --method "
                          "lags_hier (from bench_runtime or the planner)")
@@ -123,7 +127,8 @@ def main():
             trig.append(TG.AnomalyTrigger())
         controller = sess.controller(
             rcfg=RuntimeConfig(replan_every=args.replan_every,
-                               swap_threshold=args.swap_threshold),
+                               swap_threshold=args.swap_threshold,
+                               fence_every=args.fence_every),
             triggers=tuple(trig))
 
     state, _ = sess.init_state()

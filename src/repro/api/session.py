@@ -116,7 +116,7 @@ class Session:
 
     # -- online re-planning -------------------------------------------------
     def controller(self, rcfg=None, comm_probe=None, triggers=None,
-                   trace_source=None):
+                   trace_source=None, metrics=None, events=None):
         """``runtime.ReplanController`` owning this session's train step
         (re-fits/re-plans the schedule online; see ``repro.runtime``).
 
@@ -124,28 +124,43 @@ class Session:
         composition; default = the ``rcfg.replan_every`` cadence).
         ``trace_source``: optional ``step -> repro.observe.Trace`` that
         makes telemetry trace-driven (measured per-leaf backward times,
-        per-bucket collective samples)."""
+        per-bucket collective samples).  ``metrics``/``events``: the
+        observe plane to report into (default: process-wide)."""
         from repro.runtime import controller as RC
         return RC.ReplanController(self.cfg,
                                    self._need_mesh("controller"),
                                    rcfg=rcfg, run=self.run_config,
                                    comm_probe=comm_probe,
                                    triggers=triggers,
-                                   trace_source=trace_source)
+                                   trace_source=trace_source,
+                                   metrics=metrics, events=events)
 
     # -- convenience loop ----------------------------------------------------
     def run(self, data_fn, n_steps: int, *, controller=None, state=None,
             log_path: str | None = None, log_every: int = 10,
             ckpt_every: int = 0, out_dir: str | None = None,
-            publisher=None, print_fn=print):
+            publisher=None, metrics=None, events=None, print_fn=print):
         """The whole distributed training loop in one call.
 
         ``data_fn(step) -> batch`` supplies global batches;  the loop
         runs inside ``compat.set_mesh``, logs one JSONL row per step to
-        ``log_path`` (loss + elapsed seconds + any re-plan event), and —
-        when ``ckpt_every``/``out_dir`` are set — checkpoints the train
-        state (and controller state) periodically plus a final
-        ``ckpt_final``/``runtime_final`` pair.
+        ``log_path``, and — when ``ckpt_every``/``out_dir`` are set —
+        checkpoints the train state (and controller state) periodically
+        plus a final ``ckpt_final``/``runtime_final`` pair.
+
+        Each JSONL row is a thin view over the metrics plane
+        (``repro.observe.metrics``): the documented subset is ``step``,
+        ``loss``, ``elapsed_s`` (cumulative wall seconds, rounded to
+        0.1 s — the historical field) and ``step_s`` (this step's
+        **unrounded** ``time.perf_counter`` duration, including the
+        device sync that materializes the loss), plus the optional
+        ``publish`` / ``replan`` sub-dicts.  The same quantities land in
+        the registry as ``train_step_seconds`` (histogram),
+        ``train_loss`` (gauge), ``train_steps_total`` and
+        ``train_comm_bytes_total`` (the live schedule's predicted
+        exchange payload — counters), all labelled ``mode=``.  When
+        ``out_dir`` is set the loop exports a final snapshot artifact
+        ``<out_dir>/metrics_snapshot.{jsonl,json,prom}``.
 
         ``controller``: a ``ReplanController`` from :meth:`controller`
         (its :meth:`~repro.runtime.ReplanController.step` replaces the
@@ -159,6 +174,10 @@ class Session:
         ``DeltaPacket`` is logged as a ``publish`` row field, so a
         serving fleet can follow this run at delta-bandwidth.
 
+        ``metrics`` / ``events``: an ``observe.metrics.MetricsRegistry``
+        and ``observe.events.EventLog`` (default: the process-wide
+        plane) — benches pass isolated instances.
+
         Returns ``(state, history)`` where ``history`` is the list of
         logged row dicts.
         """
@@ -168,6 +187,8 @@ class Session:
 
         from repro import compat
         from repro.checkpoint import io as ckpt
+        from repro.observe import events as OE
+        from repro.observe import metrics as OM
 
         mesh = self._need_mesh("run")
         step_fn = controller.step if controller is not None else self.step_fn
@@ -175,6 +196,22 @@ class Session:
             state, _ = self.init_state()
         if out_dir:
             os.makedirs(out_dir, exist_ok=True)
+        reg = metrics if metrics is not None else OM.default_registry()
+        evs = events if events is not None else OE.default_events()
+        mode = self.mode
+        m_steps = reg.counter("train_steps_total", "Train steps run.",
+                              ("mode",))
+        m_step_s = reg.histogram(
+            "train_step_seconds",
+            "Per-step wall time (perf_counter, incl. the loss sync).",
+            ("mode",))
+        m_loss = reg.gauge("train_loss", "Last step's training loss.",
+                           ("mode",))
+        m_comm = reg.counter(
+            "train_comm_bytes_total",
+            "Predicted sparse-exchange payload bytes under the live "
+            "schedule (values + int32 indices per kept element).",
+            ("mode",))
 
         def save_ckpt(tag: str):
             if not out_dir:
@@ -192,9 +229,21 @@ class Session:
         try:
             with compat.set_mesh(mesh):
                 for t in range(n_steps):
-                    state, metrics = step_fn(state, data_fn(t))
-                    row = {"step": t, "loss": float(metrics["loss"]),
-                           "elapsed_s": round(time.time() - t_start, 1)}
+                    t0 = time.perf_counter()
+                    state, metrics_out = step_fn(state, data_fn(t))
+                    loss = float(metrics_out["loss"])   # device sync
+                    step_s = time.perf_counter() - t0
+                    row = {"step": t, "loss": loss,
+                           "elapsed_s": round(time.time() - t_start, 1),
+                           "step_s": step_s}
+                    m_steps.inc(mode=mode)
+                    m_step_s.observe(step_s, mode=mode)
+                    m_loss.set(loss, mode=mode)
+                    live_meta = (controller.meta if controller is not None
+                                 else self.meta)
+                    m_comm.inc(_step_comm_bytes(live_meta,
+                                                state["params"]),
+                               mode=mode)
                     if publisher is not None:
                         pkt = publisher.maybe_publish(t, state["params"])
                         if pkt is not None:
@@ -226,4 +275,24 @@ class Session:
             if log is not None:
                 log.close()
         save_ckpt("final")
+        if out_dir:
+            OM.save_snapshot(os.path.join(out_dir, "metrics_snapshot"),
+                             reg, evs,
+                             meta={"arch": self.cfg.name, "mode": mode,
+                                   "n_steps": int(n_steps)})
         return state, history
+
+
+def _step_comm_bytes(meta, params) -> int:
+    """Predicted per-step exchange payload bytes under the live plan:
+    ``sum(k_l) * payload_bytes_per_elem`` for a sparse exchange (the
+    hierarchical modes count the cross-pod tier — the wire the plan
+    budgets), raw fp32 gradient bytes for dense."""
+    import jax
+
+    from repro.core import bucketing
+    ks = meta.get("ks")
+    if ks is None:
+        return int(sum(4 * x.size for x in jax.tree.leaves(params)))
+    kept = sum(int(k) for k in jax.tree.leaves(ks))
+    return int(kept) * bucketing.payload_bytes_per_elem()

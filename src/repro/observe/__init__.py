@@ -26,6 +26,14 @@ cadence-driven into evidence-driven, in four pieces:
     the built-ins (cadence / anomaly / hardware-fingerprint drift) the
     controller ORs together; the default set reproduces the old
     ``replan_every`` semantics bit-for-bit.
+  * :mod:`~repro.observe.metrics` / :mod:`~repro.observe.events` — the
+    process-wide metrics registry (counters/gauges/histograms over the
+    ``names`` grammar, Prometheus text + JSONL snapshot exporters) and
+    the versioned event bus (replan swaps, trigger firings, publishes,
+    guard trips, resyncs, per-request serve records) that every
+    subsystem — ``api.Session.run``, ``runtime.ReplanController``,
+    ``repro.stream`` — reports into; :mod:`~repro.observe.check` is the
+    CI validator over exported snapshots.
 
 Import is lazy (PEP 562): ``repro.core`` annotates collectives via the
 leaf module ``repro.observe.names`` without dragging the autotune stack
@@ -39,6 +47,14 @@ _LAZY = {
     "attribution": "repro.observe.attribution",
     "anomaly": "repro.observe.anomaly",
     "triggers": "repro.observe.triggers",
+    "metrics": "repro.observe.metrics",
+    "events": "repro.observe.events",
+    "check": "repro.observe.check",
+    "MetricsRegistry": ("repro.observe.metrics", "MetricsRegistry"),
+    "save_snapshot": ("repro.observe.metrics", "save_snapshot"),
+    "load_snapshot": ("repro.observe.metrics", "load_snapshot"),
+    "EventLog": ("repro.observe.events", "EventLog"),
+    "Event": ("repro.observe.events", "Event"),
     "Trace": ("repro.observe.trace", "Trace"),
     "TraceEvent": ("repro.observe.trace", "TraceEvent"),
     "FakeTraceBackend": ("repro.observe.trace", "FakeTraceBackend"),

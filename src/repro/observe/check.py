@@ -1,0 +1,127 @@
+"""Snapshot validation: the CI gate over the exported metrics plane.
+
+``python -m repro.observe.check <snapshot> --require train replan`` loads
+a :func:`repro.observe.metrics.save_snapshot` artifact and fails (exit
+code = number of problems) unless it parses, carries the expected schema,
+covers the required subsystems, and satisfies the cross-metric
+invariants:
+
+  * ``publish_bytes_total <= publish_bytes_full_equiv_total`` — the
+    delta stream must never cost more than shipping full checkpoints at
+    the same cadence (``--max-publish-ratio`` tightens the bound, e.g.
+    ``0.25`` re-asserts bench_stream's contract on a live run);
+  * when ``serve`` is required, at least one ``request`` event must be
+    present (per-request records are the serve subsystem's payload, not
+    just its counters) and each must carry the ``RequestRecord`` core
+    fields (prefill latency, decode tokens/s, applied weight version).
+
+Usable as a library too: :func:`validate` returns the list of problems.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.observe import metrics as OM
+
+#: RequestRecord fields every ``request`` event row must carry.
+REQUEST_FIELDS = ("prefill_s", "decode_tok_s", "version")
+
+
+def validate(snap: dict, require: tuple[str, ...] = (),
+             max_publish_ratio: float | None = None) -> list[str]:
+    """Problems with a loaded snapshot (empty list = valid)."""
+    problems: list[str] = []
+    meta = snap.get("meta", {})
+    if meta.get("schema") != OM.SNAPSHOT_SCHEMA:
+        problems.append(f"schema {meta.get('schema')!r} != "
+                        f"{OM.SNAPSHOT_SCHEMA}")
+    counts = meta.get("counts", {})
+    if counts.get("metrics") != len(snap.get("metrics", ())):
+        problems.append(f"sidecar counts {counts.get('metrics')} metric "
+                        f"rows, jsonl has {len(snap.get('metrics', ()))}")
+    if counts.get("events") != len(snap.get("events", ())):
+        problems.append(f"sidecar counts {counts.get('events')} event "
+                        f"rows, jsonl has {len(snap.get('events', ()))}")
+    covered = set(meta.get("subsystems", ()))
+    # re-derive coverage from the rows: the sidecar must not over-claim
+    derived = {s for s in (OM.subsystem(r["name"])
+                           for r in snap.get("metrics", ())) if s}
+    from repro.observe import events as OE
+    derived |= {s for s in (OE.subsystem_of_kind(r.get("kind", ""))
+                            for r in snap.get("events", ())) if s}
+    if covered - derived:
+        problems.append(f"sidecar claims uncovered subsystems: "
+                        f"{sorted(covered - derived)}")
+    for sub in require:
+        if sub not in derived:
+            problems.append(f"required subsystem {sub!r} missing "
+                            f"(covered: {sorted(derived)})")
+    bad_rows = [r for r in snap.get("metrics", ())
+                if r.get("kind") == "histogram"
+                and r.get("count", 0) != (r.get("buckets") or
+                                          [["+Inf", -1]])[-1][1]]
+    if bad_rows:
+        problems.append(f"histogram count != +Inf bucket in "
+                        f"{[r['name'] for r in bad_rows]}")
+    # stream invariant: deltas never cost more than full checkpoints
+    published = OM.metric_total(snap, "publish_bytes_total")
+    full_equiv = OM.metric_total(snap, "publish_bytes_full_equiv_total")
+    if full_equiv > 0:
+        bound = full_equiv * (max_publish_ratio
+                              if max_publish_ratio is not None else 1.0)
+        if published > bound:
+            problems.append(
+                f"publish_bytes_total {published:.0f} > "
+                f"{bound:.0f} (= {max_publish_ratio or 1.0} x "
+                f"full-equivalent {full_equiv:.0f})")
+    elif "stream" in require:
+        problems.append("stream required but no "
+                        "publish_bytes_full_equiv_total samples")
+    if "serve" in require:
+        requests = [r for r in snap.get("events", ())
+                    if r.get("kind") == "request"]
+        if not requests:
+            problems.append("serve required but no per-request records "
+                            "(kind='request' events)")
+        for r in requests:
+            missing = [f for f in REQUEST_FIELDS
+                       if f not in r.get("data", {})]
+            if missing:
+                problems.append(f"request event seq={r.get('seq')} "
+                                f"missing fields {missing}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate an exported repro.observe metrics snapshot")
+    ap.add_argument("snapshot", help="path from metrics.save_snapshot "
+                                     "(with or without .jsonl)")
+    ap.add_argument("--require", nargs="*", default=[],
+                    choices=list(OM.SUBSYSTEMS),
+                    help="subsystems the snapshot must cover")
+    ap.add_argument("--max-publish-ratio", type=float, default=None,
+                    help="tighten publish_bytes_total <= RATIO x "
+                         "full-checkpoint-equivalent bytes (default 1.0)")
+    args = ap.parse_args(argv)
+    try:
+        snap = OM.load_snapshot(args.snapshot)
+    except (OSError, ValueError) as e:
+        print(f"metrics-check: cannot load {args.snapshot}: {e}")
+        return 1
+    problems = validate(snap, require=tuple(args.require),
+                        max_publish_ratio=args.max_publish_ratio)
+    for p in problems:
+        print(f"metrics-check: FAIL {p}")
+    if not problems:
+        meta = snap["meta"]
+        print(f"metrics-check: OK {args.snapshot} — "
+              f"{meta['counts']['metrics']} metric rows, "
+              f"{meta['counts']['events']} events, "
+              f"subsystems={meta['subsystems']}")
+    return len(problems)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

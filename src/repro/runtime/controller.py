@@ -117,9 +117,31 @@ class ReplanController:
                  schedule=None, comm_probe: Callable | None = None,
                  run: RunConfig | None = None,
                  triggers: Sequence | None = None,
-                 trace_source: Callable | None = None):
+                 trace_source: Callable | None = None,
+                 metrics=None, events=None):
+        from repro.observe import events as OE
+        from repro.observe import metrics as OM
         if cfg.train_mode == "dense":
             raise ValueError("nothing to re-plan for train_mode='dense'")
+        self._metrics = metrics if metrics is not None \
+            else OM.default_registry()
+        self._events = events if events is not None else OE.default_events()
+        self._m_triggers = self._metrics.counter(
+            "replan_triggers_total",
+            "Trigger firings, by trigger name.", ("trigger",))
+        self._m_replans = self._metrics.counter(
+            "replan_events_total",
+            "Re-plan decisions, by hysteresis outcome.", ("swapped",))
+        self._m_improvement = self._metrics.gauge(
+            "replan_improvement",
+            "Last re-plan's predicted relative improvement.")
+        self._m_t_pred = self._metrics.gauge(
+            "replan_t_pred_seconds",
+            "Last re-plan's predicted iteration time.", ("which",))
+        self._m_step_s = self._metrics.histogram(
+            "replan_step_seconds",
+            "Step time as the controller's telemetry saw it "
+            "(trace-attributed when a trace_source is set).")
         run = run or RunConfig()
         self.cfg, self.mesh = cfg, mesh
         self.rcfg = rcfg or RuntimeConfig()
@@ -184,6 +206,10 @@ class ReplanController:
             self.telemetry.tick(self._step_count, (state, metrics))
         fired = self._fired_triggers()
         if fired:
+            for name in fired:
+                self._m_triggers.inc(trigger=name)
+                self._events.emit("trigger", step=self._step_count,
+                                  name=name)
             # drain in-flight async dispatches before probing the wire —
             # collectives contending with unfinished step work would
             # inflate the α/β fit and could trigger a spurious swap
@@ -205,6 +231,7 @@ class ReplanController:
         self._last_trace_step = int(step_no)
         if t_step > 0.0:
             self.telemetry.record_step(int(step_no), t_step)
+            self._m_step_s.observe(t_step)
         if samples:
             self.telemetry.record_comm(samples)
         return t_step > 0.0
@@ -378,6 +405,18 @@ class ReplanController:
                           overlap=float(pred["overlap"]), hw_name=hw.name,
                           trigger=str(trigger))
         self.history.append(event)
+        self._m_replans.inc(swapped=str(swapped).lower())
+        self._m_improvement.set(event.improvement)
+        self._m_t_pred.set(event.t_pred_current, which="current")
+        self._m_t_pred.set(event.t_pred_candidate, which="candidate")
+        self._events.emit("replan", step=int(step_no),
+                          swapped=swapped,
+                          improvement=event.improvement,
+                          t_pred_current=event.t_pred_current,
+                          t_pred_candidate=event.t_pred_candidate,
+                          overlap=event.overlap, hw=hw.name,
+                          trigger=event.trigger,
+                          source=self.measurement_source)
         ctx = self._trigger_ctx()
         for t in self.triggers:
             t.notify_replan(ctx, event)

@@ -18,8 +18,10 @@ from repro.stream.codec import (DeltaCodec, DeltaPacket, load_packet,
                                 packet_path, save_packet, tree_fingerprint)
 from repro.stream.guard import RolloutGuard, quality_probe
 from repro.stream.publisher import StreamPublisher
-from repro.stream.subscriber import ServeSession
+from repro.stream.subscriber import (RequestRecord, ServeSession,
+                                     cache_regime)
 
 __all__ = ["DeltaCodec", "DeltaPacket", "load_packet", "packet_path",
            "save_packet", "tree_fingerprint", "RolloutGuard",
-           "quality_probe", "StreamPublisher", "ServeSession"]
+           "quality_probe", "StreamPublisher", "ServeSession",
+           "RequestRecord", "cache_regime"]

@@ -63,7 +63,9 @@ class RolloutGuard:
     """
 
     def __init__(self, eval_fn, cfg: AnomalyConfig | None = None,
-                 history: int = 64):
+                 history: int = 64, metrics=None, events=None):
+        from repro.observe import events as OE
+        from repro.observe import metrics as OM
         self.eval_fn = eval_fn
         self.detector = StepTimeAnomalyDetector(cfg or
                                                 default_guard_config())
@@ -72,21 +74,37 @@ class RolloutGuard:
         self.halted = False
         self.pinned_version: int | None = None
         self.anomaly: Anomaly | None = None
+        reg = metrics if metrics is not None else OM.default_registry()
+        self._events = events if events is not None else OE.default_events()
+        self._m_nll = reg.gauge(
+            "guard_nll", "Held-out NLL of the last scored candidate.")
+        self._m_evals = reg.counter(
+            "guard_evals_total", "Candidate updates scored.")
+        self._m_trips = reg.counter(
+            "guard_trips_total", "Quality change-point firings (halts).")
 
     def observe(self, version: int, params) -> Anomaly | None:
         """Score one candidate (version, params); fire on a quality jump."""
         nll = float(self.eval_fn(params))
         self.samples.append(QualitySample(step=int(version), t_step=nll))
+        self._m_nll.set(nll)
+        self._m_evals.inc()
         anomaly = self.detector.observe(self.samples)
         if anomaly is not None:
             self.anomaly = anomaly
             self.halted = True
+            self._m_trips.inc()
+            self._events.emit("guard_trip", step=int(version), nll=nll,
+                              score=float(anomaly.score),
+                              nll_recent=float(anomaly.t_recent),
+                              nll_ref=float(anomaly.t_ref))
         return anomaly
 
     def pin(self, version: int) -> None:
         """Record the last-good version (the subscriber's live params)."""
         self.pinned_version = int(version)
         self.halted = True
+        self._events.emit("guard_pin", step=int(version))
 
     def allow(self, version: int | None = None) -> bool:
         return not self.halted
@@ -98,6 +116,8 @@ class RolloutGuard:
     def resume(self) -> None:
         """Operator override after a halt (e.g. post-resync): unlatch and
         re-base the detector on the next samples."""
+        self._events.emit("guard_resume",
+                          step=int(self.pinned_version or 0))
         self.halted = False
         self.anomaly = None
         self.pinned_version = None

@@ -49,9 +49,25 @@ class StreamPublisher:
                  compressor: str = "topk_exact",
                  value_dtype: str = "float32",
                  out_dir: str | None = None,
-                 hw=None, p: int = 2, c_upper: float = 1e6):
+                 hw=None, p: int = 2, c_upper: float = 1e6,
+                 metrics=None, events=None):
+        from repro.observe import events as OE
+        from repro.observe import metrics as OM
         self.codec = CD.DeltaCodec(params_like, compressor=compressor,
                                    value_dtype=value_dtype)
+        reg = metrics if metrics is not None else OM.default_registry()
+        self._events = events if events is not None else OE.default_events()
+        self._m_packets = reg.counter(
+            "publish_packets_total", "Published delta/full packets.",
+            ("kind",))
+        self._m_bytes = reg.counter(
+            "publish_bytes_total", "Wire bytes actually streamed.",
+            ("kind",))
+        self._m_full_equiv = reg.counter(
+            "publish_bytes_full_equiv_total",
+            "What the same cadence would have cost in full checkpoints.")
+        self._m_version = reg.gauge(
+            "publish_version", "Latest published packet version.")
         self.every = int(every)
         self.flush_every = int(flush_every)
         self.out_dir = out_dir
@@ -159,6 +175,12 @@ class StreamPublisher:
         self.bytes_streamed += pkt.nbytes
         self.n_publishes += 1
         self.packets.append(pkt)
+        self._m_packets.inc(kind=kind)
+        self._m_bytes.inc(pkt.nbytes, kind=kind)
+        self._m_full_equiv.inc(self.codec.full_bytes)
+        self._m_version.set(version)
+        self._events.emit("publish", step=int(step), version=version,
+                          packet_kind=kind, nbytes=int(pkt.nbytes))
         if self.out_dir:
             self.packet_paths.append(CD.save_packet(self.out_dir, pkt))
         return pkt

@@ -17,7 +17,11 @@ buffer that delta packets update in place between decode steps:
 
 Applies, prefills, decodes, resyncs and guard evals are annotated with
 the ``serve/`` vocabulary of ``repro.observe.names`` so serve-side traces
-attribute the same way train-side ones do.
+attribute the same way train-side ones do — and every :meth:`generate`
+call emits a :class:`RequestRecord` (prefill latency, decode tokens/s,
+applied weight version, cache regime, jit-cache hit/miss) onto the
+metrics/event plane (``repro.observe.metrics`` / ``.events``) under the
+same ``serve/<kind>/<label>?version=`` names.
 
 Staleness note: between packets the subscriber serves weights up to one
 publish interval old — the asynchronous-sparsification setting whose
@@ -34,13 +38,56 @@ from repro.observe import trace
 from repro.stream import codec as CD
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """Per-request serving telemetry, one per :meth:`ServeSession.generate`.
+
+    ``prefill_s`` includes the prefill→decode cache handoff
+    (``engine.pad_states_for_decode``) and the device sync; ``decode_s``
+    covers the full greedy loop, so ``decode_tok_s`` is generated tokens
+    per wall second across the whole batch (``batch * n_tokens /
+    decode_s``).  ``version`` is the weight-stream version the request
+    was served from, ``cache`` the cache regime (full | ring | ssm |
+    hybrid | xlstm), and ``prefill_jit``/``decode_jit`` record whether
+    the (kind, len, batch)-keyed jit cache already held the step
+    (``hit``) or had to build it (``miss`` — compile included in the
+    latency)."""
+    index: int
+    batch: int
+    prompt_len: int
+    n_tokens: int
+    prefill_s: float
+    decode_s: float
+    decode_tok_s: float
+    version: int
+    cache: str
+    prefill_jit: str
+    decode_jit: str
+
+
+def cache_regime(cfg) -> str:
+    """Cache-regime label for :class:`RequestRecord` (which state layout
+    the decode loop carries between steps)."""
+    if cfg.xlstm_pattern:
+        return "xlstm"
+    if cfg.attn_period:
+        return "hybrid"
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.sliding_window or cfg.local_global_period:
+        return "ring"
+    return "full"
+
+
 class ServeSession:
     """A served model following a :class:`StreamPublisher`'s packets."""
 
     def __init__(self, cfg, shape, params, *, mesh=None, chunk: int = 64,
-                 guard=None):
+                 guard=None, metrics=None, events=None):
         from repro.launch import mesh as M
         from repro.launch import serve as SV
+        from repro.observe import events as OE
+        from repro.observe import metrics as OM
         self.mesh = mesh if mesh is not None else M.make_host_mesh(
             data=1, model=1)
         self.raw_cfg = cfg
@@ -54,7 +101,31 @@ class ServeSession:
         self.guard = guard
         self.needs_resync = False
         self.log: list[dict] = []      # one row per packet offered
+        self.requests: list[RequestRecord] = []
         self._steps: dict = {}         # (kind, key) -> jitted fn cache
+        reg = metrics if metrics is not None else OM.default_registry()
+        self._events = events if events is not None else OE.default_events()
+        self._m_requests = reg.counter(
+            "serve_requests_total", "Generate requests served.",
+            ("cache",))
+        self._m_tokens = reg.counter(
+            "serve_tokens_total", "Tokens generated (batch x steps).")
+        self._m_prefill_s = reg.histogram(
+            "serve_prefill_seconds",
+            "Prefill latency incl. the decode-cache handoff.")
+        self._m_tok_s = reg.gauge(
+            "serve_decode_tokens_per_second",
+            "Last request's decode throughput (batch-aggregate).")
+        self._m_version = reg.gauge(
+            "serve_version", "Weight-stream version currently applied.")
+        self._m_packets = reg.counter(
+            "serve_packets_total", "Packets offered, by outcome.",
+            ("status",))
+        self._m_jit = reg.counter(
+            "serve_jit_cache_total",
+            "(kind, len, batch) jit-cache lookups.", ("kind", "event"))
+        self._m_resyncs = reg.counter(
+            "serve_resyncs_total", "Full-checkpoint resyncs.")
 
     # -- stream ingestion ---------------------------------------------------
     def apply_packet(self, packet: CD.DeltaPacket) -> str:
@@ -67,6 +138,12 @@ class ServeSession:
         status = self._apply_packet(packet)
         self.log.append({"version": packet.version, "kind": packet.kind,
                          "nbytes": packet.nbytes, "status": status})
+        self._m_packets.inc(status=status)
+        if status == "applied":
+            self._m_version.set(self.version)
+        self._events.emit("apply", step=int(packet.step),
+                          version=int(packet.version),
+                          packet_kind=packet.kind, status=status)
         return status
 
     def _apply_packet(self, packet: CD.DeltaPacket) -> str:
@@ -115,49 +192,99 @@ class ServeSession:
             self.params = io.restore(path, {"params": self.params})["params"]
             self.version = int(meta["version"])
             self.needs_resync = False
+        self._m_resyncs.inc()
+        self._m_version.set(self.version)
+        self._events.emit("resync", step=int(meta.get("step", -1)),
+                          version=self.version)
         return self.version
 
     # -- serving ------------------------------------------------------------
-    def _prefill_fn(self, prompt_len: int, batch: int):
-        key = ("prefill", prompt_len, batch)
-        if key not in self._steps:
-            from repro.launch import serve as SV
-            shape = dataclasses.replace(self.shape, seq_len=prompt_len,
-                                        global_batch=batch, kind="prefill")
+    def _cached_step(self, kind: str, key: tuple) -> tuple:
+        """(step_fn, "hit" | "miss") from the (kind, len, batch) cache."""
+        if key in self._steps:
+            self._m_jit.inc(kind=kind, event="hit")
+            return self._steps[key], "hit"
+        from repro.launch import serve as SV
+        if kind == "prefill":
+            shape = dataclasses.replace(self.shape, seq_len=key[1],
+                                        global_batch=key[2], kind="prefill")
             self._steps[key], _ = SV.make_prefill_step(
                 self.raw_cfg, self.mesh, shape, chunk=self.chunk)
-        return self._steps[key]
-
-    def _serve_fn(self, capacity: int, batch: int):
-        key = ("decode", capacity, batch)
-        if key not in self._steps:
-            from repro.launch import serve as SV
-            shape = dataclasses.replace(self.shape, seq_len=capacity,
-                                        global_batch=batch, kind="decode")
+        else:
+            shape = dataclasses.replace(self.shape, seq_len=key[1],
+                                        global_batch=key[2], kind="decode")
             self._steps[key], _ = SV.make_serve_step(
                 self.raw_cfg, self.mesh, shape, chunk=self.chunk)
-        return self._steps[key]
+        self._m_jit.inc(kind=kind, event="miss")
+        return self._steps[key], "miss"
+
+    def _prefill_fn(self, prompt_len: int, batch: int):
+        return self._cached_step("prefill",
+                                 ("prefill", prompt_len, batch))[0]
+
+    def _serve_fn(self, capacity: int, batch: int):
+        return self._cached_step("decode", ("decode", capacity, batch))[0]
 
     def generate(self, prompts, n_tokens: int):
         """Prefill ``prompts`` (B, L) once, hand the caches to decode, and
-        greedily generate ``n_tokens``.  Returns (B, n_tokens) int32."""
+        greedily generate ``n_tokens``.  Returns (B, n_tokens) int32.
+
+        Appends one :class:`RequestRecord` to :attr:`requests` and emits a
+        ``request`` event under ``serve/request/b{B}xn{N}?version=``."""
+        import time
+
         from repro.serving import engine
         b, prompt_len = prompts.shape
         capacity = prompt_len + n_tokens
+        version = self.version
+        regime = cache_regime(self.raw_cfg)
+        t0 = time.perf_counter()
+        prefill, prefill_jit = self._cached_step(
+            "prefill", ("prefill", prompt_len, b))
         with trace.annotation(names.serve_name(
-                "prefill", f"b{b}xl{prompt_len}", version=self.version)):
-            logits, states = self._prefill_fn(prompt_len, b)(
+                "prefill", f"b{b}xl{prompt_len}", version=version)):
+            logits, states = prefill(
                 self.params, {"tokens": jnp.asarray(prompts, jnp.int32)})
             states = engine.pad_states_for_decode(self.cfg, states,
                                                   prompt_len, capacity)
-        step = self._serve_fn(capacity, b)
+            logits.block_until_ready()
+        prefill_s = time.perf_counter() - t0
+        step, decode_jit = self._cached_step("decode",
+                                             ("decode", capacity, b))
         out = []
+        t1 = time.perf_counter()
         with trace.annotation(names.serve_name(
-                "decode", f"b{b}xn{n_tokens}", version=self.version)):
+                "decode", f"b{b}xn{n_tokens}", version=version)):
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
             for i in range(n_tokens):
                 out.append(tok)
                 logits, states = step(self.params, tok, states,
                                       jnp.int32(prompt_len + i))
                 tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        return jnp.concatenate(out, axis=1)
+            tokens = jnp.concatenate(out, axis=1)
+            tokens.block_until_ready()
+        decode_s = time.perf_counter() - t1
+        decode_tok_s = (b * n_tokens) / max(decode_s, 1e-9)
+        rec = RequestRecord(index=len(self.requests), batch=int(b),
+                            prompt_len=int(prompt_len),
+                            n_tokens=int(n_tokens),
+                            prefill_s=float(prefill_s),
+                            decode_s=float(decode_s),
+                            decode_tok_s=float(decode_tok_s),
+                            version=int(version), cache=regime,
+                            prefill_jit=prefill_jit, decode_jit=decode_jit)
+        self.requests.append(rec)
+        self._m_requests.inc(cache=regime)
+        self._m_tokens.inc(b * n_tokens)
+        self._m_prefill_s.observe(prefill_s)
+        self._m_tok_s.set(decode_tok_s)
+        self._events.emit(
+            "request", step=rec.index,
+            name=names.serve_name("request", f"b{b}xn{n_tokens}",
+                                  version=version),
+            prefill_s=rec.prefill_s, decode_tok_s=rec.decode_tok_s,
+            version=rec.version, cache=regime,
+            prefill_jit=prefill_jit, decode_jit=decode_jit,
+            batch=rec.batch, prompt_len=rec.prompt_len,
+            n_tokens=rec.n_tokens)
+        return tokens

@@ -1,0 +1,437 @@
+"""repro.observe.metrics / .events / .check: the one metrics & event
+plane across train, replan, stream and serve.
+
+Covers the registry semantics (get-or-create, label sorting, counter
+monotonicity, histogram bucketing), BOTH exporters against golden files
+(Prometheus text format and the JSONL snapshot artifact — stable metric
+names, label order, escaping), snapshot determinism (two identical
+fake-trace-driven controller runs export byte-identical snapshots), the
+``check.validate`` CI gate, and the four-subsystem acceptance round trip
+(one ``Session.run(publisher=...)`` + ``ServeSession.generate`` export
+carries train, replan, stream and serve in a single snapshot).
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.observe import check
+from repro.observe import events as OE
+from repro.observe import metrics as OM
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_inc_value_total(self):
+        reg = OM.MetricsRegistry()
+        c = reg.counter("train_steps_total", "steps", ("mode",))
+        c.inc(mode="lags_dp")
+        c.inc(2, mode="lags_hier")
+        assert c.value(mode="lags_dp") == 1
+        assert c.value(mode="lags_hier") == 2
+        assert c.total() == 3
+
+    def test_counter_rejects_negative(self):
+        c = OM.MetricsRegistry().counter("train_x_total")
+        with pytest.raises(ValueError, match="only go up"):
+            c.inc(-1)
+
+    def test_gauge_set_overwrites(self):
+        g = OM.MetricsRegistry().gauge("serve_version")
+        g.set(3)
+        g.set(7)
+        assert g.value() == 7
+
+    def test_get_or_create_same_object(self):
+        reg = OM.MetricsRegistry()
+        a = reg.counter("publish_packets_total", "p", ("kind",))
+        b = reg.counter("publish_packets_total", "p", ("kind",))
+        assert a is b
+
+    def test_kind_mismatch_raises(self):
+        reg = OM.MetricsRegistry()
+        reg.counter("train_steps_total")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("train_steps_total")
+
+    def test_labelnames_mismatch_raises(self):
+        reg = OM.MetricsRegistry()
+        reg.counter("train_steps_total", "s", ("mode",))
+        with pytest.raises(ValueError, match="label names"):
+            reg.counter("train_steps_total", "s", ("other",))
+
+    def test_label_declaration_order_irrelevant(self):
+        # ("b", "a") and ("a", "b") declare the same metric: labelnames
+        # are sorted at declaration so export order is deterministic
+        reg = OM.MetricsRegistry()
+        c = reg.counter("serve_jit_cache_total", "j", ("kind", "event"))
+        assert c is reg.counter("serve_jit_cache_total", "j",
+                                ("event", "kind"))
+        assert c.labelnames == ("event", "kind")
+
+    def test_wrong_labels_at_sample_time_raise(self):
+        c = OM.MetricsRegistry().counter("train_steps_total", "s", ("mode",))
+        with pytest.raises(ValueError, match="got labels"):
+            c.inc(mode="x", extra="y")
+        with pytest.raises(ValueError, match="got labels"):
+            c.inc()
+
+    def test_histogram_buckets_and_inf(self):
+        h = OM.MetricsRegistry().histogram("train_step_seconds", "t",
+                                           buckets=(0.01, 0.1, 1.0))
+        for v in (0.005, 0.05, 0.5, 2.0):     # one per bucket + overflow
+            h.observe(v)
+        ((_, cell),) = h.items()
+        cum = h.cumulative(cell)
+        assert cum == [("0.01", 1), ("0.1", 2), ("1", 3), ("+Inf", 4)]
+        assert cell.count == 4
+        assert cell.sum == pytest.approx(2.555)
+
+    def test_subsystem_mapping(self):
+        assert OM.subsystem("train_steps_total") == "train"
+        assert OM.subsystem("replan_triggers_total") == "replan"
+        assert OM.subsystem("publish_bytes_total") == "stream"
+        assert OM.subsystem("guard_nll") == "stream"
+        assert OM.subsystem("serve_requests_total") == "serve"
+        assert OM.subsystem("foreign_metric") is None
+
+    def test_subsystems_only_counts_sampled(self):
+        reg = OM.MetricsRegistry()
+        reg.counter("train_steps_total")            # declared, no samples
+        reg.counter("guard_evals_total").inc()
+        assert reg.subsystems() == ["stream"]
+
+    def test_fmt_value(self):
+        assert OM.fmt_value(3.0) == "3"
+        assert OM.fmt_value(0.25) == "0.25"
+        assert OM.fmt_value(float("inf")) == "+Inf"
+        assert OM.fmt_value(float("-inf")) == "-Inf"
+        assert OM.fmt_value(123.5) == "123.5"
+
+
+class TestEventLog:
+    def test_emit_orders_and_filters(self):
+        log = OE.EventLog()
+        log.emit("trigger", step=3, name="cadence")
+        log.emit("publish", step=4, version=1)
+        assert [e.seq for e in log.events()] == [0, 1]
+        assert [e.kind for e in log.events("publish")] == ["publish"]
+        assert log.last("trigger").name == "cadence"
+
+    def test_bad_payload_fails_at_emit(self):
+        log = OE.EventLog()
+        with pytest.raises(TypeError):
+            log.emit("publish", step=0, payload=object())
+        assert len(log) == 0
+
+    def test_bounded_ring(self):
+        log = OE.EventLog(capacity=2)
+        for i in range(5):
+            log.emit("trigger", step=i)
+        assert [e.step for e in log.events()] == [3, 4]
+        assert log.events()[-1].seq == 4     # seq keeps counting
+
+    def test_row_roundtrip(self):
+        ev = OE.EventLog().emit("replan", step=7, swapped=True,
+                                trigger="anomaly[step_time]")
+        assert OE.Event.from_row(ev.to_row()) == ev
+
+    def test_kind_subsystem_mapping(self):
+        assert OE.subsystem_of_kind("trigger") == "replan"
+        assert OE.subsystem_of_kind("publish") == "stream"
+        assert OE.subsystem_of_kind("guard_trip") == "stream"
+        assert OE.subsystem_of_kind("request") == "serve"
+        assert OE.subsystem_of_kind("unknown") is None
+
+
+# ---------------------------------------------------------------------------
+# golden exporters: the byte-stable wire formats
+# ---------------------------------------------------------------------------
+
+def _golden_plane():
+    """A fixed plane exercising every row shape: all three metric kinds,
+    labelled + unlabelled cells, escaping (backslash, quote, newline),
+    and one event per subsystem."""
+    reg, evs = OM.MetricsRegistry(), OE.EventLog()
+    c = reg.counter("train_steps_total", "Train steps run.", ("mode",))
+    c.inc(mode="lags_dp")
+    c.inc(2, mode="lags_hier")
+    reg.gauge("serve_decode_tokens_per_second",
+              "Decode throughput.").set(123.5)
+    b = reg.counter("publish_bytes_total", "Wire bytes streamed.",
+                    ("kind",))
+    b.inc(1024, kind="delta")
+    b.inc(4096, kind="full")
+    reg.counter("publish_bytes_full_equiv_total",
+                "Full-checkpoint-equivalent bytes.").inc(8192)
+    h = reg.histogram("replan_step_seconds", "Attributed step seconds.",
+                      buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 2.0):
+        h.observe(v)
+    reg.gauge("train_loss", 'Loss with a "weird" label\nvalue.',
+              ("mode",)).set(1.5, mode='lags\\dp "quoted"\nnewline')
+    evs.emit("trigger", step=3, name="cadence")
+    evs.emit("replan", step=3, swapped=True, improvement=0.25,
+             trigger="cadence")
+    evs.emit("publish", step=4, version=2, packet_kind="delta",
+             nbytes=1024)
+    evs.emit("request", step=0, name="serve/request/b2xn4?version=2",
+             prefill_s=0.125, decode_tok_s=64.0, version=2)
+    return reg, evs
+
+
+class TestGoldenExports:
+    def test_prometheus_text_matches_golden(self):
+        reg, _ = _golden_plane()
+        with open(os.path.join(GOLDEN, "metrics.prom")) as f:
+            assert reg.to_prometheus() == f.read()
+
+    def test_jsonl_snapshot_matches_golden(self, tmp_path):
+        reg, evs = _golden_plane()
+        path = OM.save_snapshot(str(tmp_path / "snap"), reg, evs,
+                                meta={"suite": "golden"})
+        with open(path) as got, \
+                open(os.path.join(GOLDEN, "snapshot.jsonl")) as want:
+            assert got.read() == want.read()
+        # the .prom neighbor is the same bytes as to_prometheus()
+        with open(str(tmp_path / "snap") + ".prom") as got, \
+                open(os.path.join(GOLDEN, "metrics.prom")) as want:
+            assert got.read() == want.read()
+
+    def test_snapshot_roundtrip_and_validate(self, tmp_path):
+        reg, evs = _golden_plane()
+        path = OM.save_snapshot(str(tmp_path / "snap"), reg, evs)
+        snap = OM.load_snapshot(path)
+        assert snap["meta"]["subsystems"] == ["replan", "serve", "stream",
+                                              "train"]
+        assert OM.metric_total(snap, "publish_bytes_total") == 5120
+        assert check.validate(snap, require=("train", "replan", "stream",
+                                             "serve")) == []
+
+
+# ---------------------------------------------------------------------------
+# check.validate: the CI gate
+# ---------------------------------------------------------------------------
+
+class TestValidate:
+    def _snap(self, tmp_path):
+        reg, evs = _golden_plane()
+        return OM.load_snapshot(OM.save_snapshot(str(tmp_path / "s"),
+                                                 reg, evs))
+
+    def test_schema_mismatch(self, tmp_path):
+        snap = self._snap(tmp_path)
+        snap["meta"]["schema"] = 999
+        assert any("schema" in p for p in check.validate(snap))
+
+    def test_sidecar_count_mismatch(self, tmp_path):
+        snap = self._snap(tmp_path)
+        snap["metrics"].pop()
+        assert any("sidecar counts" in p for p in check.validate(snap))
+
+    def test_missing_required_subsystem(self, tmp_path):
+        snap = self._snap(tmp_path)
+        snap["metrics"] = [r for r in snap["metrics"]
+                           if not r["name"].startswith("train")]
+        snap["meta"]["counts"]["metrics"] = len(snap["metrics"])
+        snap["meta"]["subsystems"].remove("train")
+        assert any("required subsystem 'train'" in p
+                   for p in check.validate(snap, require=("train",)))
+
+    def test_overclaimed_subsystem(self, tmp_path):
+        snap = self._snap(tmp_path)
+        snap["metrics"] = [r for r in snap["metrics"]
+                           if not r["name"].startswith("train")]
+        snap["meta"]["counts"]["metrics"] = len(snap["metrics"])
+        assert any("over" in p or "uncovered" in p
+                   for p in check.validate(snap))
+
+    def test_publish_ratio_bound(self, tmp_path):
+        snap = self._snap(tmp_path)
+        assert check.validate(snap, max_publish_ratio=0.9) == []
+        probs = check.validate(snap, max_publish_ratio=0.1)
+        assert any("publish_bytes_total" in p for p in probs)
+
+    def test_histogram_count_invariant(self, tmp_path):
+        snap = self._snap(tmp_path)
+        for r in snap["metrics"]:
+            if r["kind"] == "histogram":
+                r["count"] += 1
+        assert any("histogram count" in p for p in check.validate(snap))
+
+    def test_request_fields_required_for_serve(self, tmp_path):
+        snap = self._snap(tmp_path)
+        for r in snap["events"]:
+            if r["kind"] == "request":
+                del r["data"]["decode_tok_s"]
+        probs = check.validate(snap, require=("serve",))
+        assert any("missing fields" in p for p in probs)
+
+    def test_cli_exit_code(self, tmp_path):
+        reg, evs = _golden_plane()
+        path = OM.save_snapshot(str(tmp_path / "cli"), reg, evs)
+        assert check.main([path, "--require", "train", "serve"]) == 0
+        assert check.main([path, "--max-publish-ratio", "0.1"]) == 1
+        assert check.main([str(tmp_path / "missing")]) == 1
+
+
+# ---------------------------------------------------------------------------
+# determinism: identical fake-trace runs -> byte-identical snapshots
+# ---------------------------------------------------------------------------
+
+def _model_cfg(mode="lags_dp"):
+    from repro.configs import base
+    return dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+        dtype="float32", param_dtype="float32",
+        train_mode=mode, compression_ratio=1.0)
+
+
+def _trace_driven_snapshot(out: str) -> str:
+    """One fake-trace-driven controller run -> snapshot path.  Every
+    recorded quantity (attributed step seconds, trigger fires, replan
+    predictions) comes from the deterministic α-β wire model — no wall
+    clock anywhere."""
+    from repro.api import RunConfig
+    from repro.autotune import profiler
+    from repro.core import comm_model as cm
+    from repro.launch import mesh as M
+    from repro.observe import trace as OT
+    from repro.runtime.controller import ReplanController, RuntimeConfig
+
+    slow = cm.Hardware(name="degraded", alpha=50e-3, beta=1e-6,
+                       flops=cm.TPU_V5E_ICI.flops)
+    reg, evs = OM.MetricsRegistry(), OE.EventLog()
+    ctl = ReplanController(
+        _model_cfg(), M.make_host_mesh(data=1, model=1),
+        rcfg=RuntimeConfig(replan_every=100, fence_every=1,
+                           swap_threshold=0.05, min_step_samples=1),
+        comm_probe=lambda mesh, axes: [],
+        run=RunConfig(chunk=16, loss_chunk=16),
+        metrics=reg, events=evs)
+    ctl.meta["n_workers"] = 8   # single-device mesh: pretend 8 workers
+    fake = OT.FakeTraceBackend(
+        profiler.apportion_backward(ctl._leaf_template, 0.040),
+        wires={"flat": slow}, tier_workers={"flat": 8}, t_forward=0.020,
+        schedule_fn=lambda: ctl.schedule)
+    for i in range(1, 4):
+        ctl.ingest_trace(i, fake.capture(i))
+    ctl.maybe_replan(3, trigger="determinism-test")
+    return OM.save_snapshot(out, reg, evs, meta={"run": "determinism"})
+
+
+class TestDeterminism:
+    def test_two_identical_runs_export_identical_bytes(self, tmp_path):
+        a = _trace_driven_snapshot(str(tmp_path / "a" / "snap"))
+        b = _trace_driven_snapshot(str(tmp_path / "b" / "snap"))
+        for suffix in (".jsonl", ".prom", ".json"):
+            pa = a.removesuffix(".jsonl") + suffix
+            pb = b.removesuffix(".jsonl") + suffix
+            with open(pa, "rb") as fa, open(pb, "rb") as fb:
+                assert fa.read() == fb.read(), suffix
+        snap = OM.load_snapshot(a)
+        assert OM.metric_total(snap, "replan_events_total") == 1
+        assert [e["kind"] for e in snap["events"]] == ["replan"]
+        assert snap["events"][0]["data"]["swapped"] is True
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one round trip, one snapshot, all four subsystems
+# ---------------------------------------------------------------------------
+
+class TestFourSubsystemRoundTrip:
+    def test_single_snapshot_covers_train_replan_stream_serve(
+            self, tmp_path):
+        from repro import api
+        from repro.autotune import profiler
+        from repro.configs import base
+        from repro.core import comm_model as cm
+        from repro.data import synthetic
+        from repro.launch import mesh as M
+        from repro.observe import trace as OT
+        from repro.runtime.controller import RuntimeConfig
+        from repro.stream import ServeSession, StreamPublisher
+
+        cfg = _model_cfg()
+        mesh = M.make_host_mesh(data=1, model=1)
+        reg, evs = OM.MetricsRegistry(), OE.EventLog()
+        sess = api.Session(
+            cfg, api.RunConfig(mode="lags_dp", ratio=8.0, lr=0.25,
+                               chunk=16, loss_chunk=16, donate=False),
+            mesh=mesh)
+        ctl = sess.controller(
+            rcfg=RuntimeConfig(replan_every=2, fence_every=1,
+                               swap_threshold=0.05, min_step_samples=1),
+            comm_probe=lambda mesh, axes: [],
+            metrics=reg, events=evs)
+        ctl.meta["n_workers"] = 8
+        slow = cm.Hardware(name="degraded", alpha=50e-3, beta=1e-6,
+                           flops=cm.TPU_V5E_ICI.flops)
+        fake = OT.FakeTraceBackend(
+            profiler.apportion_backward(ctl._leaf_template, 0.040),
+            wires={"flat": slow}, tier_workers={"flat": 8},
+            t_forward=0.020, schedule_fn=lambda: ctl.schedule)
+        ctl.trace_source = fake.capture
+
+        data = synthetic.MarkovLM(vocab=cfg.vocab, seed=3)
+        state, _ = sess.init_state()
+        pub = StreamPublisher(state["params"], every=2,
+                              budget_bytes=10_000,
+                              metrics=reg, events=evs)
+        state, history = sess.run(
+            lambda t: data.batch(t, 2, 16), 4, controller=ctl,
+            state=state, publisher=pub, metrics=reg, events=evs,
+            print_fn=lambda *a, **k: None)
+        pub.flush(4, state["params"])
+
+        # the run's row dict is a thin view over the plane: step_s is the
+        # unrounded perf_counter duration next to the historical field
+        assert all("step_s" in row and "elapsed_s" in row
+                   for row in history)
+        assert any(row["step_s"] != round(row["step_s"], 1)
+                   for row in history)
+
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                             state["params"])
+        sub = ServeSession(cfg, base.InputShape("serve", 16, 2, "decode"),
+                           zeros, mesh=mesh, chunk=16,
+                           metrics=reg, events=evs)
+        for pkt in pub.packets:
+            assert sub.apply_packet(pkt) == "applied"
+        prompts = data.batch(7, 2, 8)["tokens"]
+        toks = sub.generate(prompts, 2)
+        assert toks.shape == (2, 2)
+        sub.generate(prompts, 2)     # second request: jit caches warm
+
+        rec0, rec1 = sub.requests
+        assert rec0.prefill_jit == "miss" and rec0.decode_jit == "miss"
+        assert rec1.prefill_jit == "hit" and rec1.decode_jit == "hit"
+        assert rec0.version == sub.version and rec0.cache == "full"
+        assert rec0.decode_tok_s > 0
+
+        path = OM.save_snapshot(str(tmp_path / "round_trip"), reg, evs,
+                                meta={"suite": "acceptance"})
+        snap = OM.load_snapshot(path)
+        assert check.validate(
+            snap, require=("train", "replan", "stream", "serve"),
+            max_publish_ratio=1.0) == []
+        assert snap["meta"]["subsystems"] == ["replan", "serve", "stream",
+                                              "train"]
+        assert OM.metric_total(snap, "train_steps_total") == 4
+        assert OM.metric_total(snap, "serve_requests_total") == 2
+        kinds = {e["kind"] for e in snap["events"]}
+        assert {"trigger", "replan", "publish", "apply",
+                "request"} <= kinds
+        assert (OM.metric_total(snap, "publish_bytes_total")
+                <= OM.metric_total(snap,
+                                   "publish_bytes_full_equiv_total"))

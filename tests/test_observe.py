@@ -121,9 +121,9 @@ class TestFakeTrace:
         assert "allgather" in kinds
 
     def test_real_capture_smoke(self, tmp_path):
-        """jax.profiler capture wrapper: runs, returns a Trace, and
-        points at the artifact dir even when nothing is parseable on a
-        CPU host."""
+        """jax.profiler capture wrapper: runs, returns a Trace, points at
+        the artifact dir even when nothing is parseable on a CPU host,
+        and reports which decoder (if any) produced the events."""
         try:
             tr = OT.capture_jax_trace(lambda x: jnp.sum(x * x),
                                       jnp.arange(8.0),
@@ -132,6 +132,47 @@ class TestFakeTrace:
             pytest.skip(f"jax.profiler unavailable here: {e}")
         assert tr.meta["trace_dir"] == str(tmp_path)
         assert tr.meta["steps"] == 2
+        assert tr.meta["decoder"] in ("chrome", "xplane", "none")
+        assert tr.meta["parsed"] == (tr.meta["decoder"] != "none")
+
+    def test_decode_xplane_absent_plugin_is_empty(self, tmp_path,
+                                                  monkeypatch):
+        monkeypatch.setattr(OT, "_xplane_converter", lambda: None)
+        (tmp_path / "host.xplane.pb").write_bytes(b"\x00")
+        assert OT.decode_xplane(str(tmp_path)) == []
+
+    def test_decode_xplane_via_fake_plugin(self, tmp_path, monkeypatch):
+        """XPlane protos route through the (monkeypatched) TensorBoard
+        converter into the same grammar filter as a chrome trace — and
+        tolerate the newer plugin's (data, mimetype) return shape."""
+        import json as J
+        chrome = J.dumps({"traceEvents": [
+            {"name": names.bwd_name("layers/0/w"), "ph": "X",
+             "ts": 10.0, "dur": 2000.0},
+            {"name": "xla_op_fusion.3", "ph": "X", "ts": 0, "dur": 5},
+        ]})
+        seen = []
+
+        def fake_convert(paths, tool, params):
+            seen.append((tuple(paths), tool))
+            return (chrome, "application/json")
+
+        monkeypatch.setattr(OT, "_xplane_converter",
+                            lambda: fake_convert)
+        sub = tmp_path / "plugins" / "profile"
+        sub.mkdir(parents=True)
+        (sub / "host.xplane.pb").write_bytes(b"\x00")
+        events = OT.decode_xplane(str(tmp_path))
+        assert seen and seen[0][1] == "trace_viewer"
+        assert [e.name for e in events] == [names.bwd_name("layers/0/w")]
+        assert events[0].dur == pytest.approx(2e-3)
+
+    def test_decode_xplane_bad_proto_skipped(self, tmp_path, monkeypatch):
+        def boom(paths, tool, params):
+            raise RuntimeError("corrupt proto")
+        monkeypatch.setattr(OT, "_xplane_converter", lambda: boom)
+        (tmp_path / "host.xplane.pb").write_bytes(b"\x00")
+        assert OT.decode_xplane(str(tmp_path)) == []
 
 
 # ---------------------------------------------------------------------------
