@@ -11,6 +11,9 @@ checkpointing and a JSONL metrics log — the whole loop is one
   PYTHONPATH=src python examples/train_e2e.py --preset small --steps 50
   # online schedule re-planning (repro.runtime) every 50 steps:
   PYTHONPATH=src python examples/train_e2e.py --steps 300 --replan-every 50
+  # wave-pipelined exchange (repro.pipeline): per-bucket collectives
+  # launched inside backprop, bitwise-identical losses to --pipeline off:
+  PYTHONPATH=src python examples/train_e2e.py --steps 300 --pipeline wave
   # evidence-driven re-planning: a step-time anomaly (repro.observe)
   # re-plans immediately instead of waiting for the cadence boundary:
   PYTHONPATH=src python examples/train_e2e.py --steps 300 \
@@ -67,6 +70,12 @@ def main():
     ap.add_argument("--ratio", type=float, default=100.0)
     ap.add_argument("--method", default="lags_dp",
                     choices=["lags_dp", "lags_hier", "lags_hier2", "dense"])
+    ap.add_argument("--pipeline", default="off",
+                    choices=["off", "wave", "async1"],
+                    help="wave-pipelined exchange (repro.pipeline): "
+                         "'wave' launches each bucket's exchange inside "
+                         "backprop (bitwise-identical to 'off'); 'async1' "
+                         "double-buffers with one-step staleness")
     ap.add_argument("--ratio-inner", type=float, default=None,
                     help="intra-pod tier compression for --method "
                          "lags_hier2 (default: dense inner tier; a "
@@ -115,7 +124,8 @@ def main():
         cfg,
         api.RunConfig(mode=args.method, ratio=args.ratio,
                       ratio_inner=args.ratio_inner, lr=args.lr,
-                      schedule=schedule, chunk=min(1024, args.seq),
+                      schedule=schedule, pipeline=args.pipeline,
+                      chunk=min(1024, args.seq),
                       loss_chunk=min(512, args.seq), donate=False),
         mesh=mesh)
     controller = None
@@ -139,7 +149,9 @@ def main():
     print(f"arch={cfg.name} preset={args.preset}: {n_params / 1e6:.1f}M "
           f"params | mesh {mesh.devices.shape} {mesh.axis_names} | "
           f"mode={meta['mode']} workers={meta['n_workers']} "
-          f"c={args.ratio}", flush=True)
+          f"c={args.ratio} pipeline={args.pipeline}"
+          + (f" waves={meta['waves'].n_waves}"
+             if meta.get("waves") is not None else ""), flush=True)
 
     log_path = os.path.join(args.out, "metrics.jsonl")
     os.makedirs(args.out, exist_ok=True)

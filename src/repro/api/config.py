@@ -70,7 +70,20 @@ class RunConfig:
     lr: float = 0.01
     lr_schedule: Callable[[Any], Any] | None = None   # step -> lr
     momentum: float = 0.0
-    momentum_correction: float = 0.0   # DGC-style, sim path only
+    # DGC-style momentum correction: velocity accumulates BEFORE
+    # sparsification.  Reaches both surfaces via
+    # ``ExchangeSpec.init_extra_state`` (per-worker "mom" state).
+    momentum_correction: float = 0.0
+    # exchange pipelining (repro.pipeline): "off" = monolithic
+    # post-backward exchange; "wave" = per-wave exchange inside backprop
+    # (bitwise equal to "off"); "async1" = step-N exchange double-
+    # buffered against step-N+1 compute (one step of bounded staleness)
+    pipeline: str = "off"
+    # optional pre-planned repro.pipeline.WaveSchedule (names are
+    # re-bound at build time); None = geometry-default wave partition
+    waves: Any = None
+    # wave payload target in bytes; None = latency-matched default
+    wave_target_bytes: int | None = None
     # compute shape
     chunk: int = 1024
     loss_chunk: int = 512
@@ -82,6 +95,16 @@ class RunConfig:
     def __post_init__(self):
         if self.mode is not None:
             object.__setattr__(self, "mode", canonical_mode(self.mode))
+        if self.pipeline not in ("off", "wave", "async1"):
+            raise ValueError(
+                f"pipeline={self.pipeline!r} not in ('off', 'wave', "
+                f"'async1')")
+        if self.pipeline == "wave" and self.momentum_correction > 0.0:
+            # the wave taps form updates from raw cotangents inside
+            # backprop; the DGC velocity is a post-backward recurrence
+            raise ValueError(
+                "momentum_correction requires pipeline 'off' or 'async1' "
+                "(wave taps compute updates inside backprop)")
 
     def resolved_mode(self, cfg=None) -> str:
         """Canonical mode, falling back to ``cfg.train_mode``."""

@@ -77,6 +77,34 @@ class ExchangeSpec:
     # distributed-only layout hints (see lags.BlockLAGSExchange)
     row_axes: tuple = ()
     shard_dims: Any = None
+    # DGC-style momentum correction factor (velocity accumulates BEFORE
+    # sparsification); > 0 turns on the per-worker "mom" extra state
+    momentum_correction: float = 0.0
+
+    def init_extra_state(self, updates_like=None):
+        """Per-worker auxiliary exchange state beyond the EF residual.
+
+        The hook through which strategy-adjacent state (today: the DGC
+        momentum-correction velocity) reaches BOTH surfaces — the
+        distributed step builder and ``SimTrainer`` each call this once
+        and thread the result through their worker step, so adding a
+        stateful knob never means editing two state-spec builders.
+
+        Returns ``{name: zero-initialised f32 tree}`` in the per-worker
+        layout (leading axis = ``n_workers``, matching the EF residual);
+        empty when no knob is enabled.  ``updates_like`` defaults to
+        ``params_like``.  Shape-only callers (state-spec builders) wrap
+        the call in ``jax.eval_shape``.
+        """
+        like = self.params_like if updates_like is None else updates_like
+        extra: dict[str, Any] = {}
+        if self.momentum_correction > 0.0:
+            import jax.numpy as jnp
+            n_w = max(1, int(self.n_workers))
+            extra["mom"] = jax.tree.map(
+                lambda x: jnp.zeros((n_w,) + tuple(x.shape), jnp.float32),
+                like)
+        return extra
 
     def resolved_ks(self):
         """The per-leaf budget tree of the (outer) sparse exchange:

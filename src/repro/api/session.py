@@ -97,10 +97,14 @@ class Session:
         return self.train_step()[2]
 
     def init_state(self, seed: int = 0):
-        """Materialized train state with the production shardings."""
+        """Materialized train state with the production shardings (incl.
+        the ``pending``/``extra`` entries the run's pipeline/momentum
+        knobs require)."""
         from repro.launch import train as TR
-        state, _meta = TR.init_state(self.cfg, self._need_mesh("init_state"),
-                                     method=self.mode, seed=seed)
+        state, _meta = TR.init_state(
+            self.cfg, self._need_mesh("init_state"), method=self.mode,
+            seed=seed, pipeline=self.run_config.pipeline,
+            momentum_correction=self.run_config.momentum_correction)
         return state, _meta
 
     # -- simulation surface -------------------------------------------------
@@ -212,6 +216,12 @@ class Session:
             "Predicted sparse-exchange payload bytes under the live "
             "schedule (values + int32 indices per kept element).",
             ("mode",))
+        m_overlap = reg.gauge(
+            "train_overlap_frac",
+            "Fraction of exchange comm hidden under compute "
+            "(source=predicted: the live wave plan's timeline; "
+            "source=achieved: trace attribution via repro.pipeline).",
+            ("mode", "source"))
 
         def save_ckpt(tag: str):
             if not out_dir:
@@ -244,6 +254,10 @@ class Session:
                     m_comm.inc(_step_comm_bytes(live_meta,
                                                 state["params"]),
                                mode=mode)
+                    waves = live_meta.get("waves")
+                    if waves is not None and waves.predicted:
+                        m_overlap.set(float(waves.predicted["overlap"]),
+                                      mode=mode, source="predicted")
                     if publisher is not None:
                         pkt = publisher.maybe_publish(t, state["params"])
                         if pkt is not None:

@@ -75,8 +75,10 @@ def plan_schedule(leaves: Sequence, p: int, hw: cm.Hardware, *,
 def leaf_comm_time(d: int, ratio: float, p: int, hw: cm.Hardware) -> float:
     """Per-leaf exchange time under a planned ratio: dense all-reduce at
     ratio <= 1, sparse all-gather + selection overhead otherwise.  The
-    ONE pricing both predictors (flat ``predict_iteration`` and
-    ``runtime.hier.predict_hier_iteration``) use."""
+    ONE pricing every predictor uses: flat ``predict_iteration``,
+    ``runtime.hier.predict_hier_iteration``, the wave planner
+    (``pipeline.waves.plan_waves``), and the stream publisher's
+    budget split."""
     if ratio <= 1.0:
         return cm.allreduce_time(4 * d, p, hw)
     return (cm.sparse_allgather_time(d, ratio, p, hw)

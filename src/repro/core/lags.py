@@ -12,10 +12,24 @@ Three gradient-exchange strategies share one interface:
     only on its own layer's backward op — XLA's latency-hiding scheduler
     can overlap them with the remaining backward computation.
 
-Each strategy exposes
+Each strategy exposes the **bucket-stream interface**:
 
-    init(updates_like)                     -> state (residual pytree)
-    exchange(updates, state, axis_names)   -> (mean_update, new_state)
+    init(updates_like)                       -> state (residual pytree)
+    exchange(updates, state, axis_names)     -> (mean_update, new_state)
+    exchange_bucket(wave, updates, state, axis_names)
+                                             -> (means, new_state)
+
+``exchange`` is the monolithic entry point: it flattens the update tree
+and delegates to ``exchange_bucket`` with the single wave covering every
+leaf — the degenerate case of the wave-pipelined step
+(``repro.pipeline``), which calls ``exchange_bucket`` once per wave as
+that wave's gradients materialise in backprop.  ``wave`` is anything
+with a ``leaf_ids`` tuple (``repro.pipeline.buckets.Wave``) or a plain
+sequence of **global** leaf indices into the flattened update tree;
+``updates``/``state`` are flat lists of just the wave's leaves, in
+``leaf_ids`` order.  Per-leaf PRNG streams fold the *global* leaf index,
+so how leaves are grouped into waves never changes a selection — wave
+and monolithic execution are bitwise identical.
 
 ``updates`` are **learning-rate-scaled** gradients (alpha * G), matching the
 paper's Algorithm 1 where the residual accumulates parameter-deltas.
@@ -149,6 +163,18 @@ def _worker_keys(key, leaf_no: int, p):
     return jax.vmap(lambda w: jax.random.fold_in(lk, w))(jnp.arange(p))
 
 
+def _wave_ids(wave) -> tuple[int, ...]:
+    """Global flatten-order leaf indices of a wave.
+
+    Accepts a ``repro.pipeline.buckets.Wave`` (anything with a
+    ``leaf_ids`` attribute) or a plain sequence of ints.  Strategies key
+    their per-leaf PRNG streams and comm labels off these GLOBAL
+    indices, which is what makes wave grouping invisible to the math.
+    """
+    ids = getattr(wave, "leaf_ids", wave)
+    return tuple(int(i) for i in ids)
+
+
 def _comm_scope(tier: str, kind: str, label: str, nbytes: float, p: int):
     """In-jit annotation carrying the ``repro.observe.names`` grammar,
     so a real device profile attributes each collective per leaf/tier.
@@ -183,15 +209,33 @@ def _sparse_mean_over(vals, idx, d: int, axes, *, tier: str = "flat",
 class DenseExchange:
     """Vanilla S-SGD: mean of dense updates across workers."""
     name: str = "dense"
+    wave_granularity = "leaf"
 
     def init(self, updates_like):
         return ()
 
+    def exchange_bucket(self, wave, updates, state,
+                        axis_names: Sequence[str] | None, *, key=None):
+        """Dense mean over one wave's flat leaf list; state is ()."""
+        del key
+        ids = _wave_ids(wave)
+        if axis_names is None:  # simulation: leading P axis
+            means = [u.mean(0) for u in updates]
+        else:
+            axes = tuple(axis_names)
+            means = []
+            for i, u in zip(ids, updates):
+                with _comm_scope("flat", "allreduce", f"l{i}",
+                                 4.0 * u.size, _axis_prod(axes)):
+                    means.append(_psum_mean(u, axes))
+        return means, state
+
     def exchange(self, updates, state, axis_names: Sequence[str] | None,
                  *, key=None):
-        if axis_names is None:  # simulation: leading P axis
-            return jax.tree.map(lambda u: u.mean(0), updates), state
-        return jax.tree.map(lambda u: _psum_mean(u, tuple(axis_names)), updates), state
+        flat_u, treedef = jax.tree.flatten(updates)
+        means, state = self.exchange_bucket(
+            tuple(range(len(flat_u))), flat_u, state, axis_names, key=key)
+        return treedef.unflatten(means), state
 
 
 def _gathered_scatter_mean(vals_all, idx_all, d: int, p) -> jax.Array:
@@ -214,6 +258,7 @@ class LAGSExchange:
     residual_dtype: Any = jnp.float32
     name: str = "lags"
     compressor_kwargs: tuple = ()
+    wave_granularity = "leaf"
 
     @property
     def compressor(self) -> C.Compressor:
@@ -225,10 +270,13 @@ class LAGSExchange:
         return jax.tree.map(
             lambda u: jnp.zeros(u.shape, self.residual_dtype), updates_like)
 
-    def exchange(self, updates, state, axis_names: Sequence[str] | None,
-                 *, key=None):
+    def exchange_bucket(self, wave, updates, state,
+                        axis_names: Sequence[str] | None, *, key=None):
+        """One wave: flat lists of the wave's leaves, global-id keyed."""
         kw = dict(self.compressor_kwargs)
         needs_key = self.compressor.needs_key
+        ids = _wave_ids(wave)
+        flat_k = jax.tree.leaves(self.ks)
 
         if axis_names is None:
             # --- simulation path: leaves have leading P axis ---------------
@@ -249,37 +297,32 @@ class LAGSExchange:
                     )(u, e)
                 mean = _gathered_scatter_mean(vals, idx, d, p)
                 return mean.reshape(u.shape[1:]), resid
-            flat_u, treedef = jax.tree.flatten(updates)
-            flat_e = treedef.flatten_up_to(state)
-            flat_k = treedef.flatten_up_to(self.ks)
-            out = [leaf_fn(i, u, e, k)
-                   for i, (u, e, k) in enumerate(zip(flat_u, flat_e, flat_k))]
-            means = treedef.unflatten([o[0] for o in out])
-            resids = treedef.unflatten([o[1] for o in out])
-            return means, resids
+        else:
+            # --- distributed path (inside shard_map manual axes) ----------
+            axes = tuple(axis_names)
 
-        # --- distributed path (inside shard_map manual axes) --------------
-        axes = tuple(axis_names)
+            def leaf_fn(i, u, e, k):
+                acc = e + u.astype(e.dtype)
+                wk = (_leaf_key(key, i, _worker_index(axes)) if needs_key
+                      else None)
+                vals, idx, resid = local_select(acc, k, self.compressor,
+                                                key=wk, **kw)
+                # layer-wise sparse all-gather: ships 2*k scalars per worker
+                mean = _sparse_mean_over(vals, idx, u.size, axes,
+                                         label=f"l{i}")
+                return mean.reshape(u.shape).astype(u.dtype), resid
 
-        def leaf_fn(i, u, e, k):
-            acc = e + u.astype(e.dtype)
-            wk = (_leaf_key(key, i, _worker_index(axes)) if needs_key
-                  else None)
-            vals, idx, resid = local_select(acc, k, self.compressor,
-                                            key=wk, **kw)
-            # layer-wise sparse all-gather: ships 2*k scalars per worker
-            mean = _sparse_mean_over(vals, idx, u.size, axes,
-                                     label=f"l{i}")
-            return mean.reshape(u.shape).astype(u.dtype), resid
+        out = [leaf_fn(i, u, e, flat_k[i])
+               for i, u, e in zip(ids, updates, state)]
+        return [o[0] for o in out], [o[1] for o in out]
 
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
         flat_u, treedef = jax.tree.flatten(updates)
-        flat_e = treedef.flatten_up_to(state)
-        flat_k = treedef.flatten_up_to(self.ks)
-        out = [leaf_fn(i, u, e, k)
-               for i, (u, e, k) in enumerate(zip(flat_u, flat_e, flat_k))]
-        means = treedef.unflatten([o[0] for o in out])
-        resids = treedef.unflatten([o[1] for o in out])
-        return means, resids
+        means, resids = self.exchange_bucket(
+            tuple(range(len(flat_u))), flat_u, treedef.flatten_up_to(state),
+            axis_names, key=key)
+        return treedef.unflatten(means), treedef.unflatten(resids)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,6 +335,11 @@ class SLGSExchange:
     residual_dtype: Any = jnp.float32
     name: str = "slgs"
     compressor_kwargs: tuple = ()
+    # Global top-k over the whole-model vector: the selection is only
+    # defined once every leaf's gradient exists, so the pipeline layer
+    # must schedule exactly one wave (``repro.pipeline.waves`` honours
+    # this marker and degenerates to a single post-backward wave).
+    wave_granularity = "model"
 
     @property
     def compressor(self) -> C.Compressor:
@@ -301,12 +349,17 @@ class SLGSExchange:
         return jax.tree.map(
             lambda u: jnp.zeros(u.shape, self.residual_dtype), updates_like)
 
-    def exchange(self, updates, state, axis_names: Sequence[str] | None,
-                 *, key=None):
+    def exchange_bucket(self, wave, updates, state,
+                        axis_names: Sequence[str] | None, *, key=None):
+        ids = _wave_ids(wave)
+        if ids != tuple(range(len(ids))):
+            raise ValueError(
+                "slgs selects over the whole-model vector: its single wave "
+                "must cover every leaf in flatten order "
+                f"(wave_granularity='model'), got leaf_ids={ids}")
         kw = dict(self.compressor_kwargs)
         needs_key = self.compressor.needs_key
-        flat_u, treedef = jax.tree.flatten(updates)
-        flat_e = treedef.flatten_up_to(state)
+        flat_u, flat_e = list(updates), list(state)
 
         def pack(us, es):
             accs = [e + u.astype(e.dtype) for u, e in zip(us, es)]
@@ -333,7 +386,7 @@ class SLGSExchange:
                 means.append(mean_vec[off:off + n].reshape(u.shape[1:]).astype(u.dtype))
                 resids.append(resid_vec[:, off:off + n].reshape(u.shape))
                 off += n
-            return treedef.unflatten(means), treedef.unflatten(resids)
+            return means, resids
 
         axes = tuple(axis_names)
         vec, _ = pack(flat_u, flat_e)
@@ -348,6 +401,14 @@ class SLGSExchange:
             means.append(mean_vec[off:off + n].reshape(u.shape).astype(u.dtype))
             resids.append(resid_vec[off:off + n].reshape(u.shape))
             off += n
+        return means, resids
+
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
+        flat_u, treedef = jax.tree.flatten(updates)
+        means, resids = self.exchange_bucket(
+            tuple(range(len(flat_u))), flat_u, treedef.flatten_up_to(state),
+            axis_names, key=key)
         return treedef.unflatten(means), treedef.unflatten(resids)
 
 
@@ -454,21 +515,33 @@ class BlockLAGSExchange:
         resid_rows = rows - sel_rows
         return vals, local, resid_rows
 
-    def exchange(self, updates, state, axis_names: Sequence[str] | None,
-                 *, key=None):
+    wave_granularity = "leaf"
+
+    def exchange_bucket(self, wave, updates, state,
+                        axis_names: Sequence[str] | None, *, key=None):
         # block-Top-k selection is deterministic; ``key`` is accepted for
         # interface uniformity (every strategy takes the per-step stream)
-        flat_u, treedef = jax.tree.flatten(updates)
-        flat_e = treedef.flatten_up_to(state)
-        flat_k = treedef.flatten_up_to(self.ks)
+        del key
+        ids = _wave_ids(wave)
+        flat_k = jax.tree.leaves(self.ks)
         if self.shard_dims is None:
-            flat_s = [None] * len(flat_u)
+            flat_s = None
         else:
-            flat_s = treedef.flatten_up_to(self.shard_dims)
-        outs = [self._leaf(u, e, k, sd, axis_names)
-                for u, e, k, sd in zip(flat_u, flat_e, flat_k, flat_s)]
-        return (treedef.unflatten([o[0] for o in outs]),
-                treedef.unflatten([o[1] for o in outs]))
+            flat_s = jax.tree.structure(self.ks).flatten_up_to(
+                self.shard_dims)
+        outs = [self._leaf(u, e, flat_k[i],
+                           (flat_s[i] if flat_s is not None else None),
+                           axis_names)
+                for i, u, e in zip(ids, updates, state)]
+        return [o[0] for o in outs], [o[1] for o in outs]
+
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
+        flat_u, treedef = jax.tree.flatten(updates)
+        means, resids = self.exchange_bucket(
+            tuple(range(len(flat_u))), flat_u, treedef.flatten_up_to(state),
+            axis_names, key=key)
+        return treedef.unflatten(means), treedef.unflatten(resids)
 
     @staticmethod
     def _perm(ndim: int, sdims) -> tuple[int, ...] | None:
@@ -567,9 +640,14 @@ class HierLAGSExchange:
         return jax.tree.map(
             lambda u: jnp.zeros(u.shape, self.residual_dtype), updates_like)
 
-    def exchange(self, updates, state, axis_names=None, *, key=None):
+    wave_granularity = "leaf"
+
+    def exchange_bucket(self, wave, updates, state, axis_names=None,
+                        *, key=None):
         kw = dict(self.compressor_kwargs)
         needs_key = self.compressor.needs_key
+        ids = _wave_ids(wave)
+        flat_k = jax.tree.leaves(self.ks)
 
         def leaf_fn(i, u, e, k):
             if self.inner_axes:
@@ -586,13 +664,16 @@ class HierLAGSExchange:
                                      tier="outer", label=f"l{i}")
             return mean.reshape(u.shape).astype(u.dtype), resid
 
+        out = [leaf_fn(i, u, e, flat_k[i])
+               for i, u, e in zip(ids, updates, state)]
+        return [o[0] for o in out], [o[1] for o in out]
+
+    def exchange(self, updates, state, axis_names=None, *, key=None):
         flat_u, treedef = jax.tree.flatten(updates)
-        flat_e = treedef.flatten_up_to(state)
-        flat_k = treedef.flatten_up_to(self.ks)
-        out = [leaf_fn(i, u, e, k)
-               for i, (u, e, k) in enumerate(zip(flat_u, flat_e, flat_k))]
-        return (treedef.unflatten([o[0] for o in out]),
-                treedef.unflatten([o[1] for o in out]))
+        means, resids = self.exchange_bucket(
+            tuple(range(len(flat_u))), flat_u, treedef.flatten_up_to(state),
+            axis_names, key=key)
+        return treedef.unflatten(means), treedef.unflatten(resids)
 
 
 # ---------------------------------------------------------------------------
@@ -656,17 +737,24 @@ class SparseHierLAGSExchange:
                 lambda x: jnp.zeros(x.shape, self.residual_dtype), u)
         return {"inner": zeros(updates_like), "outer": zeros(updates_like)}
 
-    def exchange(self, updates, state, axis_names: Sequence[str] | None,
-                 *, key=None):
+    wave_granularity = "leaf"
+
+    def exchange_bucket(self, wave, updates, state,
+                        axis_names: Sequence[str] | None, *, key=None):
+        """One wave; ``state`` is ``{"inner": [...], "outer": [...]}`` flat
+        lists of the wave's two-tier residual leaves."""
         kw = dict(self.compressor_kwargs)
         needs_key = self.compressor.needs_key
         comp = self.compressor
 
-        flat_u, treedef = jax.tree.flatten(updates)
-        flat_ei = treedef.flatten_up_to(state["inner"])
-        flat_eo = treedef.flatten_up_to(state["outer"])
-        flat_ki = treedef.flatten_up_to(self.ks_inner)
-        flat_ko = treedef.flatten_up_to(self.ks)
+        ids = _wave_ids(wave)
+        flat_u = list(updates)
+        flat_ei = list(state["inner"])
+        flat_eo = list(state["outer"])
+        all_ki = jax.tree.leaves(self.ks_inner)
+        all_ko = jax.tree.leaves(self.ks)
+        flat_ki = [all_ki[i] for i in ids]
+        flat_ko = [all_ko[i] for i in ids]
 
         if axis_names is None:
             # --- simulation path: leading P = n_outer * n_inner ------------
@@ -729,8 +817,8 @@ class SparseHierLAGSExchange:
                         resid_in, resid_out_full)
 
             out = [leaf_fn(i, u, ei, eo, ki, ko)
-                   for i, (u, ei, eo, ki, ko) in enumerate(
-                       zip(flat_u, flat_ei, flat_eo, flat_ki, flat_ko))]
+                   for i, u, ei, eo, ki, ko in zip(
+                       ids, flat_u, flat_ei, flat_eo, flat_ki, flat_ko)]
         else:
             # --- distributed path (shard_map manual axes) ------------------
             axes = tuple(axis_names)
@@ -763,9 +851,21 @@ class SparseHierLAGSExchange:
                         resid_in, resid_out)
 
             out = [leaf_fn(i, u, ei, eo, ki, ko)
-                   for i, (u, ei, eo, ki, ko) in enumerate(
-                       zip(flat_u, flat_ei, flat_eo, flat_ki, flat_ko))]
+                   for i, u, ei, eo, ki, ko in zip(
+                       ids, flat_u, flat_ei, flat_eo, flat_ki, flat_ko)]
 
-        return (treedef.unflatten([o[0] for o in out]),
-                {"inner": treedef.unflatten([o[1] for o in out]),
-                 "outer": treedef.unflatten([o[2] for o in out])})
+        return ([o[0] for o in out],
+                {"inner": [o[1] for o in out],
+                 "outer": [o[2] for o in out]})
+
+    def exchange(self, updates, state, axis_names: Sequence[str] | None,
+                 *, key=None):
+        flat_u, treedef = jax.tree.flatten(updates)
+        means, ns = self.exchange_bucket(
+            tuple(range(len(flat_u))), flat_u,
+            {"inner": treedef.flatten_up_to(state["inner"]),
+             "outer": treedef.flatten_up_to(state["outer"])},
+            axis_names, key=key)
+        return (treedef.unflatten(means),
+                {"inner": treedef.unflatten(ns["inner"]),
+                 "outer": treedef.unflatten(ns["outer"])})

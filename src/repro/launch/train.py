@@ -38,6 +38,15 @@ State pytree: {"params", "ef", "step"}.  ``ef`` carries one residual per
 LAGS worker: leading axis = n_workers, sharded over the manual axes, inner
 dims sharded like the parameters (auto axes).  The optimizer is the
 paper's plain SGD on pre-scaled deltas (Algorithm 1 line 10).
+
+``RunConfig.pipeline`` selects how the exchange meets backprop
+(``repro.pipeline``): ``"off"`` is the monolithic post-backward exchange
+above; ``"wave"`` runs each wave's exchange inside the backward pass via
+custom_vjp taps (bitwise equal to ``"off"``); ``"async1"`` double-buffers
+— step N exchanges step N-1's updates (state gains a per-worker
+``"pending"`` entry; one step of bounded staleness).  ``RunConfig.
+momentum_correction`` adds the DGC velocity through the
+``ExchangeSpec.init_extra_state`` hook (state gains ``"extra"``).
 """
 from __future__ import annotations
 
@@ -57,6 +66,9 @@ from repro.configs import base
 from repro.core import lags
 from repro.launch import mesh as M
 from repro.models import transformer as T
+from repro.pipeline import buckets as WB
+from repro.pipeline import step as WS
+from repro.pipeline import waves as WW
 from repro.sharding import rules
 
 
@@ -133,46 +145,77 @@ def _auto_only(spec: P, manual: tuple[str, ...]) -> P:
     return _strip_manual(spec, manual)
 
 
-def make_state_specs(cfg, mesh, *, method: str | None = None):
-    """ShapeDtypeStructs (with shardings) for the full train state."""
+def make_state_specs(cfg, mesh, *, method: str | None = None,
+                     pipeline: str = "off",
+                     momentum_correction: float = 0.0):
+    """ShapeDtypeStructs (with shardings) for the full train state.
+
+    ``pipeline="async1"`` adds a ``"pending"`` entry (the previous step's
+    lr-scaled updates, per worker, awaiting exchange); ``momentum_
+    correction > 0`` adds ``"extra"`` — whatever auxiliary trees
+    ``ExchangeSpec.init_extra_state`` declares (today the DGC ``"mom"``
+    velocity).  Keys exist only when their feature is on, so existing
+    checkpoints and donation layouts are untouched.
+    """
     mode, manual, worker = _mode(cfg, mesh, method)
     params_sds, axes = model_shapes_and_axes(cfg)
     pspecs = param_pspecs(cfg, mesh, mode, params_sds, axes)
     n_w = M.n_workers(mesh, worker) if worker else 1
+    _is_sds = lambda x: isinstance(x, jax.ShapeDtypeStruct)
 
     def with_sh(sd, spec):
         return jax.ShapeDtypeStruct(sd.shape, sd.dtype,
                                     sharding=NamedSharding(mesh, spec))
 
-    params = jax.tree.map(with_sh, params_sds, pspecs,
-                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    params = jax.tree.map(with_sh, params_sds, pspecs, is_leaf=_is_sds)
+    lead = worker if len(worker) > 1 else (worker[0] if worker else None)
+
+    def wstate_sd(sd, spec):
+        # per-worker fp32 state (EF residual / pending update / DGC
+        # velocity): leading axis = n_workers, sharded over the worker
+        # axes; inner dims keep the params' auto sharding ('model', and
+        # 'data' in hier mode)
+        sp = P(lead, *spec)
+        return jax.ShapeDtypeStruct((n_w,) + sd.shape, jnp.float32,
+                                    sharding=NamedSharding(mesh, sp))
+
     if mode == "dense":
         ef = ()
         ef_pspecs = ()
     else:
-        lead = worker if len(worker) > 1 else (worker[0] if worker else None)
-
-        def ef_sd(sd, spec):
-            # in hier mode the inner dims keep the params' auto sharding;
-            # in dp mode the inner 'model' sharding also applies
-            sp = P(lead, *spec)
-            return jax.ShapeDtypeStruct((n_w,) + sd.shape, jnp.float32,
-                                        sharding=NamedSharding(mesh, sp))
-        ef = jax.tree.map(ef_sd, params_sds, pspecs,
-                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        ef = jax.tree.map(wstate_sd, params_sds, pspecs, is_leaf=_is_sds)
         # strategies registered with ef_tiers (two-level exchanges) carry
         # one residual tree per tier — same per-worker layout, tier-keyed
         ef_tiers = R.get_exchange(mode).ef_tiers
         if ef_tiers:
             ef = {t: ef for t in ef_tiers}
         ef_pspecs = jax.tree.map(lambda s: s.sharding.spec, ef,
-                                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+                                 is_leaf=_is_sds)
     step = jax.ShapeDtypeStruct((), jnp.int32,
                                 sharding=NamedSharding(mesh, P()))
     state = {"params": params, "ef": ef, "step": step}
     meta = {"mode": mode, "manual": manual, "worker_axes": worker,
             "n_workers": n_w, "pspecs": pspecs, "ef_pspecs": ef_pspecs,
-            "axes": axes}
+            "axes": axes, "pipeline": pipeline}
+    if pipeline == "async1":
+        pending = jax.tree.map(wstate_sd, params_sds, pspecs,
+                               is_leaf=_is_sds)
+        state["pending"] = pending
+        meta["pending_pspecs"] = jax.tree.map(
+            lambda s: s.sharding.spec, pending, is_leaf=_is_sds)
+    # the init_extra_state hook declares which auxiliary per-worker trees
+    # the exchange needs (eval_shape: structure only, no allocation)
+    extra_sds = jax.eval_shape(R.ExchangeSpec(
+        mode=mode, params_like=params_sds, n_workers=n_w,
+        momentum_correction=momentum_correction).init_extra_state)
+    if extra_sds:
+        state["extra"] = {
+            name: jax.tree.map(
+                lambda sd, spec: with_sh(sd, P(lead, *spec)),
+                tree, pspecs, is_leaf=_is_sds)
+            for name, tree in extra_sds.items()}
+        meta["extra_pspecs"] = jax.tree.map(
+            lambda s: s.sharding.spec, state["extra"], is_leaf=_is_sds)
     return state, meta
 
 
@@ -221,7 +264,9 @@ def build_train_step(cfg, mesh, run: RunConfig):
     ``autotune.schedule.validate_for`` — the same contract the sim path
     enforces.
     """
-    state_specs, meta = make_state_specs(cfg, mesh, method=run.mode)
+    state_specs, meta = make_state_specs(
+        cfg, mesh, method=run.mode, pipeline=run.pipeline,
+        momentum_correction=run.momentum_correction)
     mode, manual = meta["mode"], meta["manual"]
     schedule = run.schedule
     ks_override = R.resolve_schedule_ks(schedule, mode,
@@ -240,11 +285,30 @@ def build_train_step(cfg, mesh, run: RunConfig):
         n_workers=meta["n_workers"],
         ratio_inner=run.resolved_ratio_inner(),
         n_inner=max(1, M.n_workers(mesh, M.inner_axis_names(mesh))),
-        row_axes=row_axes, shard_dims=sdims)
+        row_axes=row_axes, shard_dims=sdims,
+        momentum_correction=run.momentum_correction)
     exch = R.build_exchange(spec)
     meta["ks"] = getattr(exch, "ks", None)
     meta["schedule"] = schedule
     meta["run"] = dataclasses.replace(run, mode=mode)
+
+    # wave partition for the pipelined modes: a user-supplied schedule is
+    # re-bound by leaf name against THIS params tree; otherwise a
+    # geometry-default partition at the exchange's declared granularity
+    # (slgs selects over the whole-model vector -> one wave)
+    pipeline = run.pipeline
+    ef_tiers = R.get_exchange(mode).ef_tiers
+    mc = float(run.momentum_correction)
+    waves_sched = None
+    if pipeline != "off":
+        if run.waves is not None:
+            waves_sched = WB.bind(run.waves, state_specs["params"])
+        else:
+            waves_sched = WW.default_waves(
+                state_specs["params"], meta["ks"],
+                granularity=getattr(exch, "wave_granularity", "leaf"),
+                target_bytes=run.wave_target_bytes, pipeline=pipeline)
+    meta["waves"] = waves_sched
 
     def loss_fn(params, batch):
         return T.loss_fn(params, cfg, batch, chunk=run.chunk,
@@ -257,58 +321,109 @@ def build_train_step(cfg, mesh, run: RunConfig):
 
     step_key = run.key_at
 
-    def worker(params, ef, batch, step_no):
-        # ef arrives (1, ...) per worker under manual axes
+    def worker(params, ef, pending, extra, batch, step_no):
+        # per-worker state (ef / pending / extra) arrives (1, ...) under
+        # the manual axes
         ef_local = jax.tree.map(lambda e: e[0], ef) if mode != "dense" else ()
-        (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
         lr_f = lr_at(step_no)
-        updates = jax.tree.map(lambda g: lr_f * g.astype(jnp.float32), grads)
         axis_names = manual if manual else ()
-        if mode == "dense":
-            if manual:
-                mean_upd, _ = exch.exchange(updates, (), manual)
-            else:
-                mean_upd = updates
-            new_ef = ()
+
+        if pipeline == "wave":
+            # in-backprop waved exchange: each wave's select+pack+
+            # collective fires via a custom_vjp tap the moment backprop
+            # produces that wave's cotangents (bitwise equal to "off")
+            (loss, _aux), mean_upd, new_ef_local = WS.wave_backward(
+                lambda p: loss_fn(p, batch), exch, waves_sched.waves,
+                params, ef_local, axis_names, lr=lr_f,
+                key=step_key(step_no), has_aux=True, tiers=ef_tiers)
+            new_pending, new_extra = pending, extra
         else:
-            mean_upd, new_ef_local = exch.exchange(updates, ef_local,
-                                                   axis_names,
-                                                   key=step_key(step_no))
-            new_ef = jax.tree.map(lambda e: e[None], new_ef_local)
+            (loss, _aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            if mc > 0.0:
+                # DGC momentum correction: the velocity accumulates
+                # BEFORE sparsification, per worker
+                mom = jax.tree.map(lambda m: m[0], extra["mom"])
+                new_mom = jax.tree.map(
+                    lambda m, g: mc * m + lr_f * g.astype(jnp.float32),
+                    mom, grads)
+                updates = new_mom
+                new_extra = {"mom": jax.tree.map(lambda m: m[None], new_mom)}
+            else:
+                updates = jax.tree.map(
+                    lambda g: lr_f * g.astype(jnp.float32), grads)
+                new_extra = extra
+            if pipeline == "async1":
+                # double-buffer: exchange the PREVIOUS step's updates
+                # (zeros at step 0, hence that step's key) while this
+                # step's compute runs; the fresh updates become the next
+                # step's pending payload — one step of bounded staleness
+                pend = jax.tree.map(lambda x: x[0], pending)
+                mean_upd, new_ef_local = WS.waved_exchange(
+                    exch, waves_sched.waves, pend, ef_local, axis_names,
+                    key=step_key(step_no - 1), tiers=ef_tiers)
+                new_pending = jax.tree.map(lambda u: u[None], updates)
+            else:
+                new_pending = pending
+                if mode == "dense":
+                    if manual:
+                        mean_upd, _ = exch.exchange(updates, (), manual)
+                    else:
+                        mean_upd = updates
+                    new_ef_local = ()
+                else:
+                    mean_upd, new_ef_local = exch.exchange(
+                        updates, ef_local, axis_names,
+                        key=step_key(step_no))
+        new_ef = (jax.tree.map(lambda e: e[None], new_ef_local)
+                  if mode != "dense" else ())
         new_params = jax.tree.map(
             lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
             params, mean_upd)
         if manual:
             loss = lags._psum_mean(loss, manual)
-        return new_params, new_ef, {"loss": loss}
+        return new_params, new_ef, new_pending, new_extra, {"loss": loss}
 
     if manual:
         # shard_map in_specs mention manual axes only; auto ('model', and
         # 'data' in hier mode) sharding is GSPMD's job.
-        if mode != "dense":
-            def ef_manual_spec(s: P) -> P:
-                lead = manual if len(manual) > 1 else manual[0]
-                return P(lead, *[None] * (len(s) - 1))
-            ef_in = jax.tree.map(ef_manual_spec, meta["ef_pspecs"],
-                                 is_leaf=lambda s: isinstance(s, P))
-        else:
-            ef_in = ()
+        _is_p = lambda s: isinstance(s, P)
+
+        def wstate_spec(s: P) -> P:
+            lead = manual if len(manual) > 1 else manual[0]
+            return P(lead, *[None] * (len(s) - 1))
+
+        ef_in = (jax.tree.map(wstate_spec, meta["ef_pspecs"], is_leaf=_is_p)
+                 if mode != "dense" else ())
+        pending_in = (jax.tree.map(wstate_spec, meta["pending_pspecs"],
+                                   is_leaf=_is_p)
+                      if "pending" in state_specs else ())
+        extra_in = (jax.tree.map(wstate_spec, meta["extra_pspecs"],
+                                 is_leaf=_is_p)
+                    if "extra" in state_specs else {})
         # params enter replicated over manual axes
         params_in = jax.tree.map(lambda s: P(*[None] * len(s)), meta["pspecs"],
-                                 is_leaf=lambda s: isinstance(s, P))
+                                 is_leaf=_is_p)
 
         def step(state, batch):
             bspecs = batch_pspec(batch, mesh, manual)
             sm = compat.shard_map(
                 worker, mesh=mesh,
-                in_specs=(params_in, ef_in, bspecs, P()),
-                out_specs=(params_in, ef_in, {"loss": P()}),
+                in_specs=(params_in, ef_in, pending_in, extra_in, bspecs,
+                          P()),
+                out_specs=(params_in, ef_in, pending_in, extra_in,
+                           {"loss": P()}),
                 axis_names=set(manual), check_vma=False)
-            new_params, new_ef, metrics = sm(
-                state["params"], state["ef"], batch, state["step"])
-            return ({"params": new_params, "ef": new_ef,
-                     "step": state["step"] + 1}, metrics)
+            new_params, new_ef, new_pending, new_extra, metrics = sm(
+                state["params"], state["ef"], state.get("pending", ()),
+                state.get("extra", {}), batch, state["step"])
+            out = {"params": new_params, "ef": new_ef,
+                   "step": state["step"] + 1}
+            if "pending" in state:
+                out["pending"] = new_pending
+            if "extra" in state:
+                out["extra"] = new_extra
+            return out, metrics
     else:
         # pure-auto path (lags_hier, or dense without data axes): per-pod
         # gradients via vmap over a leading pod dim; the exchange's
@@ -336,28 +451,55 @@ def build_train_step(cfg, mesh, run: RunConfig):
                     params, batch)
                 grads = jax.tree.map(lambda g: g[None], g1)
             lr_f = lr_at(state["step"])
-            updates = jax.tree.map(lambda g: lr_f * g.astype(jnp.float32),
-                                   grads)
-            if mode == "dense":
-                mean_upd = jax.tree.map(lambda u: u.mean(0), updates)
-                new_ef = ()
+            if mc > 0.0:
+                # DGC velocity, leading-P layout (no manual slicing here)
+                new_mom = jax.tree.map(
+                    lambda m, g: mc * m + lr_f * g.astype(jnp.float32),
+                    state["extra"]["mom"], grads)
+                updates = new_mom
             else:
+                updates = jax.tree.map(
+                    lambda g: lr_f * g.astype(jnp.float32), grads)
+            # async1 exchanges the PREVIOUS step's updates (that step's
+            # key); "wave" on this pure-auto path is post-backward
+            # regrouping only — taps cannot reach inside the per-pod vmap,
+            # so it buys semantics parity, not overlap (use lags_dp /
+            # lags_hier2 for in-backprop waves)
+            src = state["pending"] if pipeline == "async1" else updates
+            if mode == "dense":
+                mean_upd = jax.tree.map(lambda u: u.mean(0), src)
+                new_ef = ()
+            elif pipeline == "off":
                 mean_upd, new_ef = exch.exchange(updates, ef, None,
                                                  key=step_key(state["step"]))
+            else:
+                key = (step_key(state["step"] - 1) if pipeline == "async1"
+                       else step_key(state["step"]))
+                mean_upd, new_ef = WS.waved_exchange(
+                    exch, waves_sched.waves, src, ef, None, key=key,
+                    tiers=ef_tiers)
             new_params = jax.tree.map(
                 lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
                 params, mean_upd)
-            return ({"params": new_params, "ef": new_ef,
-                     "step": state["step"] + 1}, {"loss": loss})
+            out = {"params": new_params, "ef": new_ef,
+                   "step": state["step"] + 1}
+            if pipeline == "async1":
+                out["pending"] = updates
+            if mc > 0.0:
+                out["extra"] = {"mom": new_mom}
+            return out, {"loss": loss}
 
     donate_args = (0,) if run.donate else ()
     return jax.jit(step, donate_argnums=donate_args), state_specs, meta
 
 
-def init_state(cfg, mesh, *, method: str | None = None, seed: int = 0):
+def init_state(cfg, mesh, *, method: str | None = None, seed: int = 0,
+               pipeline: str = "off", momentum_correction: float = 0.0):
     """Materialize a real train state with the dry-run shardings (for
     examples / integration tests on a host mesh)."""
-    state_specs, meta = make_state_specs(cfg, mesh, method=method)
+    state_specs, meta = make_state_specs(
+        cfg, mesh, method=method, pipeline=pipeline,
+        momentum_correction=momentum_correction)
     shardings = jax.tree.map(lambda s: s.sharding, state_specs,
                              is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
@@ -372,8 +514,18 @@ def init_state(cfg, mesh, *, method: str | None = None, seed: int = 0):
             ef_tiers = R.get_exchange(meta["mode"]).ef_tiers
             if ef_tiers:
                 ef = {t: ef for t in ef_tiers}
-        return {"params": params, "ef": ef,
-                "step": jnp.zeros((), jnp.int32)}
+        state = {"params": params, "ef": ef,
+                 "step": jnp.zeros((), jnp.int32)}
+        if "pending" in state_specs:
+            # async1 double-buffer starts empty: step 0 applies a zero
+            # update while its own exchange fills the buffer
+            state["pending"] = jax.tree.map(
+                lambda p: jnp.zeros((nw,) + p.shape, jnp.float32), params)
+        if "extra" in state_specs:
+            state["extra"] = R.ExchangeSpec(
+                mode=meta["mode"], params_like=params, n_workers=nw,
+                momentum_correction=momentum_correction).init_extra_state()
+        return state
 
     return jax.jit(build, out_shardings=shardings)(
         jax.random.PRNGKey(seed)), meta

@@ -96,6 +96,21 @@ def forward_time(trace: Trace) -> float:
     return _mean_dur(trace, names.FWD)
 
 
+def overlap_report(trace: Trace, *, include_forward: bool = False) -> dict:
+    """Achieved comm-overlap attribution for one captured step: how much
+    of each collective's duration ran *under* backward (optionally also
+    forward) compute, and how much stuck out (was exposed).
+
+    Thin delegation to :func:`repro.pipeline.overlap.overlap_report`
+    (lazy import — attribution stays usable without the pipeline
+    package loaded); lives here because it is the same trace->evidence
+    direction as :func:`comm_samples` / :func:`backward_times`, and the
+    replan controller reads its telemetry through this module.
+    """
+    from repro.pipeline import overlap as PO
+    return PO.overlap_report(trace, include_forward=include_forward)
+
+
 def attribute_leaves(leaves: Sequence, trace: Trace, *,
                      t_backward_total: float | None = None) -> tuple:
     """Leaves with **measured** per-leaf backward budgets where the trace

@@ -15,6 +15,12 @@ invariants:
     just its counters) and each must carry the ``RequestRecord`` core
     fields (prefill latency, decode tokens/s, applied weight version).
 
+  * ``--min-overlap R`` — the run must have reported comm-overlap
+    gauges (:data:`OVERLAP_METRICS`, from ``repro.pipeline`` /
+    ``api.Session.run`` / the replan controller), and every reported
+    fraction must be ``>= R`` — the gate a wave-pipelined runtime smoke
+    puts on "the overlap actually happened".
+
 Usable as a library too: :func:`validate` returns the list of problems.
 """
 from __future__ import annotations
@@ -27,9 +33,15 @@ from repro.observe import metrics as OM
 #: RequestRecord fields every ``request`` event row must carry.
 REQUEST_FIELDS = ("prefill_s", "decode_tok_s", "version")
 
+#: Gauge families carrying a comm-overlap fraction (``--min-overlap``):
+#: the session's per-mode predicted/achieved pair and the controller's
+#: fresh-fit wave-plan prediction.
+OVERLAP_METRICS = ("train_overlap_frac", "replan_overlap_frac")
+
 
 def validate(snap: dict, require: tuple[str, ...] = (),
-             max_publish_ratio: float | None = None) -> list[str]:
+             max_publish_ratio: float | None = None,
+             min_overlap: float | None = None) -> list[str]:
     """Problems with a loaded snapshot (empty list = valid)."""
     problems: list[str] = []
     meta = snap.get("meta", {})
@@ -90,6 +102,20 @@ def validate(snap: dict, require: tuple[str, ...] = (),
             if missing:
                 problems.append(f"request event seq={r.get('seq')} "
                                 f"missing fields {missing}")
+    if min_overlap is not None:
+        rows = [r for r in snap.get("metrics", ())
+                if r["name"] in OVERLAP_METRICS]
+        if not rows:
+            problems.append(
+                f"--min-overlap given but no overlap gauges "
+                f"({'/'.join(OVERLAP_METRICS)}) in the snapshot — was "
+                f"the run pipelined?")
+        for r in rows:
+            if r.get("value", 0.0) < min_overlap:
+                problems.append(
+                    f"{r['name']}{r.get('labels', {})} = "
+                    f"{r.get('value', 0.0):.3f} < --min-overlap "
+                    f"{min_overlap}")
     return problems
 
 
@@ -104,6 +130,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-publish-ratio", type=float, default=None,
                     help="tighten publish_bytes_total <= RATIO x "
                          "full-checkpoint-equivalent bytes (default 1.0)")
+    ap.add_argument("--min-overlap", type=float, default=None,
+                    help="require overlap gauges (train/replan_overlap_"
+                         "frac) to be present and >= this fraction")
     args = ap.parse_args(argv)
     try:
         snap = OM.load_snapshot(args.snapshot)
@@ -111,7 +140,8 @@ def main(argv=None) -> int:
         print(f"metrics-check: cannot load {args.snapshot}: {e}")
         return 1
     problems = validate(snap, require=tuple(args.require),
-                        max_publish_ratio=args.max_publish_ratio)
+                        max_publish_ratio=args.max_publish_ratio,
+                        min_overlap=args.min_overlap)
     for p in problems:
         print(f"metrics-check: FAIL {p}")
     if not problems:

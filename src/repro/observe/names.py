@@ -10,10 +10,16 @@ A trace event is attributed purely from its *name*, so the exchange code
   * ``lags/bwd/<leaf path>``              — one leaf's backward compute
   * ``lags/comm/<tier>/<kind>/<label>?nbytes=<B>&p=<P>``
                                           — one collective (per bucket /
-                                            per leaf); ``tier`` is
-                                            ``flat`` | ``inner`` |
+                                            per leaf / per wave); ``tier``
+                                            is ``flat`` | ``inner`` |
                                             ``outer``, ``kind`` is
                                             ``allgather`` | ``allreduce``
+  * ``lags/overlap/<label>``              — overlap-attribution span
+                                            labels: the ``span`` label
+                                            value of the
+                                            ``train_overlap_comm_seconds``
+                                            gauge family
+                                            (``repro.pipeline.overlap``)
   * ``serve/<kind>/<label>?version=<V>``  — serving-path work
                                             (``repro.stream``); ``kind``
                                             is one of :data:`SERVE_KINDS`
@@ -35,6 +41,7 @@ STEP = "lags/step"
 FWD = "lags/fwd"
 BWD_PREFIX = "lags/bwd/"
 COMM_PREFIX = "lags/comm/"
+OVERLAP_PREFIX = "lags/overlap/"
 SERVE_PREFIX = "serve/"
 
 #: Tier vocabulary: flat data-parallel wire, intra-pod ICI, cross-pod DCN.
@@ -48,6 +55,13 @@ SERVE_KINDS = ("prefill", "decode", "apply", "resync", "eval")
 
 def bwd_name(leaf: str) -> str:
     return BWD_PREFIX + leaf
+
+
+def overlap_name(label: str) -> str:
+    """``lags/overlap/<label>`` — metric-label spelling for one
+    collective's overlap attribution (``label`` is the same string the
+    ``comm`` event carried)."""
+    return OVERLAP_PREFIX + label
 
 
 def serve_name(kind: str, label: str = "", *,
@@ -71,8 +85,9 @@ def comm_name(tier: str, kind: str, label: str, *, nbytes: float,
 def parse(name: str) -> dict | None:
     """Structured view of an annotation name, or None for foreign names.
 
-    Returns ``{"type": "step" | "fwd"}``, ``{"type": "bwd", "leaf": ...}``
-    or ``{"type": "comm", "tier", "kind", "label", "nbytes", "p"}``.
+    Returns ``{"type": "step" | "fwd"}``, ``{"type": "bwd", "leaf": ...}``,
+    ``{"type": "comm", "tier", "kind", "label", "nbytes", "p"}`` or
+    ``{"type": "overlap", "label": ...}``.
     Malformed ``comm`` metadata parses as ``nbytes=0.0 / p=1`` rather
     than raising — a real profiler run may mangle suffixes, and a sample
     with no payload is simply dropped downstream.
@@ -102,6 +117,8 @@ def parse(name: str) -> dict | None:
                 pass
         return {"type": "comm", "tier": tier, "kind": kind, "label": label,
                 "nbytes": nbytes, "p": p}
+    if name.startswith(OVERLAP_PREFIX):
+        return {"type": "overlap", "label": name[len(OVERLAP_PREFIX):]}
     if name.startswith(SERVE_PREFIX):
         rest = name[len(SERVE_PREFIX):]
         parts = rest.split("/", 1)

@@ -207,18 +207,30 @@ class FakeTraceBackend:
         schedule prices the ``flat``/``outer`` tier; ``None`` falls back
         to ``static_ratio``, today's uniform ``cfg.compression_ratio``).
       static_ratio: ratio used when no schedule is live (1.0 = dense).
+      wave_fn: optional ``() -> repro.pipeline.WaveSchedule | None`` —
+        when it returns a schedule, :meth:`capture` synthesizes the
+        *wave-pipelined* step instead: one aggregated collective per
+        (wave, tier) — allreduce for the wave's dense leaves, allgather
+        for its sparse ones — starting at ``max(wave readiness, wire
+        free)`` (``pipeline="async1"`` drops the readiness gate: the
+        payload is the previous step's), and the step event ends at
+        ``max(compute end, last wire end)``.  ``None`` (the default, and
+        a ``wave_fn`` returning None) keeps the classic per-leaf
+        synthesis byte-for-byte.
     """
 
     def __init__(self, leaves: Sequence, wires: dict,
                  tier_workers: dict, *, t_forward: float,
                  schedule_fn: Callable[[], Any] | None = None,
-                 static_ratio: float = 1.0):
+                 static_ratio: float = 1.0,
+                 wave_fn: Callable[[], Any] | None = None):
         self.leaves = tuple(leaves)
         self.wires = wires
         self.tier_workers = dict(tier_workers)
         self.t_forward = float(t_forward)
         self.schedule_fn = schedule_fn or (lambda: None)
         self.static_ratio = float(static_ratio)
+        self.wave_fn = wave_fn or (lambda: None)
 
     def _tier_ratios(self) -> dict[str, dict[str, float]]:
         sched = self.schedule_fn()
@@ -256,10 +268,71 @@ class FakeTraceBackend:
             name=names.comm_name(tier, kind, leaf.name, nbytes=nbytes, p=p),
             t_start=t_start, dur=t)
 
+    def _capture_waves(self, waves, ratios, step: int) -> Trace:
+        """Wave-pipelined synthesis (see ``wave_fn``): collectives start
+        when their wave's last gradient lands AND the tier's wire is
+        free; exposed comm is whatever sticks out past compute."""
+        by_name = {l.name: l for l in self.leaves}
+        events = [TraceEvent(names.FWD, 0.0, self.t_forward)]
+        clock = self.t_forward
+        ready: dict[str, float] = {}
+        for leaf in self.leaves:
+            events.append(TraceEvent(names.bwd_name(leaf.name), clock,
+                                     leaf.t_backward))
+            clock += leaf.t_backward
+            ready[leaf.name] = clock
+        comp_end = clock
+        asynchronous = getattr(waves, "pipeline", "wave") == "async1"
+        wire_clock = {t: 0.0 for t in self.wires}
+        for w_no, wave in enumerate(waves.waves):
+            wleaves = [by_name[nm] for nm in wave.names if nm in by_name]
+            if not wleaves:
+                continue
+            # async1 ships the PREVIOUS step's payload: nothing to wait on
+            t_ready = (0.0 if asynchronous
+                       else max(ready[l.name] for l in wleaves))
+            label = f"wave{w_no}"
+            for tier in self.wires:
+                p = int(self.tier_workers.get(tier, 1))
+                if p <= 1:
+                    continue
+                hw = self.wires[tier]
+                dense_d = sparse_k = 0
+                for l in wleaves:
+                    r = ratios[tier].get(l.name, 1.0)
+                    if r <= 1.0:
+                        dense_d += l.d
+                    else:
+                        sparse_k += max(1, int(round(l.d / r)))
+                start = max(t_ready, wire_clock[tier])
+                if dense_d:
+                    nbytes = 4.0 * dense_d
+                    t = cm.allreduce_time(nbytes, p, hw)
+                    events.append(TraceEvent(
+                        names.comm_name(tier, "allreduce", label,
+                                        nbytes=nbytes, p=p), start, t))
+                    start += t
+                if sparse_k:
+                    nbytes = 8.0 * sparse_k   # fp32 values + int32 idx
+                    t = cm.allgather_time(nbytes, p, hw)
+                    events.append(TraceEvent(
+                        names.comm_name(tier, "allgather", label,
+                                        nbytes=nbytes, p=p), start, t))
+                    start += t
+                wire_clock[tier] = start
+        t_step = max(comp_end, max(wire_clock.values(), default=comp_end))
+        events.insert(0, TraceEvent(names.STEP, 0.0, t_step))
+        return Trace(events=tuple(events),
+                     meta={"backend": "fake", "step": int(step),
+                           "pipeline": getattr(waves, "pipeline", "wave")})
+
     def capture(self, step: int = 0) -> Trace:
         """One instrumented step's worth of events (pure function of the
         live wires/schedule — the ``step`` argument is provenance only)."""
         ratios = self._tier_ratios()
+        waves = self.wave_fn()
+        if waves is not None:
+            return self._capture_waves(waves, ratios, step)
         events = [TraceEvent(names.FWD, 0.0, self.t_forward)]
         clock = self.t_forward
         t_b, t_c = [], []

@@ -1,0 +1,52 @@
+"""repro.pipeline — wave-pipelined layer-wise gradient exchange.
+
+Turns the monolithic ``exchange(grads) -> grads`` protocol into a
+bucket-stream: leaves are partitioned into **waves** (``buckets``,
+``waves``), each wave's sparse select+pack+collective launches inside
+backprop as its gradients materialise (``step.wave_backward``,
+custom_vjp taps), or double-buffered against the next step's forward
+(``RunConfig.pipeline="async1"``), and achieved overlap is measured
+from traces (``overlap``) against the planner's prediction.
+
+Modules (PEP 562 lazy — importing the package costs nothing):
+
+  * ``buckets`` — ``Wave`` / ``WaveSchedule`` artifacts (JSON, binding,
+    ``bucketing.bucket_stats`` views);
+  * ``waves``   — planning: geometry-only ``default_waves`` and
+    measurement-driven ``plan_waves`` + ``predict_pipeline``;
+  * ``step``    — execution: in-backprop ``wave_backward`` taps and
+    post-backward ``waved_exchange`` regrouping;
+  * ``overlap`` — achieved-overlap attribution from traces and the
+    ``lags/overlap/...`` gauge family.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "Wave": ("repro.pipeline.buckets", "Wave"),
+    "WaveSchedule": ("repro.pipeline.buckets", "WaveSchedule"),
+    "bind": ("repro.pipeline.buckets", "bind"),
+    "default_waves": ("repro.pipeline.waves", "default_waves"),
+    "plan_waves": ("repro.pipeline.waves", "plan_waves"),
+    "predict_pipeline": ("repro.pipeline.waves", "predict_pipeline"),
+    "PIPELINE_MODES": ("repro.pipeline.waves", "PIPELINE_MODES"),
+    "wave_backward": ("repro.pipeline.step", "wave_backward"),
+    "waved_exchange": ("repro.pipeline.step", "waved_exchange"),
+    "overlap_report": ("repro.pipeline.overlap", "overlap_report"),
+    "emit_overlap_metrics": ("repro.pipeline.overlap", "emit_metrics"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

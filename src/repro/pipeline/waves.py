@@ -1,0 +1,206 @@
+"""Wave planning: group leaves by per-leaf comm/compute times.
+
+Two entry points build a ``WaveSchedule``:
+
+  * ``default_waves`` — build-time, geometry only.  Groups backprop-
+    ordered leaves by wire payload (``bucketing.payload_bytes_per_elem``
+    sizing, ``assign_buckets``-style greedy close) so tiny sparse
+    payloads amortise the per-collective latency.  No timings; the
+    predicted block is empty.
+  * ``plan_waves`` — measurement-driven.  Takes the same backprop-
+    ordered ``profiler.LeafSample`` list the ratio planner consumes
+    (measured ``t_backward``), prices each leaf's exchange with
+    ``planner.leaf_comm_time`` at the schedule's planned ratio, and
+    writes per-wave readiness times plus a predicted step timeline
+    (``predict_pipeline``) into the artifact — the number bench_runtime
+    checks achieved overlap against.
+
+The wave recurrence is ``cm.iteration_time_lags`` at wave granularity:
+wave w's collective can start once its last gradient lands
+(``t_ready``) and the wire is free; exposed comm is whatever the
+recurrence sticks out past the end of compute.  ``pipeline="async1"``
+instead overlaps the *whole* exchange with the next step's
+forward+backward, so its exposed comm is ``max(0, t_comm - t_compute)``
+— strictly no worse than wave on comm-dominated fits, at one step of
+staleness.
+
+Strategies that select over the whole-model vector (``slgs``,
+``wave_granularity == "model"``) degenerate to a single post-backward
+wave — planning honours the marker, it never splits them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+from repro.core import bucketing
+from repro.pipeline.buckets import Wave, WaveSchedule, leaf_names
+
+PIPELINE_MODES = ("off", "wave", "async1")
+# fallback wave target when no hardware fit is available yet
+DEFAULT_TARGET_BYTES = 1 << 18
+
+
+def latency_matched_bytes(hw, amortize: float = 8.0,
+                          lo: int = 1 << 14, hi: int = 1 << 24) -> int:
+    """Payload at which wire time = ``amortize`` x per-collective latency
+    (bytes = amortize * alpha / beta) — below it waves are latency-bound,
+    far above it they stop tapping backprop often enough to overlap."""
+    if hw is None or getattr(hw, "beta", 0.0) <= 0.0:
+        return DEFAULT_TARGET_BYTES
+    return int(min(hi, max(lo, amortize * hw.alpha / hw.beta)))
+
+
+def _leaf_nbytes(d: int, k: int | None) -> int:
+    """Wire payload for one leaf: sparse (value, index) pairs when a
+    budget k < d is planned, dense fp32 otherwise."""
+    if k is not None and int(k) < int(d):
+        return int(k) * bucketing.payload_bytes_per_elem("float32")
+    return 4 * int(d)
+
+
+def _group(nbytes_seq: Sequence[int], target_bytes: int) -> list[list[int]]:
+    """``bucketing.assign_buckets``'s greedy close over positions."""
+    groups: list[list[int]] = []
+    cur: list[int] = []
+    cur_b = 0
+    for pos, nb in enumerate(nbytes_seq):
+        if cur and cur_b + nb > target_bytes:
+            groups.append(cur)
+            cur, cur_b = [], 0
+        cur.append(pos)
+        cur_b += nb
+    if cur:
+        groups.append(cur)
+    return groups
+
+
+def predict_pipeline(waves: Sequence[Wave], *, t_forward: float,
+                     t_backward: float, pipeline: str) -> dict:
+    """Predicted step timeline for a wave partition (same keys as
+    ``planner.predict_iteration`` where they coincide)."""
+    t_comm = sum(w.t_comm for w in waves)
+    comp_end = t_forward + t_backward
+    if pipeline == "async1":
+        # step-N exchange runs against step-N+1 forward+backward
+        t_step = max(comp_end, t_comm)
+        exposed = max(0.0, t_comm - comp_end)
+    elif pipeline == "wave":
+        comm_done = 0.0
+        for w in waves:
+            comm_done = max(comm_done, w.t_ready) + w.t_comm
+        t_step = max(comp_end, comm_done)
+        exposed = max(0.0, t_step - comp_end)
+    else:  # "off": one monolithic post-backward exchange
+        t_step = comp_end + t_comm
+        exposed = t_comm
+    # exposed <= t_comm holds exactly (waves are ready before compute
+    # ends), but fp rounding can push the ratio a hair past 1 — clamp so
+    # the gauge never reports a negative fraction
+    overlap = max(0.0, 1.0 - exposed / t_comm) if t_comm > 0 else 1.0
+    return {"t_step": t_step, "t_comm": t_comm, "t_forward": t_forward,
+            "t_backward": t_backward, "exposed_comm": exposed,
+            "overlap": overlap, "pipeline": pipeline}
+
+
+def default_waves(params_like, ks: Any = None, *,
+                  granularity: str = "leaf",
+                  target_bytes: int | None = None,
+                  pipeline: str = "wave") -> WaveSchedule:
+    """Build-time wave partition from geometry alone (no measurements).
+
+    ``ks`` is the per-leaf budget pytree (``None`` leaves / ``None`` tree
+    = dense payloads).  Leaves are walked in backprop order (reversed
+    flatten order) and greedily grouped by wire payload."""
+    import jax
+
+    names = leaf_names(params_like)
+    dims = [x for x in jax.tree.leaves(
+        jax.tree.map(lambda l: int(_numel(l)), params_like))]
+    flat_k = jax.tree.leaves(ks) if ks is not None else [None] * len(names)
+    n = len(names)
+    order = list(range(n - 1, -1, -1))          # backprop order
+    nbytes = [_leaf_nbytes(dims[i], flat_k[i]) for i in order]
+    if granularity == "model":
+        # whole-model selection (slgs): one wave, FLATTEN order — the
+        # packed-vector strategies index the concatenation by flat id
+        waves = (Wave(leaf_ids=tuple(range(n)), names=tuple(names),
+                      nbytes=sum(nbytes)),)
+    else:
+        groups = _group(nbytes, target_bytes or DEFAULT_TARGET_BYTES)
+        waves = tuple(
+            Wave(leaf_ids=tuple(order[p] for p in g),
+                 names=tuple(names[order[p]] for p in g),
+                 nbytes=sum(nbytes[p] for p in g))
+            for g in groups)
+    ws = WaveSchedule(waves=waves, pipeline=pipeline,
+                      meta={"source": "default", "granularity": granularity})
+    ws.validate_cover(n)
+    return ws
+
+
+def plan_waves(leaves: Sequence, sched, p: int, hw, *,
+               t_forward: float = 0.0, pipeline: str = "wave",
+               granularity: str = "leaf",
+               target_bytes: int | None = None,
+               flat_names: Sequence[str] | None = None) -> WaveSchedule:
+    """Measurement-driven wave partition + predicted timeline.
+
+    ``leaves``: backprop-ordered ``profiler.LeafSample``-likes (``name``,
+    ``d``, ``t_backward``).  ``sched``: the planned ratio ``Schedule``
+    (``None`` prices every leaf dense).  ``flat_names``: leaf names in
+    flatten order, to bind global ids; defaults to the reversed-backprop
+    identity (exactly how ``profiler.backprop_leaves`` is built)."""
+    from repro.autotune import planner
+
+    n = len(leaves)
+    if flat_names is not None:
+        index = {nm: i for i, nm in enumerate(flat_names)}
+        ids = [index[leaf.name] for leaf in leaves]
+    else:
+        ids = list(range(n - 1, -1, -1))
+    ratio = ({lp.name: lp.ratio for lp in sched.leaves} if sched is not None
+             else {})
+    ks = [None if ratio.get(leaf.name, 1.0) <= 1.0
+          else max(1, int(round(leaf.d / ratio[leaf.name])))
+          for leaf in leaves]
+    nbytes = [_leaf_nbytes(leaf.d, k) for leaf, k in zip(leaves, ks)]
+    t_c = [planner.leaf_comm_time(leaf.d, ratio.get(leaf.name, 1.0), p, hw)
+           for leaf in leaves]
+    # readiness clock: forward, then backward leaf by leaf
+    clock = t_forward
+    ready = []
+    for leaf in leaves:
+        clock += max(0.0, leaf.t_backward)
+        ready.append(clock)
+    if granularity == "model":
+        # whole-model selection (slgs): one wave, FLATTEN order, ready
+        # only once the entire backward pass has finished
+        by_id = sorted(range(n), key=lambda pos: ids[pos])
+        waves = (Wave(leaf_ids=tuple(ids[pos] for pos in by_id),
+                      names=tuple(leaves[pos].name for pos in by_id),
+                      nbytes=sum(nbytes), t_comm=sum(t_c),
+                      t_ready=max(ready, default=t_forward)),)
+    else:
+        groups = _group(nbytes, target_bytes or latency_matched_bytes(hw))
+        waves = tuple(
+            Wave(leaf_ids=tuple(ids[pos] for pos in g),
+                 names=tuple(leaves[pos].name for pos in g),
+                 nbytes=sum(nbytes[pos] for pos in g),
+                 t_comm=sum(t_c[pos] for pos in g),
+                 t_ready=ready[g[-1]])
+            for g in groups)
+    t_backward = sum(max(0.0, leaf.t_backward) for leaf in leaves)
+    predicted = predict_pipeline(waves, t_forward=t_forward,
+                                 t_backward=t_backward, pipeline=pipeline)
+    ws = WaveSchedule(waves=waves, pipeline=pipeline, predicted=predicted,
+                      meta={"source": "planned", "granularity": granularity,
+                            "n_workers": int(p),
+                            "hardware": getattr(hw, "name", None)})
+    ws.validate_cover(n)
+    return ws
+
+
+def _numel(x) -> int:
+    import math
+    return int(math.prod(x.shape))

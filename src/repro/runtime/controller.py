@@ -147,6 +147,15 @@ class ReplanController:
         self.rcfg = rcfg or RuntimeConfig()
         self.mode = cfg.train_mode
         self.schedule = schedule if schedule is not None else run.schedule
+        #: live wave partition (repro.pipeline) when the run pipelines the
+        #: exchange; re-planned from measured leaf timings alongside the
+        #: ratio schedule and hot-swapped into the step on the same
+        #: hysteresis decision
+        self.waves = run.waves
+        self._m_overlap = self._metrics.gauge(
+            "replan_overlap_frac",
+            "Wave-plan comm overlap under the fresh fit "
+            "(source=predicted).", ("source",))
         # donate=False: a swap must not invalidate the live state buffers;
         # the live schedule is owned by the controller, not the RunConfig
         self._run = dataclasses.replace(run, mode=self.mode, schedule=None,
@@ -184,9 +193,33 @@ class ReplanController:
     # -- step ownership ----------------------------------------------------
     def _build(self) -> None:
         from repro import api
-        run = dataclasses.replace(self._run, schedule=self.schedule)
+        run = dataclasses.replace(self._run, schedule=self.schedule,
+                                  waves=self.waves)
         self.step_fn, self.state_specs, self.meta = api.build_train_step(
             self.cfg, self.mesh, run)
+
+    def _plan_waves(self, leaves, sched, t_fwd, hw):
+        """Measurement-driven wave partition for the candidate schedule
+        (``repro.pipeline.waves.plan_waves``): measured per-leaf backward
+        times set wave readiness, the fresh wire fit prices each wave's
+        collective, and the artifact carries the predicted timeline the
+        achieved-overlap assertion checks against."""
+        from repro.pipeline import waves as WW
+        gran = "leaf"
+        live = self.meta.get("waves")
+        if live is not None and live.meta:
+            gran = live.meta.get("granularity", "leaf")
+        # hier modes: price the cross-pod (outer) tier — the wire the
+        # plan budgets, and the hw the candidate was fitted against
+        flat = (sched.outer if isinstance(sched, S.HierSchedule)
+                else sched)
+        p = (self.tier_workers[1] if self.mode in S.HIER_MODES
+             else int(self.meta["n_workers"]))
+        return WW.plan_waves(
+            leaves, flat, p, hw,
+            t_forward=t_fwd, pipeline=self._run.pipeline,
+            granularity=gran,
+            target_bytes=self._run.wave_target_bytes)
 
     def step(self, state, batch):
         """Run one train step; ticks telemetry and re-plans when a
@@ -392,6 +425,14 @@ class ReplanController:
         t_new = pred["t_lags"]
         improvement = (t_cur - t_new) / t_cur if t_cur > 0 else 0.0
         swapped = improvement > self.rcfg.swap_threshold
+        if self._run.pipeline != "off":
+            # re-partition the waves against the fresh measurements; the
+            # new partition rides the SAME hysteresis decision (a rebuild
+            # is a recompile), but its predicted overlap is always fresh
+            self.waves = self._plan_waves(
+                leaves, candidate if swapped else current, t_fwd, hw)
+            self._m_overlap.set(float(self.waves.predicted["overlap"]),
+                                source="predicted")
         if swapped:
             self.schedule = candidate
             self._build()

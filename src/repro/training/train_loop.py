@@ -24,20 +24,25 @@ from repro.core import assumption
 from repro.optim import optimizers as opt
 
 
-def _sim_exchange(run: RunConfig, params, *, n_workers: int | None = None):
-    """Build the simulation-surface exchange through the registry,
-    enforcing the shared schedule-ingestion contract."""
+def _sim_spec(run: RunConfig, params, *, n_workers: int | None = None):
+    """The simulation-surface ``ExchangeSpec``, built through the
+    registry so the shared schedule-ingestion contract applies."""
     from repro.api import registry as R
     mode = run.resolved_mode()
     ks = R.resolve_schedule_ks(run.schedule, mode, params,
                                n_workers=n_workers)
-    spec = R.ExchangeSpec(mode=mode, params_like=params,
+    return R.ExchangeSpec(mode=mode, params_like=params,
                           ratio=run.resolved_ratio(), ks=ks,
                           compressor=run.compressor, sim=True,
                           n_workers=n_workers or 1,
                           ratio_inner=run.resolved_ratio_inner(),
-                          n_inner=run.inner_workers or 1)
-    return R.build_exchange(spec)
+                          n_inner=run.inner_workers or 1,
+                          momentum_correction=run.momentum_correction)
+
+
+def _sim_exchange(run: RunConfig, params, *, n_workers: int | None = None):
+    from repro.api import registry as R
+    return R.build_exchange(_sim_spec(run, params, n_workers=n_workers))
 
 
 class SimTrainer:
@@ -56,21 +61,25 @@ class SimTrainer:
         self.run_config = run
         self.mode = run.resolved_mode()
         self.n_workers = n_workers
-        self.exchange = _sim_exchange(run, params, n_workers=n_workers)
+        from repro.api import registry as R
+        spec = _sim_spec(run, params, n_workers=n_workers)
+        self.exchange = R.build_exchange(spec)
         self.optimizer = opt.SGD(momentum=run.momentum)
         per_worker_like = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, jnp.float32),
             params)
         self._step = jax.jit(self._build_step())
+        # DGC per-worker velocity comes from the spec's extra-state hook —
+        # the same source the distributed surface materializes, so both
+        # agree on layout (leading (P,) axis, f32) by construction
+        extra = spec.init_extra_state()
         self.state = {
             "params": params,
             # the exchange owns its EF-state layout (single residual tree,
             # or one tree per tier for two-level strategies); DenseExchange
             # init is ()
             "ef": self.exchange.init(per_worker_like),
-            "mom": (jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                 per_worker_like)
-                    if run.momentum_correction else ()),
+            "mom": extra.get("mom", ()),
             "opt": self.optimizer.init(params),
             "step": jnp.zeros((), jnp.int32),
         }

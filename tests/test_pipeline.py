@@ -1,0 +1,605 @@
+"""repro.pipeline: wave artifacts + planning math, the waved-exchange
+regrouping laws on the simulation surface, achieved-overlap attribution,
+the fake-trace wave synthesis, and the ``check --min-overlap`` gate.
+
+The subprocess battery at the bottom proves the headline contract on the
+8-device host platform: ``pipeline="wave"`` is **bitwise** equal to the
+monolithic post-backward exchange — losses, params AND error-feedback
+residuals, step for step — for every registered strategy (deterministic
+and sampled compressors), and ``pipeline="async1"`` is exactly the same
+trajectory delayed by one step (bounded staleness, not an approximation).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm_model as cm
+from repro.pipeline import buckets as WB
+from repro.pipeline import waves as WW
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HW = cm.Hardware(name="test_wire", alpha=1e-5, beta=5e-9, flops=1e12)
+
+
+# ---------------------------------------------------------------------------
+# artifacts: cover invariant, JSON round-trip, name binding
+# ---------------------------------------------------------------------------
+
+def _two_waves(pipeline="wave"):
+    return WB.WaveSchedule(waves=(
+        WB.Wave(leaf_ids=(1, 0), names=("w", "v"), nbytes=272,
+                t_comm=1e-4, t_ready=2e-3),
+        WB.Wave(leaf_ids=(2,), names=("x",), nbytes=80,
+                t_comm=5e-5, t_ready=3e-3),
+    ), pipeline=pipeline, predicted={"overlap": 0.5},
+       meta={"granularity": "leaf"})
+
+
+class TestWaveSchedule:
+    def test_cover_invariant(self):
+        ws = _two_waves()
+        ws.validate_cover(3)
+        with pytest.raises(ValueError, match="expected exactly"):
+            ws.validate_cover(4)            # leaf 3 never exchanged
+        dup = WB.WaveSchedule(waves=ws.waves + ws.waves[-1:])
+        with pytest.raises(ValueError, match="expected exactly"):
+            dup.validate_cover(3)           # leaf 2 exchanged twice
+
+    def test_json_roundtrip(self):
+        ws = _two_waves(pipeline="async1")
+        back = WB.WaveSchedule.from_json(ws.to_json())
+        assert back == ws
+        assert back.pipeline == "async1"
+        assert back.predicted["overlap"] == 0.5
+        with pytest.raises(ValueError, match="version"):
+            WB.WaveSchedule.from_json('{"version": 99, "waves": []}')
+
+    def test_bind_rederives_ids_from_names(self):
+        # persisted schedules carry names; ids are per-process flatten
+        # positions — bind against a differently-ordered tree must remap
+        params = {"v": jnp.zeros(20), "w": jnp.zeros(48), "x": jnp.zeros(8)}
+        ws = _two_waves()
+        bound = WB.bind(ws, params)
+        names = WB.leaf_names(params)
+        for w in bound.waves:
+            assert w.leaf_ids == tuple(names.index(n) for n in w.names)
+        missing = dataclasses.replace(
+            ws, waves=(dataclasses.replace(ws.waves[0],
+                                           names=("nope", "v")),) +
+            ws.waves[1:])
+        with pytest.raises(ValueError, match="not in params"):
+            WB.bind(missing, params)
+
+    def test_stats_via_bucketing_view(self):
+        s = WB.stats(_two_waves())
+        assert s["n_buckets"] == 2
+        assert s["max_bytes"] == 272 and s["min_bytes"] == 80
+
+
+# ---------------------------------------------------------------------------
+# planning: grouping, latency matching, predicted timeline
+# ---------------------------------------------------------------------------
+
+class TestPlanning:
+    def test_default_waves_groups_in_backprop_order(self):
+        params = {"a": jnp.zeros(100), "b": jnp.zeros(100),
+                  "c": jnp.zeros(100)}
+        # dense payload 400 B/leaf, target 900 B -> waves of 2+1 leaves,
+        # walked back-to-front (reversed flatten = backprop order)
+        ws = WW.default_waves(params, None, target_bytes=900)
+        ws.validate_cover(3)
+        assert [w.names for w in ws.waves] == [("c", "b"), ("a",)]
+
+    def test_default_waves_model_granularity_single_flatten_wave(self):
+        # whole-model selection (slgs) must never be split, and its ids
+        # must stay in FLATTEN order (the packed vector indexes by them)
+        params = {"a": jnp.zeros(4), "b": jnp.zeros(4)}
+        ws = WW.default_waves(params, None, granularity="model",
+                              target_bytes=1)
+        assert ws.n_waves == 1
+        assert ws.waves[0].leaf_ids == (0, 1)
+
+    def test_sparse_payload_sizing(self):
+        # ks halves the wire payload vs dense when k < d
+        params = {"a": jnp.zeros(1000)}
+        dense = WW.default_waves(params, None)
+        sparse = WW.default_waves(params, {"a": 10})
+        assert dense.waves[0].nbytes == 4000
+        assert sparse.waves[0].nbytes < dense.waves[0].nbytes
+
+    def test_latency_matched_bytes(self):
+        # alpha/beta = 2000 B -> 8x amortization = 16000, clamped at lo
+        assert WW.latency_matched_bytes(HW) == max(1 << 14, 16000)
+        assert WW.latency_matched_bytes(None) == WW.DEFAULT_TARGET_BYTES
+
+    def test_predict_pipeline_math(self):
+        waves = (WB.Wave((0,), ("a",), t_comm=2.0, t_ready=2.0),
+                 WB.Wave((1,), ("b",), t_comm=2.0, t_ready=4.0))
+        kw = dict(t_forward=1.0, t_backward=3.0)
+        off = WW.predict_pipeline(waves, pipeline="off", **kw)
+        assert off["t_step"] == 8.0 and off["exposed_comm"] == 4.0
+        assert off["overlap"] == 0.0
+        # wave: w0 starts at 2, done 4; w1 starts max(4,4)=4, done 6;
+        # compute ends at 4 -> 2s exposed, overlap 0.5
+        wav = WW.predict_pipeline(waves, pipeline="wave", **kw)
+        assert wav["t_step"] == 6.0 and wav["exposed_comm"] == 2.0
+        assert wav["overlap"] == 0.5
+        # async1: whole 4s exchange against the 4s of next-step compute
+        asy = WW.predict_pipeline(waves, pipeline="async1", **kw)
+        assert asy["t_step"] == 4.0 and asy["exposed_comm"] == 0.0
+        assert asy["overlap"] == 1.0
+
+    def test_plan_waves_readiness_and_prediction(self):
+        from repro.autotune import profiler as PF
+        from repro.autotune import schedule as S
+        leaves = [PF.LeafSample(name=f"l{i}", d=4096, backward_flops=1.0,
+                                t_backward=1e-3) for i in range(6)]
+        plans = tuple(S.LeafPlan(name=l.name, d=l.d, ratio=8.0, k=512)
+                      for l in leaves)
+        sched = S.Schedule(arch="t", shape="s", n_workers=8,
+                           hardware={}, leaves=plans)
+        ws = WW.plan_waves(leaves, sched, 8, HW, t_forward=2e-3,
+                           pipeline="wave", target_bytes=8192)
+        ws.validate_cover(6)
+        assert ws.n_waves > 1
+        # readiness is monotone in backprop order and starts after fwd
+        readies = [w.t_ready for w in ws.waves]
+        assert readies == sorted(readies) and readies[0] > 2e-3
+        assert all(w.t_comm > 0.0 for w in ws.waves)
+        p = ws.predicted
+        assert 0.0 <= p["overlap"] <= 1.0
+        assert p["t_step"] <= p["t_forward"] + p["t_backward"] + p["t_comm"]
+        # the artifact survives the wire: plan -> json -> bind-ready
+        back = WB.WaveSchedule.from_json(ws.to_json())
+        assert back.predicted["overlap"] == p["overlap"]
+
+
+# ---------------------------------------------------------------------------
+# execution: waved regrouping == monolithic exchange (sim surface)
+# ---------------------------------------------------------------------------
+
+def _sim_updates(key, n_workers=4):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"v": jax.random.normal(k1, (n_workers, 20)),
+            "w": jax.random.normal(k2, (n_workers, 48)),
+            "x": jax.random.normal(k3, (n_workers, 8))}
+
+
+def _split_waves(updates):
+    names = WB.leaf_names(jax.tree.map(lambda u: u[0], updates))
+    n = len(names)
+    return (WB.Wave(leaf_ids=tuple(range(n - 1, 0, -1)),
+                    names=tuple(names[n - 1:0:-1])),
+            WB.Wave(leaf_ids=(0,), names=(names[0],)))
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("lags_dp", dict(ratio=4.0)),
+    ("lags_dp", dict(ratio=4.0, compressor="randk")),
+    ("dense", dict()),
+    ("lags_hier2", dict(ratio=4.0, ratio_inner=2.0, n_inner=2)),
+])
+def test_waved_exchange_bitwise_matches_monolithic(mode, kw):
+    from repro import api
+    from repro.api import registry as R
+    from repro.pipeline import step as WS
+    updates = _sim_updates(jax.random.PRNGKey(3))
+    params = jax.tree.map(lambda u: u[0], updates)
+    exch = api.build_exchange(api.ExchangeSpec(
+        mode=mode, params_like=params, sim=True, n_workers=4, **kw))
+    state = exch.init(updates)
+    key = jax.random.PRNGKey(7)
+    mono_mean, mono_state = exch.exchange(updates, state, None, key=key)
+    tiers = R.get_exchange(mode).ef_tiers
+    wav_mean, wav_state = WS.waved_exchange(
+        exch, _split_waves(updates), updates, state, None, key=key,
+        tiers=tiers)
+    for a, b in zip(jax.tree.leaves(mono_mean), jax.tree.leaves(wav_mean)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(mono_state),
+                    jax.tree.leaves(wav_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slgs_rejects_split_waves():
+    """Whole-model selection cannot be regrouped — the registry marks it
+    ``wave_granularity="model"`` and the bucket surface enforces it."""
+    from repro import api
+    from repro.api import registry as R
+    from repro.pipeline import step as WS
+    updates = _sim_updates(jax.random.PRNGKey(3))
+    params = jax.tree.map(lambda u: u[0], updates)
+    exch = api.build_exchange(api.ExchangeSpec(
+        mode="slgs", params_like=params, ratio=4.0, sim=True, n_workers=4))
+    assert exch.wave_granularity == "model"
+    state = exch.init(updates)
+    with pytest.raises(ValueError):
+        WS.waved_exchange(exch, _split_waves(updates), updates, state,
+                          None, key=jax.random.PRNGKey(0))
+    # the single-wave (degenerate) schedule is exactly the monolithic path
+    names = WB.leaf_names(params)
+    whole = (WB.Wave(leaf_ids=tuple(range(len(names))),
+                     names=tuple(names)),)
+    mono_mean, _ = exch.exchange(updates, state, None,
+                                 key=jax.random.PRNGKey(0))
+    wav_mean, _ = WS.waved_exchange(exch, whole, updates, state, None,
+                                    key=jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(mono_mean), jax.tree.leaves(wav_mean)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# DGC extra state: one init hook feeds both surfaces
+# ---------------------------------------------------------------------------
+
+class TestExtraState:
+    def test_init_extra_state_layout(self):
+        from repro import api
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((3,), jnp.bfloat16)}
+        spec = api.ExchangeSpec(mode="lags_dp", params_like=params,
+                                ratio=4.0, sim=True, n_workers=3,
+                                momentum_correction=0.9)
+        extra = spec.init_extra_state()
+        assert set(extra) == {"mom"}
+        assert extra["mom"]["w"].shape == (3, 4, 4)
+        assert extra["mom"]["b"].shape == (3, 3)
+        assert all(x.dtype == jnp.float32
+                   for x in jax.tree.leaves(extra["mom"]))
+        # shape-only callers go through eval_shape without materializing
+        shapes = jax.eval_shape(spec.init_extra_state)
+        assert shapes["mom"]["w"].shape == (3, 4, 4)
+        # mc == 0: no extra state at all (state-dict layout stability)
+        off = api.ExchangeSpec(mode="lags_dp", params_like=params,
+                               ratio=4.0, sim=True, n_workers=3)
+        assert off.init_extra_state() == {}
+
+    def test_sim_trainer_sources_mom_from_hook(self):
+        from repro import api
+        from repro.training import train_loop as TL
+
+        def loss_fn(p, b):
+            return (jnp.mean((p["w"] - b) ** 2), {})
+
+        params = {"w": jnp.linspace(-1.0, 1.0, 16)}
+        run = api.RunConfig(mode="lags_dp", ratio=4.0, lr=0.2,
+                            momentum_correction=0.9)
+        tr = TL.SimTrainer(loss_fn, params, run, n_workers=2)
+        assert tr.state["mom"]["w"].shape == (2, 16)
+        assert tr.state["mom"]["w"].dtype == jnp.float32
+        batch = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 16))
+        tr.state, _ = tr._step(tr.state, batch)
+        assert float(jnp.abs(tr.state["mom"]["w"]).max()) > 0.0
+        off = TL.SimTrainer(loss_fn, params,
+                            api.RunConfig(mode="lags_dp", ratio=4.0),
+                            n_workers=2)
+        assert off.state["mom"] == ()
+
+    def test_wave_pipeline_rejects_momentum_correction(self):
+        # wave taps compute lr*g inside backprop; DGC's velocity update
+        # needs the full gradient first — the config refuses the combo
+        from repro import api
+        with pytest.raises(ValueError, match="momentum_correction"):
+            api.RunConfig(pipeline="wave", momentum_correction=0.9)
+        api.RunConfig(pipeline="async1", momentum_correction=0.9)
+        with pytest.raises(ValueError, match="pipeline"):
+            api.RunConfig(pipeline="surge")
+
+
+# ---------------------------------------------------------------------------
+# overlap attribution: pure interval arithmetic + the metrics family
+# ---------------------------------------------------------------------------
+
+def _trace(events):
+    from repro.observe.trace import Trace, TraceEvent
+    return Trace(events=tuple(TraceEvent(n, s, d) for n, s, d in events),
+                 meta={})
+
+
+class TestOverlapReport:
+    def test_interval_math(self):
+        from repro.observe import names
+        from repro.pipeline import overlap as PO
+        tr = _trace([
+            (names.bwd_name("a"), 0.0, 1.0),
+            (names.bwd_name("b"), 1.0, 1.0),   # compute union = [0, 2]
+            (names.comm_name("flat", "allgather", "wave0",
+                             nbytes=8, p=2), 0.5, 1.0),   # fully hidden
+            (names.comm_name("flat", "allgather", "wave1",
+                             nbytes=8, p=2), 1.5, 1.0),   # half exposed
+        ])
+        rep = PO.overlap_report(tr)
+        assert rep["comm_s"] == 2.0
+        assert rep["hidden_s"] == pytest.approx(1.5)
+        assert rep["exposed_s"] == pytest.approx(0.5)
+        assert rep["overlap"] == pytest.approx(0.75)
+        by_label = {r["label"]: r for r in rep["per_comm"]}
+        assert by_label["wave0"]["exposed_s"] == pytest.approx(0.0)
+        assert by_label["wave1"]["exposed_s"] == pytest.approx(0.5)
+
+    def test_include_forward_for_async1(self):
+        from repro.observe import names
+        from repro.pipeline import overlap as PO
+        tr = _trace([
+            (names.FWD, 0.0, 1.0),
+            (names.bwd_name("a"), 1.0, 1.0),
+            (names.comm_name("flat", "allreduce", "wave0",
+                             nbytes=8, p=2), 0.0, 1.0),
+        ])
+        assert PO.overlap_report(tr)["overlap"] == pytest.approx(0.0)
+        rep = PO.overlap_report(tr, include_forward=True)
+        assert rep["overlap"] == pytest.approx(1.0)
+        # the observe-side delegation wrapper agrees
+        from repro.observe import attribution as OA
+        assert OA.overlap_report(tr, include_forward=True) == rep
+
+    def test_emit_metrics_family(self):
+        from repro.observe import metrics as OM
+        from repro.pipeline import overlap as PO
+        reg = OM.MetricsRegistry()
+        PO.emit_metrics({"overlap": 0.75, "per_comm": [
+            {"label": "wave0", "exposed_s": 0.0, "hidden_s": 1.0},
+        ]}, reg, mode="lags_dp")
+        rows = {(r["name"], tuple(sorted(r["labels"].items()))): r["value"]
+                for r in reg.snapshot_rows()}
+        assert rows[("train_overlap_frac",
+                     (("mode", "lags_dp"), ("source", "achieved")))] == 0.75
+        hidden = [v for (n, lb), v in rows.items()
+                  if n == "train_overlap_comm_seconds"
+                  and dict(lb)["kind"] == "hidden"]
+        assert hidden == [1.0]
+
+
+class TestFakeTraceWaves:
+    def _backend(self, wave_fn):
+        from repro.autotune import profiler as PF
+        from repro.observe import trace as T
+        leaves = tuple(PF.LeafSample(name=f"l{i}", d=1024,
+                                     backward_flops=1.0, t_backward=2e-3)
+                       for i in range(4))
+        return T.FakeTraceBackend(leaves, {"flat": HW}, {"flat": 8},
+                                  t_forward=4e-3, static_ratio=64.0,
+                                  wave_fn=wave_fn)
+
+    def _waves(self, pipeline="wave"):
+        return WB.WaveSchedule(waves=(
+            WB.Wave(leaf_ids=(0, 1), names=("l0", "l1")),
+            WB.Wave(leaf_ids=(2, 3), names=("l2", "l3")),
+        ), pipeline=pipeline)
+
+    def test_wave_synthesis_and_overlap(self):
+        from repro.pipeline import overlap as PO
+        tr = self._backend(lambda: self._waves()).capture(0)
+        labels = [e.name for e in tr.events if "/comm/" in e.name]
+        assert len(labels) == 2 and all("wave" in l for l in labels)
+        rep = PO.overlap_report(tr)
+        assert rep["comm_s"] > 0.0 and 0.0 < rep["overlap"] <= 1.0
+        # async1 drops the readiness gate: never less overlap than wave
+        tra = self._backend(
+            lambda: self._waves("async1")).capture(0)
+        repa = PO.overlap_report(tra, include_forward=True)
+        assert repa["overlap"] >= rep["overlap"]
+
+    def test_default_path_unchanged(self):
+        # wave_fn returning None must keep the classic per-leaf synthesis
+        # byte-for-byte (the pre-pipeline consumers fit wires off it)
+        a = self._backend(lambda: None).capture(3)
+        b = self._backend(None).capture(3)
+        assert a.events == b.events
+
+
+class TestCheckMinOverlap:
+    def _snapshot(self, tmp_path, with_overlap):
+        from repro.observe import events as OE
+        from repro.observe import metrics as OM
+        from repro.pipeline import overlap as PO
+        reg = OM.MetricsRegistry()
+        reg.counter("train_steps_total", "x", ("mode",)).inc(mode="lags_dp")
+        if with_overlap:
+            PO.emit_metrics({"overlap": 0.6, "per_comm": []}, reg,
+                            mode="lags_dp")
+        path = str(tmp_path / ("with" if with_overlap else "without"))
+        OM.save_snapshot(path, reg, OE.EventLog(), meta={})
+        return path
+
+    def test_gate(self, tmp_path):
+        from repro.observe import check as C
+        from repro.observe import metrics as OM
+        snap = OM.load_snapshot(self._snapshot(tmp_path, True))
+        assert C.validate(snap) == []                      # flag is opt-in
+        assert C.validate(snap, min_overlap=0.5) == []
+        bad = C.validate(snap, min_overlap=0.9)
+        assert bad and "min-overlap" in bad[0]
+        miss = C.validate(OM.load_snapshot(self._snapshot(tmp_path, False)),
+                          min_overlap=0.1)
+        assert miss and "no overlap gauges" in miss[0]
+
+    def test_cli(self, tmp_path):
+        from repro.observe import check as C
+        path = self._snapshot(tmp_path, True)
+        assert C.main([path, "--min-overlap", "0.5"]) == 0
+        assert C.main([path, "--min-overlap", "0.95"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# controller: wave re-planning rides the replan loop
+# ---------------------------------------------------------------------------
+
+def test_controller_plans_waves_and_reports_overlap():
+    from repro.api import RunConfig
+    from repro.configs import base
+    from repro.launch import mesh as M
+    from repro.observe import metrics as OM
+    from repro.runtime.controller import ReplanController, RuntimeConfig
+    from repro.autotune import profiler
+    cfg = dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"), n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+        dtype="float32", param_dtype="float32",
+        train_mode="lags_dp", compression_ratio=8.0)
+    mesh = M.make_host_mesh(data=1, model=1)
+    reg = OM.MetricsRegistry()
+
+    def probe(mesh, axes):
+        out = []
+        for n in (1 << 12, 1 << 16, 1 << 20):
+            out.append(profiler.CommSample(
+                "allgather", float(n), 8,
+                cm.allgather_time(float(n), 8, HW)))
+        return out
+
+    ctl = ReplanController(
+        cfg, mesh, rcfg=RuntimeConfig(replan_every=10, fence_every=1,
+                                      min_step_samples=1),
+        run=RunConfig(pipeline="wave", chunk=16, loss_chunk=16),
+        comm_probe=probe, metrics=reg)
+    assert ctl.meta.get("waves") is not None          # geometry default
+    assert not ctl.meta["waves"].predicted            # no timings yet
+    ctl.meta["n_workers"] = 8
+    for i in range(4):
+        ctl.telemetry.record_step(i, 0.05)
+    ev = ctl.maybe_replan(10)
+    ws = ctl.waves
+    assert isinstance(ws, WB.WaveSchedule)
+    assert ws.meta["source"] == "planned"
+    assert 0.0 <= ws.predicted["overlap"] <= 1.0
+    rows = [r for r in reg.snapshot_rows()
+            if r["name"] == "replan_overlap_frac"]
+    assert rows and rows[0]["labels"]["source"] == "predicted"
+    assert rows[0]["value"] == pytest.approx(ws.predicted["overlap"])
+    if ev.swapped:
+        # the rebuilt step runs the freshly planned partition
+        assert ctl.meta["waves"].n_waves == ws.n_waves
+
+
+# ---------------------------------------------------------------------------
+# subprocess battery: the bitwise contract on the 8-device host platform
+# ---------------------------------------------------------------------------
+
+def _run(script: str, n_dev: int = 8, timeout: int = 540):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+PIPE_COMMON = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import api, compat
+from repro.configs import base
+from repro.launch import mesh as M, train as TR, specs as SP
+
+def run_mode(mode, pipeline, steps=2, compressor="topk_exact", pod=1,
+             ratio_inner=None):
+    cfg = dataclasses.replace(
+        base.get_smoke_config("tinyllama_1_1b"),
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=64,
+        train_mode=mode, compression_ratio=8.0,
+        dtype="float32", param_dtype="float32")
+    mesh = M.make_host_mesh(data=4 if pod == 1 else 2, model=2, pod=pod)
+    shape = base.InputShape("t", 16, 8, "train")
+    run = api.RunConfig(lr=0.1, chunk=16, loss_chunk=16, donate=False,
+                        pipeline=pipeline, compressor=compressor,
+                        ratio_inner=ratio_inner,
+                        # tiny target -> every wave-able mode really
+                        # splits into several waves at this model size
+                        wave_target_bytes=2048)
+    step, state_specs, meta = api.build_train_step(cfg, mesh, run)
+    state, _ = TR.init_state(cfg, mesh, pipeline=pipeline)
+    batch = SP.concrete_batch(cfg, shape)
+    losses = []
+    with compat.set_mesh(mesh):
+        for t in range(steps):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+    return state, losses, meta
+
+def bitwise(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    return all(np.array_equal(np.asarray(jax.device_get(x)),
+                              np.asarray(jax.device_get(y)))
+               for x, y in zip(fa, fb))
+
+def assert_parity(mode, compressor="topk_exact", pod=1, ratio_inner=None):
+    s_off, l_off, _ = run_mode(mode, "off", compressor=compressor,
+                               pod=pod, ratio_inner=ratio_inner)
+    s_wav, l_wav, meta = run_mode(mode, "wave", compressor=compressor,
+                                  pod=pod, ratio_inner=ratio_inner)
+    assert l_off == l_wav, (mode, compressor, l_off, l_wav)
+    assert bitwise(s_off["params"], s_wav["params"]), (mode, "params")
+    assert bitwise(s_off["ef"], s_wav["ef"]), (mode, "ef")
+    n_waves = meta["waves"].n_waves if meta.get("waves") else 0
+    print(f"OK {mode}/{compressor} pod={pod} bitwise n_waves={n_waves}")
+    return n_waves
+"""
+
+
+@pytest.mark.slow
+def test_wave_bitwise_parity_flat_strategies():
+    """pipeline="wave" == "off" bitwise (loss, params, EF; 2 steps) for
+    the flat strategies, deterministic AND sampled compressors; the
+    multi-wave split must actually happen (not the degenerate 1-wave)."""
+    script = PIPE_COMMON + """
+assert assert_parity("lags_dp", "topk_exact") > 1
+assert assert_parity("lags_dp", "randk") > 1
+assert assert_parity("dense") > 1
+# slgs selects over the whole model: exactly one (degenerate) wave
+assert assert_parity("slgs") == 1
+print("OK flat battery")
+"""
+    out = _run(script)
+    assert "OK flat battery" in out
+
+
+@pytest.mark.slow
+def test_wave_bitwise_parity_hier_strategies():
+    """Same contract on a 2-pod mesh: lags_hier (pure-auto vmap-over-pod)
+    and lags_hier2 (two-tier EF, both tiers sparse, sampled compressor)."""
+    script = PIPE_COMMON + """
+assert assert_parity("lags_hier2", "randk", pod=2, ratio_inner=4.0) > 1
+assert_parity("lags_hier", "topk_exact", pod=2)
+print("OK hier battery")
+"""
+    out = _run(script)
+    assert "OK hier battery" in out
+
+
+@pytest.mark.slow
+def test_async1_bounded_staleness():
+    """pipeline="async1" is one-step-STALE SGD, with an exactly
+    reproducible sync prefix: step 0 applies the zero pending update
+    (params untouched), step 1 applies step 0's exchange — identical to
+    "off"'s first update (same key, same EF zero-state) because the
+    params had not moved yet.  From step 2 on the applied update is
+    computed from gradients one step older than the live params, so the
+    trajectories legitimately diverge (bounded staleness, PAPERS.md) —
+    an exactly-delayed trajectory would require a synchronous exchange,
+    which is the thing async1 exists to avoid."""
+    script = PIPE_COMMON + """
+s_off, l_off, _ = run_mode("lags_dp", "off", steps=3)
+s_a, l_a, _ = run_mode("lags_dp", "async1", steps=4)
+assert "pending" in s_a and "pending" not in s_off
+assert all(np.isfinite(l) for l in l_a)
+# sync prefix, exactly: [L0, L0, L1, ...]
+assert l_a[0] == l_off[0] and l_a[1] == l_off[0]
+assert l_a[2] == l_off[1]
+# ... then honest staleness: stale-gradient updates, not a replay
+assert l_a[3] != l_off[2]
+print("OK async1 staleness", l_a)
+"""
+    out = _run(script)
+    assert "OK async1 staleness" in out
