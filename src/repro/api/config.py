@@ -61,6 +61,17 @@ class RunConfig:
     # distributed surface ignores this and reads the mesh instead.
     inner_workers: int | None = None
     compressor: str = "topk_exact"
+    # which implementation the exchanges select with: "xla" (lax.top_k /
+    # masked-argmax HLO) or "kernel" (the Pallas TPU kernels in
+    # repro.kernels — fused accumulate+select+payload-pack where
+    # available; interpret mode off-TPU).  Resolved per compressor via
+    # core.compressors.KERNEL_BACKED at build time.
+    selection_backend: str = "xla"
+    # inner-tier (intra-pod) compressor override for "lags_hier2"; None =
+    # same as ``compressor``.  The inner tier selects on each worker's
+    # full-size gradient, so block-parallel compressors ("topk_block")
+    # belong here while the outer tier can stay exact.
+    inner_compressor: str | None = None
     block_size: int = 4096
     # optional autotuned per-leaf plan (repro.autotune Schedule /
     # HierSchedule, or anything with a ``ks_tree(params_like)`` method);
@@ -99,6 +110,10 @@ class RunConfig:
             raise ValueError(
                 f"pipeline={self.pipeline!r} not in ('off', 'wave', "
                 f"'async1')")
+        if self.selection_backend not in ("xla", "kernel"):
+            raise ValueError(
+                f"selection_backend={self.selection_backend!r} not in "
+                f"('xla', 'kernel')")
         if self.pipeline == "wave" and self.momentum_correction > 0.0:
             # the wave taps form updates from raw cotangents inside
             # backprop; the DGC velocity is a post-backward recurrence

@@ -68,6 +68,11 @@ class ExchangeSpec:
                                      # or a TieredKs for two-tier modes
     block_size: int = 4096
     compressor: str = "topk_exact"
+    # "xla" | "kernel": which implementation the exchange selects with
+    # (kernel = the Pallas kernels, resolved via compressors.KERNEL_BACKED)
+    selection_backend: str = "xla"
+    # lags_hier2 inner-tier compressor override (None = ``compressor``)
+    inner_compressor: str | None = None
     sim: bool = False                # leading-P simulation vs distributed
     n_workers: int = 1
     # two-tier (lags_hier2) knobs: intra-pod ratio fallback + how many of
@@ -120,6 +125,34 @@ class ExchangeSpec:
         if isinstance(self.ks, TieredKs) and self.ks.inner is not None:
             return self.ks.inner
         return lags.ks_from_ratio(self.params_like, self.ratio_inner)
+
+    def resolved_compressor(self, *, inner: bool = False) -> str:
+        """The compressor name the exchange should actually run, after
+        ``selection_backend`` resolution: under the "kernel" backend each
+        XLA-path name maps to its Pallas variant
+        (``compressors.KERNEL_BACKED``); names with no kernel variant
+        (randk, topk_sampled) raise there.  ``inner=True`` resolves the
+        lags_hier2 intra-pod tier (``inner_compressor`` override)."""
+        name = (self.inner_compressor or self.compressor) if inner \
+            else self.compressor
+        if self.selection_backend == "kernel":
+            return C.kernel_backed(name)
+        return name
+
+
+#: Compressors that take the spec's ``block_size`` as a kwarg.
+_BLOCK_SIZED = frozenset({
+    "topk_hier", "topk_hier_kernel", "topk_hier_ef_kernel",
+    "topk_block", "topk_block_kernel", "topk_block_ef_kernel",
+})
+
+
+def _sel_kwargs(name: str, spec: "ExchangeSpec") -> tuple:
+    """compressor_kwargs threading the spec's block geometry into the
+    block/hier compressor family (other names take no kwargs)."""
+    if name in _BLOCK_SIZED:
+        return (("block_size", spec.block_size),)
+    return ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,23 +261,30 @@ def _dense_factory(spec: ExchangeSpec):
 def _slgs_factory(spec: ExchangeSpec):
     """Single-layer (whole-model-vector) global Top-k baseline."""
     d_total = sum(lags._size(x) for x in jax.tree.leaves(spec.params_like))
+    name = spec.resolved_compressor()
     return lags.SLGSExchange(
         k_total=max(1, int(round(d_total / spec.ratio))),
-        compressor_name=spec.compressor)
+        compressor_name=name, compressor_kwargs=_sel_kwargs(name, spec))
 
 
 def _lags_factory(spec: ExchangeSpec):
     """Layer-wise adaptive sparsification (the paper).
 
-    Simulation uses the exact per-leaf compressor (``LAGSExchange``, the
+    Simulation uses the per-leaf compressor (``LAGSExchange``, the
     semantics reference); the distributed step uses the shard-aligned
     block layout (``BlockLAGSExchange``) so selection/scatter stay
-    collective-free under GSPMD.
+    collective-free under GSPMD.  ``selection_backend="kernel"`` swaps
+    the Pallas kernels in on BOTH surfaces: the sim compressor resolves
+    through ``compressors.KERNEL_BACKED`` and the distributed block
+    exchange runs the fused select+EF+pack kernel (``use_kernel``).
     """
     ks = spec.resolved_ks()
     if spec.sim:
-        return lags.LAGSExchange(ks=ks, compressor_name=spec.compressor)
-    if spec.compressor != "topk_exact":
+        name = spec.resolved_compressor()
+        return lags.LAGSExchange(ks=ks, compressor_name=name,
+                                 compressor_kwargs=_sel_kwargs(name, spec))
+    if spec.compressor not in ("topk_exact", "topk_block",
+                               "topk_block_kernel", "topk_block_ef_kernel"):
         # BlockLAGSExchange's selection operator IS block top-k (that is
         # what makes it collective-free); a run validated in simulation
         # under another compressor deploys with a different operator
@@ -256,7 +296,9 @@ def _lags_factory(spec: ExchangeSpec):
             f"for the closest semantics match", stacklevel=3)
     return lags.BlockLAGSExchange(ks=ks, block_size=spec.block_size,
                                   row_axes=spec.row_axes,
-                                  shard_dims=spec.shard_dims)
+                                  shard_dims=spec.shard_dims,
+                                  use_kernel=(
+                                      spec.selection_backend == "kernel"))
 
 
 register_exchange("lags_dp")(_lags_factory)
@@ -281,26 +323,47 @@ def _hier2_factory(spec: ExchangeSpec):
     tradeoff vs ``lags_hier``'s FSDP is sparse ICI traffic instead of
     param sharding.  One exchange class serves both surfaces, so a run
     validated in simulation deploys with identical selection semantics.
+
+    The two tiers can run different compressors:
+    ``spec.inner_compressor`` (default = ``spec.compressor``) selects on
+    each worker's own full-size gradient — the hot path, where the
+    block-parallel (BlockLAGS-style) compressors and their Pallas
+    kernels belong — while the outer cross-pod tier selects on the
+    already-sparse pod mean.  Both resolve through
+    ``selection_backend``.
     """
+    outer_name = spec.resolved_compressor()
+    inner_name = spec.resolved_compressor(inner=True)
     return lags.SparseHierLAGSExchange(
         ks=spec.resolved_ks(), ks_inner=spec.resolved_ks_inner(),
         n_inner=max(1, int(spec.n_inner)),
-        compressor_name=spec.compressor)
+        compressor_name=outer_name,
+        compressor_kwargs=_sel_kwargs(outer_name, spec),
+        inner_compressor_name=(
+            inner_name if inner_name != outer_name else None),
+        inner_compressor_kwargs=_sel_kwargs(inner_name, spec))
 
 
 # ---------------------------------------------------------------------------
 # compressor registry (backed by core.compressors)
 # ---------------------------------------------------------------------------
 
-def register_compressor(name: str, compress=None, *, needs_key: bool = False):
+def register_compressor(name: str, compress=None, *, needs_key: bool = False,
+                        fused_select=None):
     """Register a compressor ``compress(x, k, **kw) -> (values, indices)``.
 
     Usable as a decorator (``@register_compressor("name")``) or a plain
     call.  Entries land in ``core.compressors.REGISTRY`` so every
     strategy (and ``compressor_name=`` field) can name them.
+
+    ``fused_select`` optionally provides the one-pass kernel variant
+    ``(u_flat, e_flat, k, **kw) -> (values, indices, residual_flat)``
+    fusing EF accumulate + select + payload pack; exchanges prefer it
+    over compress-then-scatter (see ``lags.local_select_ef``).
     """
     def add(fn):
-        C.REGISTRY[name] = C.Compressor(name, fn, needs_key=needs_key)
+        C.REGISTRY[name] = C.Compressor(name, fn, needs_key=needs_key,
+                                        fused_select=fused_select)
         return fn
     if compress is None:
         return add

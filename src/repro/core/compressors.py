@@ -21,6 +21,13 @@ All operate on flat vectors; layer structure is handled one level up
     fixed-size top-k over thresholded survivors (approximate).
   * ``randk``        — uniform random-k (used by Assumption 1 / Eq. 20).
   * ``dense``        — identity (k ignored), for Dense-SGD baselines.
+
+Kernel-backed variants (``*_kernel`` / ``*_ef_kernel``) run the Pallas
+TPU kernels in ``repro.kernels`` (interpret mode off-TPU).  The
+``*_ef_kernel`` entries additionally carry a ``fused_select`` hook that
+fuses error-feedback accumulate + select + payload pack into one HBM
+pass; ``KERNEL_BACKED`` maps each XLA-path name to the variant the
+``selection_backend="kernel"`` knob swaps in.
 """
 from __future__ import annotations
 
@@ -69,7 +76,12 @@ def topk_hier_compress(
         cand_mag, cand_local = jax.lax.top_k(jnp.abs(blocks), r_eff)
         cand_vals = jnp.take_along_axis(blocks, cand_local, axis=1)
     base = jnp.arange(n_blocks, dtype=jnp.int32)[:, None] * block_size
-    cand_idx = (base + cand_local.astype(jnp.int32)).reshape(-1)
+    # a short tail block pads with zeros whose global index lands >= d;
+    # clamp into range (they carry value 0, so the scatter-ADD stays a
+    # no-op) — out-of-range indices would break the values+int32 wire
+    # payload contract even though jit's scatter silently drops them
+    cand_idx = jnp.minimum(
+        (base + cand_local.astype(jnp.int32)).reshape(-1), d - 1)
     cand_vals = cand_vals.reshape(-1)
     # Padded positions hold zeros -> never selected unless k exceeds nnz.
     kk = min(k, cand_vals.shape[0])
@@ -155,6 +167,47 @@ def randk_compress(
     return x[idx], idx
 
 
+# ---------------------------------------------------------------------------
+# Fused kernel-backed compressors (repro.kernels): selection, error
+# feedback, and payload pack in one pass — ``acc`` never round-trips
+# through HBM.  Exposed through the ``fused_select`` hook below, which
+# lags.local_select_ef consumes; the plain ``compress`` fallback runs the
+# same kernel with a zero residual for acc-only callers.
+# ---------------------------------------------------------------------------
+
+def topk_block_ef_select(
+    u: jax.Array, e: jax.Array, k: int, *, block_size: int = 4096,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused block-budget EF select: topk_block geometry in one HBM pass.
+
+    Bitwise-identical (values, indices, residual) to the XLA
+    ``topk_block`` path applied to ``acc = e + u``."""
+    from repro.kernels import ops as kops
+    return kops.ef_block_pack(u, e, 1.0, k, block_size=block_size)
+
+
+def topk_hier_ef_select(
+    u: jax.Array, e: jax.Array, k: int, *, block_size: int = 4096, r: int = 4,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused hierarchical EF select: candidate kernel -> threshold ->
+    threshold-gated pack kernel.  Its own exactness tier: at most ``r``
+    entries per block and threshold ties may keep slightly more than k —
+    the bias stays inside the error-feedback residual (exact fused top-k
+    when ``d <= block_size``)."""
+    from repro.kernels import ops as kops
+    return kops.ef_hier_pack(u, e, 1.0, k, block_size=block_size, r=r)
+
+
+def _fused_as_compress(fused):
+    """Adapt a fused (u, e, k) -> (vals, idx, resid) selector to the plain
+    ``compress(x, k) -> (vals, idx)`` contract (zero residual input)."""
+    @functools.wraps(fused)
+    def compress(x, k, **kw):
+        vals, idx, _ = fused(x, jnp.zeros(x.shape, jnp.float32), k, **kw)
+        return vals, idx
+    return compress
+
+
 def decompress(values: jax.Array, indices: jax.Array, d: int) -> jax.Array:
     """Scatter the sparse form back to a dense R^d vector.
 
@@ -182,10 +235,20 @@ def randk_dense(x: jax.Array, k: int, key: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """A named compressor with a fixed-size sparse interface."""
+    """A named compressor with a fixed-size sparse interface.
+
+    ``fused_select``, when present, is the one-pass kernel variant
+    ``(u_flat, e_flat, k, **kw) -> (values, indices, residual_flat)``
+    fusing EF accumulate + select + payload pack; ``lags.local_select_ef``
+    prefers it over compress-then-scatter, so the accumulated vector never
+    materializes in HBM.  Same residual contract either way:
+    ``e + u == scatter(values, indices) + residual``.
+    """
     name: str
     compress: Callable[..., tuple[jax.Array, jax.Array]]
     needs_key: bool = False
+    fused_select: Callable[..., tuple[jax.Array, jax.Array, jax.Array]] | \
+        None = None
 
     def __call__(self, x, k, **kw):
         return self.compress(x, k, **kw)
@@ -202,9 +265,52 @@ REGISTRY: dict[str, Compressor] = {
         "topk_block_kernel", functools.partial(topk_block_compress,
                                                use_kernel=True)
     ),
-    "topk_sampled": Compressor("topk_sampled", topk_sampled_compress),
+    "topk_block_ef_kernel": Compressor(
+        "topk_block_ef_kernel", _fused_as_compress(topk_block_ef_select),
+        fused_select=topk_block_ef_select,
+    ),
+    "topk_hier_ef_kernel": Compressor(
+        "topk_hier_ef_kernel", _fused_as_compress(topk_hier_ef_select),
+        fused_select=topk_hier_ef_select,
+    ),
+    # DGC-style sampled threshold: the estimate must be drawn from FRESH
+    # sample indices each (step, leaf, worker) — needs_key wires it into
+    # the same per-step PRNG stream randk uses
+    "topk_sampled": Compressor("topk_sampled", topk_sampled_compress,
+                               needs_key=True),
     "randk": Compressor("randk", randk_compress, needs_key=True),
 }
+
+
+#: ``selection_backend="kernel"`` resolution: XLA-path compressor name ->
+#: the Pallas-kernel-backed variant the exchanges should run instead.
+#: ``topk_exact`` maps to the fused hierarchical kernel (the TPU-native
+#: analogue of the paper's §5 double-sampling trick — a global top-k over
+#: 10^8+ elements is a sort network on TPU); its selection bias stays
+#: inside the EF residual, and it degenerates to an EXACT fused top-k for
+#: leaves with d <= block_size.  ``topk_block``/``topk_hier`` map to
+#: kernel variants with bitwise-identical selection + residual.
+KERNEL_BACKED: dict[str, str] = {
+    "topk_exact": "topk_hier_ef_kernel",
+    "topk_hier": "topk_hier_kernel",
+    "topk_block": "topk_block_ef_kernel",
+    "topk_hier_kernel": "topk_hier_kernel",
+    "topk_block_kernel": "topk_block_kernel",
+    "topk_hier_ef_kernel": "topk_hier_ef_kernel",
+    "topk_block_ef_kernel": "topk_block_ef_kernel",
+}
+
+
+def kernel_backed(name: str) -> str:
+    """The kernel-backed variant of compressor ``name`` (selection_backend
+    resolution).  Raises for compressors with no kernel variant (randk,
+    topk_sampled: sampling happens in XLA PRNG land, there is nothing for
+    a selection kernel to accelerate)."""
+    if name not in KERNEL_BACKED:
+        raise ValueError(
+            f"compressor {name!r} has no kernel-backed variant "
+            f"(selection_backend='kernel' supports {sorted(KERNEL_BACKED)})")
+    return KERNEL_BACKED[name]
 
 
 def get_compressor(name: str) -> Compressor:

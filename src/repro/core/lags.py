@@ -83,8 +83,10 @@ def ks_from_ratios_tree(tree, ratios_tree) -> Any:
 def _compress_flat(acc_flat: jax.Array, k: int, compressor: C.Compressor,
                    key=None, **kw):
     if compressor.needs_key:
+        # thread kwargs too: sampled compressors (topk_sampled) take both
+        # a key and tuning knobs
         key = key if key is not None else jax.random.PRNGKey(0)
-        return compressor(acc_flat, k, key=key)
+        return compressor(acc_flat, k, key=key, **kw)
     return compressor(acc_flat, k, **kw)
 
 
@@ -99,6 +101,36 @@ def local_select(acc_leaf: jax.Array, k: int, compressor: C.Compressor,
     dense_sel = C.decompress(vals, idx, flat.shape[0])
     residual = (flat - dense_sel).reshape(acc_leaf.shape)
     return vals, idx, residual
+
+
+def local_select_ef(u_leaf: jax.Array, e_leaf: jax.Array, k: int,
+                    compressor: C.Compressor, key=None, **kw):
+    """Per-leaf EF accumulate + select, fused when the compressor can.
+
+    The one selection entry point the exchanges call: a compressor with a
+    ``fused_select`` kernel runs accumulate -> select -> residual ->
+    payload pack in one HBM pass (``acc = e + u`` never materializes);
+    otherwise this is exactly ``local_select(e + u, ...)``.  Same
+    contract either way:
+
+        e + u == scatter(values, indices) + residual
+
+    Parity note: with materialized ``u``/``e`` operands the kernel and
+    XLA backends agree **bitwise** (eager or jitted — the parity battery
+    pins this).  Inside a *larger* jitted program XLA may contract u's
+    producer into the accumulate (``lr*g + e`` -> one fma, no
+    intermediate rounding; LLVM-level on CPU, so not suppressible with
+    an optimization barrier) — a 1-ulp drift that makes even the XLA
+    path disagree with its own eager execution.  It lands in the
+    residual and the selected values, so end-to-end training agrees to
+    1-ulp tolerance rather than bitwise; EF absorbs the difference.
+    """
+    if compressor.fused_select is not None and not compressor.needs_key:
+        vals, idx, resid = compressor.fused_select(
+            u_leaf.reshape(-1), e_leaf.reshape(-1), k, **kw)
+        return vals, idx, resid.reshape(e_leaf.shape)
+    acc = e_leaf + u_leaf.astype(e_leaf.dtype)
+    return local_select(acc, k, compressor, key=key, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -286,14 +318,13 @@ class LAGSExchange:
                 if needs_key:
                     wkeys = _worker_keys(key, i, p)
                     vals, idx, resid = jax.vmap(
-                        lambda uu, ee, kk: local_select(
-                            ee + uu.astype(ee.dtype), k, self.compressor,
-                            key=kk, **kw)
+                        lambda uu, ee, kk: local_select_ef(
+                            uu, ee, k, self.compressor, key=kk, **kw)
                     )(u, e, wkeys)
                 else:
                     vals, idx, resid = jax.vmap(
-                        lambda uu, ee: local_select(ee + uu.astype(ee.dtype),
-                                                    k, self.compressor, **kw)
+                        lambda uu, ee: local_select_ef(
+                            uu, ee, k, self.compressor, **kw)
                     )(u, e)
                 mean = _gathered_scatter_mean(vals, idx, d, p)
                 return mean.reshape(u.shape[1:]), resid
@@ -302,11 +333,10 @@ class LAGSExchange:
             axes = tuple(axis_names)
 
             def leaf_fn(i, u, e, k):
-                acc = e + u.astype(e.dtype)
                 wk = (_leaf_key(key, i, _worker_index(axes)) if needs_key
                       else None)
-                vals, idx, resid = local_select(acc, k, self.compressor,
-                                                key=wk, **kw)
+                vals, idx, resid = local_select_ef(u, e, k, self.compressor,
+                                                   key=wk, **kw)
                 # layer-wise sparse all-gather: ships 2*k scalars per worker
                 mean = _sparse_mean_over(vals, idx, u.size, axes,
                                          label=f"l{i}")
@@ -362,18 +392,22 @@ class SLGSExchange:
         flat_u, flat_e = list(updates), list(state)
 
         def pack(us, es):
-            accs = [e + u.astype(e.dtype) for u, e in zip(us, es)]
-            vec = jnp.concatenate([a.reshape(-1) for a in accs])
-            return vec, accs
+            # concatenate u and e separately (elementwise add commutes with
+            # concat) so a fused compressor can run accumulate+select in
+            # one kernel pass over the whole-model vector
+            u_vec = jnp.concatenate([u.reshape(-1) for u in us])
+            e_vec = jnp.concatenate([e.reshape(-1).astype(jnp.float32)
+                                     for e in es])
+            return u_vec, e_vec
 
         if axis_names is None:
             p = flat_u[0].shape[0]
             d = sum(int(u[0].size) for u in flat_u)
 
             def worker(us, es, wk):
-                vec, _ = pack(us, es)
-                vals, idx, resid_vec = local_select(
-                    vec, self.k_total, self.compressor,
+                u_vec, e_vec = pack(us, es)
+                vals, idx, resid_vec = local_select_ef(
+                    u_vec, e_vec, self.k_total, self.compressor,
                     key=(wk if needs_key else None), **kw)
                 return vals, idx, resid_vec
 
@@ -389,11 +423,11 @@ class SLGSExchange:
             return means, resids
 
         axes = tuple(axis_names)
-        vec, _ = pack(flat_u, flat_e)
+        u_vec, e_vec = pack(flat_u, flat_e)
         wk = _leaf_key(key, 0, _worker_index(axes)) if needs_key else None
-        vals, idx, resid_vec = local_select(vec, self.k_total,
-                                            self.compressor, key=wk, **kw)
-        mean_vec = _sparse_mean_over(vals, idx, vec.shape[0], axes,
+        vals, idx, resid_vec = local_select_ef(u_vec, e_vec, self.k_total,
+                                               self.compressor, key=wk, **kw)
+        mean_vec = _sparse_mean_over(vals, idx, u_vec.shape[0], axes,
                                      label="packed")
         means, resids, off = [], [], 0
         for u in flat_u:
@@ -505,8 +539,20 @@ class BlockLAGSExchange:
     def _local_rows(self, u_flat, e_flat, n_blocks, bs, k_b):
         """Accumulate + select on the padded block view.
 
-        Returns (vals, local, residual_rows, acc_rows)."""
+        Returns (vals, local, residual_rows)."""
         pad = n_blocks * bs - u_flat.shape[0]
+        if self.use_kernel:
+            # fused Pallas path: accumulate + select + payload pack +
+            # residual in ONE pass over the (n_blocks, bs) view — acc
+            # never materializes in HBM.  Updates arrive pre-scaled
+            # (u = lr·g), so lr=1 here; bitwise-identical (vals, local,
+            # residual) to the XLA branch below.
+            from repro.kernels import ops as kops
+            g_rows = self._pin_rows(
+                jnp.pad(u_flat, (0, pad)).reshape(n_blocks, bs))
+            e_rows = self._pin_rows(
+                jnp.pad(e_flat, (0, pad)).reshape(n_blocks, bs))
+            return kops.ef_select_pack_rows(g_rows, e_rows, 1.0, None, k_b)
         acc = e_flat + u_flat.astype(e_flat.dtype)
         rows = self._pin_rows(jnp.pad(acc, (0, pad)).reshape(n_blocks, bs))
         vals, local = self._select_rows(rows, k_b)
@@ -652,14 +698,13 @@ class HierLAGSExchange:
         def leaf_fn(i, u, e, k):
             if self.inner_axes:
                 u = _psum_mean(u, self.inner_axes)
-            acc = e + u.astype(e.dtype)
-            # the dense inner mean replicates ``acc`` within the pod, so
-            # the key folds ONLY the outer (pod) coordinate — every inner
-            # worker must draw the same selection (see _leaf_key)
+            # the dense inner mean replicates the accumulator within the
+            # pod, so the key folds ONLY the outer (pod) coordinate —
+            # every inner worker must draw the same selection (_leaf_key)
             wk = (_leaf_key(key, i, _worker_index(self.outer_axes))
                   if needs_key else None)
-            vals, idx, resid = local_select(acc, k, self.compressor,
-                                            key=wk, **kw)
+            vals, idx, resid = local_select_ef(u, e, k, self.compressor,
+                                               key=wk, **kw)
             mean = _sparse_mean_over(vals, idx, u.size, self.outer_axes,
                                      tier="outer", label=f"l{i}")
             return mean.reshape(u.shape).astype(u.dtype), resid
@@ -726,10 +771,24 @@ class SparseHierLAGSExchange:
     residual_dtype: Any = jnp.float32
     name: str = "lags_hier2"
     compressor_kwargs: tuple = ()
+    # Inner-tier compressor override (None = same as compressor_name).
+    # The inner tier selects on every worker's own full-size gradient —
+    # the hot, per-device selection — so it is where the block-parallel
+    # (BlockLAGS-style) compressors pay off: inner "topk_block" /
+    # "topk_block_ef_kernel" keeps inner selection block-local and
+    # GSPMD-partitionable while the (candidate-sized) outer tier can stay
+    # exact.
+    inner_compressor_name: str | None = None
+    inner_compressor_kwargs: tuple = ()
 
     @property
     def compressor(self) -> C.Compressor:
         return C.get_compressor(self.compressor_name)
+
+    @property
+    def inner_compressor(self) -> C.Compressor:
+        return C.get_compressor(self.inner_compressor_name
+                                or self.compressor_name)
 
     def init(self, updates_like):
         def zeros(u):
@@ -744,8 +803,12 @@ class SparseHierLAGSExchange:
         """One wave; ``state`` is ``{"inner": [...], "outer": [...]}`` flat
         lists of the wave's two-tier residual leaves."""
         kw = dict(self.compressor_kwargs)
-        needs_key = self.compressor.needs_key
         comp = self.compressor
+        needs_key = comp.needs_key
+        ikw = dict(self.inner_compressor_kwargs) \
+            if self.inner_compressor_name else kw
+        icomp = self.inner_compressor
+        needs_key_in = icomp.needs_key
 
         ids = _wave_ids(wave)
         flat_u = list(updates)
@@ -769,16 +832,16 @@ class SparseHierLAGSExchange:
                 n_out = p // n_in
                 d = u[0].size
                 # inner tier: per-worker selection, full-coordinate keys
-                if needs_key:
+                if needs_key_in:
                     wkeys = _worker_keys(key, i, p)
                     vals, idx, resid_in = jax.vmap(
-                        lambda uu, ee, kk: local_select(
-                            ee + uu.astype(ee.dtype), k_in, comp,
-                            key=kk, **kw))(u, e_in, wkeys)
+                        lambda uu, ee, kk: local_select_ef(
+                            uu, ee, k_in, icomp, key=kk, **ikw)
+                    )(u, e_in, wkeys)
                 else:
                     vals, idx, resid_in = jax.vmap(
-                        lambda uu, ee: local_select(
-                            ee + uu.astype(ee.dtype), k_in, comp, **kw)
+                        lambda uu, ee: local_select_ef(
+                            uu, ee, k_in, icomp, **ikw)
                     )(u, e_in)
                 # intra-pod scatter-mean: group the (P, k) selections by pod
                 m = jax.vmap(
@@ -795,20 +858,21 @@ class SparseHierLAGSExchange:
                 # two tiers draw independent randk samples instead of pod
                 # o's outer selection colliding with worker o's inner one
                 e_pod = e_out.reshape((n_out, n_in) + e_out.shape[1:])[:, 0]
-                acc_out = e_pod + m.reshape((n_out,) + u.shape[1:])
+                m_pod = m.reshape((n_out,) + u.shape[1:])
                 o_base = 0 if int(k_in) >= d else p
                 if needs_key:
                     lk = _leaf_key(key, i)
                     okeys = jax.vmap(lambda o: jax.random.fold_in(lk, o))(
                         jnp.arange(o_base, o_base + n_out))
                     vals2, idx2, resid_out = jax.vmap(
-                        lambda aa, kk: local_select(aa, k_out, comp,
-                                                    key=kk, **kw)
-                    )(acc_out, okeys)
+                        lambda mm, ee, kk: local_select_ef(
+                            mm, ee, k_out, comp, key=kk, **kw)
+                    )(m_pod, e_pod, okeys)
                 else:
                     vals2, idx2, resid_out = jax.vmap(
-                        lambda aa: local_select(aa, k_out, comp, **kw)
-                    )(acc_out)
+                        lambda mm, ee: local_select_ef(mm, ee, k_out, comp,
+                                                       **kw)
+                    )(m_pod, e_pod)
                 mean = _gathered_scatter_mean(vals2, idx2, d, n_out)
                 resid_out_full = jnp.broadcast_to(
                     resid_out[:, None],
@@ -826,16 +890,14 @@ class SparseHierLAGSExchange:
             inner = tuple(a for a in axes if a != self.outer_axis)
 
             def leaf_fn(i, u, e_in, e_out, k_in, k_out):
-                acc_in = e_in + u.astype(e_in.dtype)
                 # inner selection runs on per-worker data: fold the FULL
                 # (outer, inner) worker coordinate into the key stream
                 wk_in = (_leaf_key(key, i, _worker_index(axes))
-                         if needs_key else None)
-                vals, idx, resid_in = local_select(acc_in, k_in, comp,
-                                                   key=wk_in, **kw)
+                         if needs_key_in else None)
+                vals, idx, resid_in = local_select_ef(u, e_in, k_in, icomp,
+                                                      key=wk_in, **ikw)
                 m = _sparse_mean_over(vals, idx, u.size, inner,
                                       tier="inner", label=f"l{i}")
-                acc_out = e_out + m.reshape(u.shape)
                 # outer accumulator is pod-replicated: outer-only key so
                 # every inner worker draws the SAME cross-pod selection.
                 # Sparse inner tier -> shift the outer stream past the
@@ -843,8 +905,8 @@ class SparseHierLAGSExchange:
                 o_base = 0 if int(k_in) >= u.size else _axis_prod(axes)
                 wk_out = (_leaf_key(key, i, o_base + _worker_index(outer))
                           if needs_key else None)
-                vals2, idx2, resid_out = local_select(acc_out, k_out, comp,
-                                                      key=wk_out, **kw)
+                vals2, idx2, resid_out = local_select_ef(
+                    m.reshape(u.shape), e_out, k_out, comp, key=wk_out, **kw)
                 mean = _sparse_mean_over(vals2, idx2, u.size, outer,
                                          tier="outer", label=f"l{i}")
                 return (mean.reshape(u.shape).astype(u.dtype),

@@ -18,6 +18,17 @@ Tiling: the flat vector is viewed as (rows, 1024) f32 — 1024 = 8·128 fills
 one VREG row naturally; grid over row-tiles of ``tm`` rows.  lr and thr
 ride in SMEM as (1, 1) scalars via PrefetchScalarGridSpec-free plain
 inputs with a (1, 1) BlockSpec.
+
+This module also holds the fused select → residual-update → payload-pack
+kernel (``ef_select_pack_pallas``): instead of a dense ``selected``
+output it emits the sparse wire form directly — per-block top-k values
+(f32) + local int32 indices, the ``bucketing.payload_bytes_per_elem``
+layout — plus the residual, so the accumulated ``acc = e + lr·g`` never
+round-trips through HBM between selection and error feedback.  Its
+candidate-stage sibling (``ef_block_candidates_pallas``) computes the
+same inline accumulate but emits only the per-block top-r candidates,
+for the hierarchical threshold estimate (stage 2 runs on the tiny
+candidate set in plain XLA).
 """
 from __future__ import annotations
 
@@ -72,3 +83,122 @@ def ef_accum_sparsify_pallas(g: jax.Array, e: jax.Array, lr, thr, *,
         interpret=interpret,
     )(lr2, thr2, gp, ep)
     return sel.reshape(-1)[:d], res.reshape(-1)[:d]
+
+
+# ---------------------------------------------------------------------------
+# Fused select -> residual-update -> payload-pack
+# ---------------------------------------------------------------------------
+
+def _topk_emit(acc, k: int, thr, vals_ref, idx_ref):
+    """k masked-argmax passes over an f32 ``acc`` tile, emitting the sparse
+    wire form into ``vals_ref``/``idx_ref`` column by column.
+
+    Tie-break is lowest-index-first among equal magnitudes — the same
+    order ``lax.top_k`` produces on the magnitudes, which is what makes
+    the packed payload (and hence the residual) bitwise-comparable to
+    the XLA block compressor.  A pass whose row maximum falls below
+    ``thr`` emits value 0 with the (in-range) argmax index — scatter-ADD
+    of 0 is the no-op padding contract of ``compressors.decompress``.
+    Returns the dense selected tile (for the residual subtraction).
+    """
+    tm, bs = acc.shape
+    mag = jnp.abs(acc)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tm, bs), 1)
+    sel = jnp.zeros_like(acc)
+    for j in range(k):                                # k static passes
+        m = jnp.max(mag, axis=1, keepdims=True)       # (tm, 1)
+        i = jnp.min(jnp.where(mag == m, col, bs), axis=1)          # (tm,)
+        hit = col == i[:, None]
+        take = hit & (m >= thr)
+        v = jnp.sum(jnp.where(take, acc, 0.0), axis=1)
+        vals_ref[:, j] = v
+        idx_ref[:, j] = i.astype(jnp.int32)
+        sel = sel + jnp.where(take, acc, 0.0)
+        mag = jnp.where(hit, -1.0, mag)               # mask out the winner
+    return sel
+
+
+def _ef_pack_kernel(lr_ref, thr_ref, g_ref, e_ref, vals_ref, idx_ref,
+                    res_ref, *, k: int):
+    lr = lr_ref[0, 0]
+    thr = thr_ref[0, 0]
+    acc = e_ref[...] + lr * g_ref[...].astype(jnp.float32)
+    sel = _topk_emit(acc, k, thr, vals_ref, idx_ref)
+    res_ref[...] = acc - sel
+
+
+def _ef_cand_kernel(lr_ref, g_ref, e_ref, vals_ref, idx_ref, *, r: int):
+    lr = lr_ref[0, 0]
+    acc = e_ref[...] + lr * g_ref[...].astype(jnp.float32)
+    _topk_emit(acc, r, jnp.float32(-jnp.inf), vals_ref, idx_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tm", "interpret"))
+def ef_select_pack_pallas(g_rows: jax.Array, e_rows: jax.Array, lr, thr, *,
+                          k: int, tm: int = 8, interpret: bool = True):
+    """Fused EF accumulate + per-block top-k select + payload pack.
+
+    g_rows: (n_blocks, bs) any float dtype; e_rows: (n_blocks, bs) f32;
+    lr: scalar; thr: scalar f32 (``-inf`` disables the threshold gate —
+    pure per-block-budget mode, bitwise equal to the XLA block top-k).
+
+    One pass over the layer: reads g and e once, writes the wire payload
+    (values (n_blocks, k) f32 + local indices (n_blocks, k) int32 — the
+    ``bucketing.payload_bytes_per_elem`` value+int32 layout) and the
+    residual (n_blocks, bs) f32 once; ``acc = e + lr·g`` exists only in
+    VMEM.
+    """
+    n, bs = g_rows.shape
+    n_pad = -(-n // tm) * tm
+    gp = jnp.pad(g_rows, ((0, n_pad - n), (0, 0)))
+    ep = jnp.pad(e_rows.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
+    grid = (n_pad // tm,)
+    vals, idx, res = pl.pallas_call(
+        functools.partial(_ef_pack_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((tm, bs), lambda i: (i, 0)),
+                  pl.BlockSpec((tm, bs), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tm, k), lambda i: (i, 0)),
+                   pl.BlockSpec((tm, k), lambda i: (i, 0)),
+                   pl.BlockSpec((tm, bs), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+                   jax.ShapeDtypeStruct((n_pad, k), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad, bs), jnp.float32)],
+        interpret=interpret,
+    )(lr2, thr2, gp, ep)
+    return vals[:n], idx[:n], res[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("r", "tm", "interpret"))
+def ef_block_candidates_pallas(g_rows: jax.Array, e_rows: jax.Array, lr, *,
+                               r: int, tm: int = 8, interpret: bool = True):
+    """Per-block top-r candidates of ``acc = e + lr·g``, accumulate fused.
+
+    The hierarchical-selection stage 1 run directly on (g, e) — the only
+    HBM traffic is one read of each plus the r·n_blocks candidate write;
+    ``acc`` itself is never materialized.  Stage 2 (threshold from the
+    candidates) is candidate-sized and runs in plain XLA.
+    """
+    n, bs = g_rows.shape
+    n_pad = -(-n // tm) * tm
+    gp = jnp.pad(g_rows, ((0, n_pad - n), (0, 0)))
+    ep = jnp.pad(e_rows.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    grid = (n_pad // tm,)
+    vals, idx = pl.pallas_call(
+        functools.partial(_ef_cand_kernel, r=r),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((tm, bs), lambda i: (i, 0)),
+                  pl.BlockSpec((tm, bs), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tm, r), lambda i: (i, 0)),
+                   pl.BlockSpec((tm, r), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_pad, r), jnp.float32),
+                   jax.ShapeDtypeStruct((n_pad, r), jnp.int32)],
+        interpret=interpret,
+    )(lr2, gp, ep)
+    return vals[:n], idx[:n]

@@ -48,9 +48,93 @@ def hier_topk_threshold(x: jax.Array, k: int, *, block_size: int = 4096,
     r_eff = min(r, block_size)
     cand_vals, cand_local = block_topk(blocks, r_eff, tm=tm)
     base = jnp.arange(n_blocks, dtype=jnp.int32)[:, None] * block_size
-    cand_idx = (base + cand_local).reshape(-1)
+    # a short tail block pads with zeros whose global index lands >= d;
+    # they carry value 0, so clamping into range keeps the scatter-ADD
+    # no-op contract AND the values+int32 wire payload in-contract
+    cand_idx = jnp.minimum((base + cand_local).reshape(-1), d - 1)
     cand_flat = cand_vals.reshape(-1)
     kk = min(k, cand_flat.shape[0])
     top_mag = jax.lax.top_k(jnp.abs(cand_flat), kk)[0]
     thr = top_mag[-1]
     return thr, (cand_flat, cand_idx)
+
+
+def ef_select_pack_rows(g_rows: jax.Array, e_rows: jax.Array, lr, thr,
+                        k: int, *, tm: int = 8):
+    """Fused EF accumulate + per-block top-k + payload pack on a block view.
+
+    g_rows: (n_blocks, bs) any float; e_rows: (n_blocks, bs) f32.
+    ``thr=None`` disables the threshold gate (pure per-block budget —
+    bitwise equal selection/residual to the XLA block top-k path).
+    Returns (vals (n_blocks, k) f32, local idx (n_blocks, k) int32,
+    residual (n_blocks, bs) f32); ``acc = e + lr·g`` never touches HBM.
+    """
+    thr_v = jnp.float32(-jnp.inf) if thr is None else thr
+    return _ef.ef_select_pack_pallas(g_rows, e_rows, lr, thr_v, k=k, tm=tm,
+                                     interpret=_interpret())
+
+
+def _block_view(x: jax.Array, n_blocks: int, bs: int) -> jax.Array:
+    d = x.shape[0]
+    return jnp.pad(x, (0, n_blocks * bs - d)).reshape(n_blocks, bs)
+
+
+def ef_block_pack(g: jax.Array, e: jax.Array, lr, k: int, *,
+                  block_size: int = 4096, tm: int = 8):
+    """Flat fused block-budget EF: compressors.topk_block geometry
+    (k_b = ceil(k·bs/d) kept per block) in one HBM pass.
+
+    g: (d,) any float; e: (d,) f32.  Returns (vals (n_blocks·k_b,) f32,
+    global idx int32 clamped into [0, d), residual (d,) f32) with the
+    decompress scatter-ADD padding contract (pad entries carry value 0).
+    """
+    d = g.shape[0]
+    bs = min(block_size, d)
+    n_blocks = -(-d // bs)
+    k_b = max(1, min(bs, -(-k * bs // d)))
+    vals, local, res = ef_select_pack_rows(
+        _block_view(g, n_blocks, bs), _block_view(e, n_blocks, bs),
+        lr, None, k_b, tm=tm)
+    base = jnp.arange(n_blocks, dtype=jnp.int32)[:, None] * bs
+    idx = jnp.minimum((base + local).reshape(-1), d - 1)
+    return vals.reshape(-1), idx, res.reshape(-1)[:d]
+
+
+def ef_hier_pack(g: jax.Array, e: jax.Array, lr, k: int, *,
+                 block_size: int = 4096, r: int = 4, tm: int = 8):
+    """Flat fused hierarchical EF: candidate kernel -> threshold ->
+    threshold-gated pack kernel, two HBM reads of (g, e) and one write of
+    (payload, residual) — ``acc`` never materializes.
+
+    Selection = every per-block top-``r`` candidate of ``acc = e + lr·g``
+    whose magnitude reaches the k-th candidate magnitude; at most r per
+    block, payload size n_blocks·r (zero-padded beyond the threshold).
+    Threshold ties may keep slightly more than k entries — the bias
+    either way stays inside the error-feedback residual.  For
+    ``d <= block_size`` the single block degenerates to an EXACT fused
+    top-k (threshold gate off, k passes).
+
+    Returns (vals f32, global idx int32 clamped into [0, d),
+    residual (d,) f32).
+    """
+    d = g.shape[0]
+    if d <= block_size or k >= d:
+        kk = min(k, d)
+        vals, local, res = ef_select_pack_rows(
+            g.reshape(1, d), e.reshape(1, d), lr, None, kk, tm=tm)
+        return vals.reshape(-1), local.reshape(-1), res.reshape(-1)
+    bs = block_size
+    n_blocks = -(-d // bs)
+    r_eff = min(r, bs)
+    g_rows = _block_view(g, n_blocks, bs)
+    e_rows = _block_view(e, n_blocks, bs)
+    cand_vals, _ = _ef.ef_block_candidates_pallas(
+        g_rows, e_rows, lr, r=r_eff, tm=tm, interpret=_interpret())
+    cand_flat = cand_vals.reshape(-1)
+    kk = min(k, cand_flat.shape[0])
+    thr = jax.lax.top_k(jnp.abs(cand_flat), kk)[0][-1]
+    vals, local, res = ef_select_pack_rows(g_rows, e_rows, lr, thr, r_eff,
+                                           tm=tm)
+    base = jnp.arange(n_blocks, dtype=jnp.int32)[:, None] * bs
+    idx = jnp.minimum((base + local).reshape(-1), d - 1)
+    return vals.reshape(-1), idx, res.reshape(-1)[:d]

@@ -37,3 +37,31 @@ def ef_accum_sparsify_ref(g: jax.Array, e: jax.Array, lr, thr):
     keep = jnp.abs(acc) >= thr
     selected = jnp.where(keep, acc, 0.0)
     return selected, acc - selected
+
+
+def ef_select_pack_ref(g_rows: jax.Array, e_rows: jax.Array, lr, thr,
+                       k: int):
+    """Oracle for the fused select -> residual -> payload-pack kernel.
+
+    acc = e + lr·g (f32); per row, the top-k by magnitude (lax.top_k's
+    stable lowest-index tie-break) are packed as (values, local int32
+    indices); entries whose magnitude falls below ``thr`` are gated to
+    value 0 (keeping their in-range index — the decompress scatter-ADD
+    padding contract); residual = acc − scatter(values).
+
+    ``thr=None`` (or −inf) disables the gate: pure per-block-budget
+    top-k.  Returns (vals (n, k) f32, idx (n, k) int32, residual (n, bs)
+    f32).
+    """
+    acc = e_rows.astype(jnp.float32) + lr * g_rows.astype(jnp.float32)
+    mag = jnp.abs(acc)
+    _, idx = jax.lax.top_k(mag, k)
+    raw = jnp.take_along_axis(acc, idx, axis=1)
+    if thr is None:
+        vals = raw
+    else:
+        keep = jnp.take_along_axis(mag, idx, axis=1) >= thr
+        vals = jnp.where(keep, raw, 0.0)
+    rows = jnp.arange(acc.shape[0])[:, None]
+    selected = jnp.zeros_like(acc).at[rows, idx].add(vals)
+    return vals, idx.astype(jnp.int32), acc - selected

@@ -281,7 +281,9 @@ def build_train_step(cfg, mesh, run: RunConfig):
     spec = R.ExchangeSpec(
         mode=mode, params_like=state_specs["params"],
         ratio=run.resolved_ratio(cfg), ks=ks_override,
-        block_size=run.block_size, compressor=run.compressor, sim=False,
+        block_size=run.block_size, compressor=run.compressor,
+        selection_backend=run.selection_backend,
+        inner_compressor=run.inner_compressor, sim=False,
         n_workers=meta["n_workers"],
         ratio_inner=run.resolved_ratio_inner(),
         n_inner=max(1, M.n_workers(mesh, M.inner_axis_names(mesh))),

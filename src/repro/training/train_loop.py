@@ -33,7 +33,10 @@ def _sim_spec(run: RunConfig, params, *, n_workers: int | None = None):
                                n_workers=n_workers)
     return R.ExchangeSpec(mode=mode, params_like=params,
                           ratio=run.resolved_ratio(), ks=ks,
-                          compressor=run.compressor, sim=True,
+                          compressor=run.compressor,
+                          selection_backend=run.selection_backend,
+                          inner_compressor=run.inner_compressor,
+                          block_size=run.block_size, sim=True,
                           n_workers=n_workers or 1,
                           ratio_inner=run.resolved_ratio_inner(),
                           n_inner=run.inner_workers or 1,

@@ -1,6 +1,8 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — unit/smoke tests must see
 the real single CPU device; multi-device tests run in subprocesses
 (tests/test_distributed.py)."""
+import types
+
 import jax
 import pytest
 
@@ -8,3 +10,24 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+# -- hypothesis-optional shim ------------------------------------------------
+# Minimal envs (the container's tier-1 run) have no hypothesis; test
+# modules fall back to these stand-ins so ONLY their property tests skip
+# while plain unit/oracle tests keep running:
+#     try:
+#         from hypothesis import given, settings, strategies as st
+#     except ImportError:
+#         from conftest import given, settings, st
+
+def _skip_decorator(*_a, **_k):
+    def deco(f):
+        return pytest.mark.skip(reason="hypothesis not installed")(f)
+    return deco
+
+
+given = settings = _skip_decorator
+st = types.SimpleNamespace(
+    integers=lambda *a, **k: None, floats=lambda *a, **k: None,
+    sampled_from=lambda *a, **k: None, booleans=lambda *a, **k: None)

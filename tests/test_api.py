@@ -447,6 +447,96 @@ class TestCompressorKeyThreading:
 
 
 # ---------------------------------------------------------------------------
+# selection_backend: kernel-backed selection through the registry
+# ---------------------------------------------------------------------------
+
+class TestSelectionBackend:
+    def test_runconfig_validates(self):
+        with pytest.raises(ValueError, match="selection_backend"):
+            api.RunConfig(selection_backend="pallas")
+
+    def test_spec_resolves_compressor_names(self):
+        p = _params()
+        spec = api.ExchangeSpec("lags_dp", p, ratio=4.0,
+                                compressor="topk_exact",
+                                selection_backend="kernel")
+        assert spec.resolved_compressor() == "topk_hier_ef_kernel"
+        xla = api.ExchangeSpec("lags_dp", p, ratio=4.0,
+                               compressor="topk_exact")
+        assert xla.resolved_compressor() == "topk_exact"
+
+    def test_sim_build_uses_kernel_compressor(self):
+        exch = api.build_exchange(api.ExchangeSpec(
+            "lags_dp", _params(), ratio=4.0, compressor="topk_block",
+            selection_backend="kernel", block_size=32, sim=True))
+        assert isinstance(exch, lags.LAGSExchange)
+        assert exch.compressor_name == "topk_block_ef_kernel"
+        assert dict(exch.compressor_kwargs)["block_size"] == 32
+
+    def test_dist_build_sets_use_kernel(self):
+        exch = api.build_exchange(api.ExchangeSpec(
+            "lags_dp", _params(), ratio=4.0, compressor="topk_exact",
+            selection_backend="kernel", sim=False))
+        assert isinstance(exch, lags.BlockLAGSExchange)
+        assert exch.use_kernel
+        xla = api.build_exchange(api.ExchangeSpec(
+            "lags_dp", _params(), ratio=4.0, compressor="topk_exact",
+            sim=False))
+        assert not xla.use_kernel
+
+    def test_hier2_inner_compressor_threading(self):
+        exch = api.build_exchange(api.ExchangeSpec(
+            "lags_hier2", _params(), ratio=4.0, ratio_inner=2.0,
+            n_inner=2, compressor="topk_exact", inner_compressor="topk_block",
+            selection_backend="kernel", block_size=32, sim=True))
+        assert isinstance(exch, lags.SparseHierLAGSExchange)
+        assert exch.compressor_name == "topk_hier_ef_kernel"
+        assert exch.inner_compressor_name == "topk_block_ef_kernel"
+        assert dict(exch.inner_compressor_kwargs)["block_size"] == 32
+
+    def test_sampled_compressor_rejected(self):
+        with pytest.raises(ValueError, match="kernel"):
+            api.build_exchange(api.ExchangeSpec(
+                "lags_dp", _params(), ratio=4.0, compressor="randk",
+                selection_backend="kernel", sim=True))
+
+    def test_sim_trainer_kernel_backend_end_to_end(self):
+        """kernel vs xla through SimTrainer: parameters and EF residuals
+        agree to 1-ulp tolerance.  (Bitwise parity is pinned at the
+        exchange boundary in test_lags.TestKernelBackendParity; inside
+        the fully-jitted step XLA contracts ``lr*g + e`` into one fma on
+        the path whose producer it can see, a 1-ulp drift that makes
+        even the XLA path disagree with its own eager execution — see
+        lags.local_select_ef.)"""
+        from repro.training import train_loop as TL
+
+        def loss(p, b):
+            return (jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2), {})
+
+        def batch(t):
+            key = jax.random.fold_in(jax.random.PRNGKey(11), t)
+            kx, ky = jax.random.split(key)
+            return {"x": jax.random.normal(kx, (2, 4, 8)),
+                    "y": jax.random.normal(ky, (2, 4, 8))}
+
+        params = {"w": jnp.eye(8, dtype=jnp.float32)}
+        states = {}
+        for backend in ("xla", "kernel"):
+            run = api.RunConfig(mode="lags_dp", ratio=4.0, lr=0.1,
+                                selection_backend=backend)
+            tr = TL.SimTrainer(loss, params, run, n_workers=2)
+            for t in range(2):
+                tr.state, _ = tr._step(tr.state, batch(t))
+            states[backend] = tr.state
+        np.testing.assert_allclose(
+            np.asarray(states["xla"]["params"]["w"]),
+            np.asarray(states["kernel"]["params"]["w"]), atol=1e-7)
+        np.testing.assert_allclose(
+            np.asarray(states["xla"]["ef"]["w"]),
+            np.asarray(states["kernel"]["ef"]["w"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # shims are gone + Session.run convenience loop
 # ---------------------------------------------------------------------------
 

@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests; skip cleanly on minimal envs
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests need hypothesis; the unit tests below do not
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal envs: skip just the property tests
+    from conftest import given, settings, st
 
 from repro.core import compressors as C
 
@@ -120,6 +123,69 @@ class TestTopKHier:
         assert set(np.asarray(i1).tolist()) == set(np.asarray(i2).tolist())
 
 
+class TestTopKHierShortTail:
+    def test_padded_tail_indices_in_range(self, rng):
+        """Regression: d=1026 with block_size=1024 leaves a 2-element
+        tail block; candidate indices from its padding lanes used to
+        land >= d.  Both the jnp and kernel stage-1 must clamp."""
+        x = _vec(rng, 1026)
+        for use_kernel in (False, True):
+            v, i = C.topk_hier_compress(x, 32, block_size=1024, r=8,
+                                        use_kernel=use_kernel)
+            i = np.asarray(i)
+            assert (i >= 0).all() and (i < 1026).all()
+            # non-padding selections still read the right elements
+            v = np.asarray(v)
+            nz = v != 0
+            np.testing.assert_allclose(v[nz], np.asarray(x)[i[nz]],
+                                       rtol=1e-6)
+
+
+class TestTopKSampled:
+    """DGC double-sampling: the threshold estimate must be drawn from
+    FRESH sample indices each call (regression: a PRNGKey(0) default plus
+    needs_key=False registration pinned the sample forever)."""
+
+    def test_registered_needs_key(self):
+        assert C.get_compressor("topk_sampled").needs_key
+
+    def test_fresh_keys_fresh_sample_indices(self):
+        # uniform-magnitude input: the estimated threshold is sensitive
+        # to WHICH indices the sample drew, so a re-used sample would
+        # reproduce the selection exactly
+        x = jnp.linspace(1.0, 2.0, 512)
+        v1, i1 = C.topk_sampled_compress(x, 16, key=jax.random.PRNGKey(1))
+        v2, i2 = C.topk_sampled_compress(x, 16, key=jax.random.PRNGKey(2))
+        v3, i3 = C.topk_sampled_compress(x, 16, key=jax.random.PRNGKey(1))
+        assert not np.array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i3))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v3))
+
+    def test_exchange_threads_per_worker_keys(self):
+        """Identical inputs on P=2 workers must draw distinct samples
+        (hence estimate distinct thresholds), mirroring the randk
+        key-threading battery."""
+        from repro.core import lags
+        p, d, k = 2, 512, 16
+        exch = lags.LAGSExchange(ks={"w": k}, compressor_name="topk_sampled")
+        u = {"w": jnp.tile(jnp.linspace(1.0, 2.0, d), (p, 1))}
+        _, ef = exch.exchange(u, exch.init(u), None,
+                              key=jax.random.PRNGKey(0))
+        # per-worker residuals differ <=> per-worker selections differed
+        e = np.asarray(ef["w"])
+        assert (e[0] != e[1]).any()
+
+    def test_exchange_fresh_selection_per_step(self):
+        from repro.core import lags
+        d, k = 512, 16
+        exch = lags.LAGSExchange(ks={"w": k}, compressor_name="topk_sampled")
+        u = {"w": jnp.tile(jnp.linspace(1.0, 2.0, d), (2, 1))}
+        ef0 = exch.init(u)
+        _, e1 = exch.exchange(u, ef0, None, key=jax.random.PRNGKey(1))
+        _, e2 = exch.exchange(u, ef0, None, key=jax.random.PRNGKey(2))
+        assert (np.asarray(e1["w"]) != np.asarray(e2["w"])).any()
+
+
 class TestRandK:
     def test_selects_k_unique_valid(self, rng):
         x = _vec(rng, 50)
@@ -144,9 +210,39 @@ class TestRandK:
 class TestRegistry:
     def test_all_named(self):
         for name in ["topk_exact", "topk_hier", "topk_block", "topk_sampled",
-                     "randk"]:
+                     "randk", "topk_hier_kernel", "topk_block_kernel",
+                     "topk_hier_ef_kernel", "topk_block_ef_kernel"]:
             assert C.get_compressor(name).name == name
 
     def test_unknown_raises(self):
         with pytest.raises(KeyError):
             C.get_compressor("nope")
+
+    def test_fused_kernels_carry_fused_select(self):
+        for name in ["topk_hier_ef_kernel", "topk_block_ef_kernel"]:
+            assert C.get_compressor(name).fused_select is not None
+        for name in ["topk_exact", "topk_hier", "topk_block",
+                     "topk_hier_kernel", "topk_block_kernel", "randk"]:
+            assert C.get_compressor(name).fused_select is None
+
+    def test_kernel_backed_resolution(self):
+        assert C.kernel_backed("topk_exact") == "topk_hier_ef_kernel"
+        assert C.kernel_backed("topk_hier") == "topk_hier_kernel"
+        assert C.kernel_backed("topk_block") == "topk_block_ef_kernel"
+        # kernel names are fixed points
+        for name in C.KERNEL_BACKED.values():
+            assert C.kernel_backed(name) == name
+        # sampled compressors have nothing for a selection kernel to do
+        for name in ["randk", "topk_sampled", "nope"]:
+            with pytest.raises(ValueError, match="kernel"):
+                C.kernel_backed(name)
+
+    def test_fused_compress_fallback_matches_xla(self, rng):
+        """The plain ``compress`` view of a fused compressor (zero
+        residual) must equal its XLA sibling on the same input."""
+        x = _vec(rng, 300)
+        v1, i1 = C.get_compressor("topk_block_ef_kernel")(
+            x, 30, block_size=128)
+        v2, i2 = C.topk_block_compress(x, 30, block_size=128)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

@@ -326,8 +326,10 @@ def _run_sim(run_kwargs, n_workers, batch_fn, n_steps=3):
     return trainer.state
 
 
-@pytest.mark.parametrize("compressor", ["topk_exact", "randk"])
-def test_hier2_inner_ratio_one_matches_dense_inner_lags_hier(compressor):
+@pytest.mark.parametrize("compressor,backend", [
+    ("topk_exact", "xla"), ("topk_exact", "kernel"), ("randk", "xla")])
+def test_hier2_inner_ratio_one_matches_dense_inner_lags_hier(compressor,
+                                                             backend):
     """2x2 sim mesh (2 pods x 2 intra-pod workers): lags_hier2 with a
     dense inner tier (ratio_inner=None -> 1.0) must match lags_hier —
     whose intra-pod reduction is the dense mean — run over the pod-merged
@@ -346,10 +348,12 @@ def test_hier2_inner_ratio_one_matches_dense_inner_lags_hier(compressor):
             lambda x: x.reshape((2, 2 * x.shape[1]) + x.shape[2:]), b4)
 
     s_hier2 = _run_sim(dict(mode="lags_hier2", ratio=4.0,
-                            compressor=compressor, inner_workers=2),
+                            compressor=compressor, inner_workers=2,
+                            selection_backend=backend),
                        n_workers=4, batch_fn=batch4)
     s_hier = _run_sim(dict(mode="lags_hier", ratio=4.0,
-                           compressor=compressor),
+                           compressor=compressor,
+                           selection_backend=backend),
                       n_workers=2, batch_fn=batch_pods)
     import numpy as np
     for a, b in zip(jax.tree.leaves(s_hier2["params"]),
@@ -368,8 +372,9 @@ def test_hier2_inner_ratio_one_matches_dense_inner_lags_hier(compressor):
         np.testing.assert_allclose(r2[:, 0], r2[:, 1], rtol=0, atol=0)
 
 
-@pytest.mark.parametrize("compressor", ["topk_exact", "randk"])
-def test_hier2_single_pod_degenerates_to_lags_dp(compressor):
+@pytest.mark.parametrize("compressor,backend", [
+    ("topk_exact", "xla"), ("topk_exact", "kernel"), ("randk", "xla")])
+def test_hier2_single_pod_degenerates_to_lags_dp(compressor, backend):
     """One pod (inner_workers == n_workers, no cross-pod axis) with a
     dense outer tier: lags_hier2 must reproduce lags_dp with
     ks == ks_inner exactly — same selections (same per-(step, leaf,
@@ -381,9 +386,11 @@ def test_hier2_single_pod_degenerates_to_lags_dp(compressor):
         return _sim_batch(jax.random.fold_in(jax.random.PRNGKey(9), t), 4)
 
     s_hier2 = _run_sim(dict(mode="lags_hier2", ratio=1.0, ratio_inner=4.0,
-                            compressor=compressor, inner_workers=4),
+                            compressor=compressor, inner_workers=4,
+                            selection_backend=backend),
                        n_workers=4, batch_fn=batch4)
-    s_dp = _run_sim(dict(mode="lags_dp", ratio=4.0, compressor=compressor),
+    s_dp = _run_sim(dict(mode="lags_dp", ratio=4.0, compressor=compressor,
+                         selection_backend=backend),
                     n_workers=4, batch_fn=batch4)
     for a, b in zip(jax.tree.leaves(s_hier2["params"]),
                     jax.tree.leaves(s_dp["params"])):
@@ -425,3 +432,45 @@ print("OK serve lowered",
 """
     out = _run(script)
     assert "OK serve lowered" in out
+
+
+@pytest.mark.slow
+def test_lags_dp_kernel_backend_bitwise_under_shard_map():
+    """selection_backend="kernel" vs "xla" on the real distributed surface:
+    the same lags_dp exchange run under shard_map on a 4-device host mesh
+    must produce bitwise-identical means and EF residuals.  The exchange
+    operands here are materialized shards, so the jit-boundary fma caveat
+    in ``core.lags.local_select_ef`` does not apply — this is the strict
+    form of the parity contract, on real (forced-host) devices."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro import api, compat
+
+mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+leaves = {
+    "w": jax.random.normal(jax.random.PRNGKey(0), (4, 257)),
+    "b": jax.random.normal(jax.random.PRNGKey(1), (4, 96)),
+}
+ef0 = jax.tree.map(lambda u: 0.05 * u[:, ::-1], leaves)
+outs = {}
+for backend in ("xla", "kernel"):
+    exch = api.build_exchange(api.ExchangeSpec(
+        mode="lags_dp", params_like={k: v[0] for k, v in leaves.items()},
+        ratio=4.0, compressor="topk_exact", selection_backend=backend,
+        block_size=64, sim=False))
+    f = compat.shard_map(
+        lambda uu, ee: exch.exchange(uu, ee, ("data",)),
+        mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=(P(), P("data")), check_vma=False)
+    outs[backend] = jax.tree.map(np.asarray, f(leaves, ef0))
+mean_x, ef_x = outs["xla"]
+mean_k, ef_k = outs["kernel"]
+for name in leaves:
+    assert (mean_x[name] == mean_k[name]).all(), name
+    assert (ef_x[name] == ef_k[name]).all(), name
+    assert np.abs(ef_k[name]).sum() > 0.0, name  # residual is live
+print("OK kernel shard_map bitwise")
+"""
+    out = _run(script, n_dev=4)
+    assert "OK kernel shard_map bitwise" in out

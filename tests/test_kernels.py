@@ -7,8 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests; skip cleanly on minimal envs
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests need hypothesis; the oracle sweeps below do not
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal envs: skip just the property tests
+    from conftest import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -88,6 +91,104 @@ class TestEfSparsify:
         assert ((np.abs(gv) >= 1.5) == (sel != 0)).all()
 
 
+class TestEfSelectPack:
+    """Fused select -> residual-update -> payload-pack kernel vs the
+    pure-jnp oracle.  The bitwise contract is pinned at lr=1.0 — the
+    production call (exchanges pass pre-scaled updates) — because
+    interpret-mode Pallas contracts ``e + lr*g`` into one fma for other
+    lr values (1-ulp vs XLA's separate mul+add; fma(1,g,e) == g+e)."""
+
+    @pytest.mark.parametrize("shape", [(1, 64), (7, 256), (8, 512), (3, 130)])
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("thr", [None, 0.5])
+    def test_bitwise_oracle_at_unit_lr(self, shape, dtype, thr):
+        n, bs = shape
+        k = max(1, bs // 8)
+        g = jax.random.normal(jax.random.PRNGKey(n * bs), shape, dtype)
+        e = jax.random.normal(jax.random.PRNGKey(n * bs + 1), shape,
+                              jnp.float32)
+        v, i, r = ops.ef_select_pack_rows(g, e, 1.0, thr, k)
+        vr, ir, rr = ref.ef_select_pack_ref(g, e, 1.0, thr, k)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rr))
+
+    def test_nonunit_lr_allclose(self, rng):
+        g = jax.random.normal(rng, (5, 256))
+        e = jax.random.normal(jax.random.fold_in(rng, 1), (5, 256))
+        v, i, r = ops.ef_select_pack_rows(g, e, 0.3, None, 16)
+        vr, ir, rr = ref.ef_select_pack_ref(g, e, 0.3, None, 16)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+        np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(rr), atol=1e-5)
+
+    def test_ef_invariant(self, rng):
+        """scatter(vals, idx) + residual == e + lr*g, exactly."""
+        g = jax.random.normal(rng, (4, 128))
+        e = jax.random.normal(jax.random.fold_in(rng, 1), (4, 128))
+        v, i, r = ops.ef_select_pack_rows(g, e, 1.0, None, 8)
+        acc = np.asarray(e) + np.asarray(g)
+        recon = np.asarray(r).copy()
+        for row in range(4):
+            np.add.at(recon[row], np.asarray(i)[row], np.asarray(v)[row])
+        np.testing.assert_array_equal(recon, acc)
+
+    def test_block_pack_matches_xla_topk_block_bitwise(self, rng):
+        """ef_block_pack == the XLA topk_block path on acc = e + u:
+        same values, indices, AND residual, bit for bit."""
+        from repro.core import compressors as C
+        d, k, bs = 2000, 64, 512
+        u = jax.random.normal(rng, (d,))
+        e = 0.1 * jax.random.normal(jax.random.fold_in(rng, 1), (d,))
+        v, i, r = ops.ef_block_pack(u, e, 1.0, k, block_size=bs)
+        acc = e + u
+        vx, ix = C.topk_block_compress(acc, k, block_size=bs)
+        rx = acc - C.decompress(vx, ix, d)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ix))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(vx))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rx))
+
+    def test_hier_pack_small_d_degenerates_exact(self, rng):
+        """d <= block_size: the fused hier pack IS exact fused top-k,
+        bitwise equal to topk_exact on acc."""
+        from repro.core import compressors as C
+        d, k = 100, 10
+        u = jax.random.normal(rng, (d,))
+        e = 0.1 * jax.random.normal(jax.random.fold_in(rng, 2), (d,))
+        v, i, r = ops.ef_hier_pack(u, e, 1.0, k, block_size=4096)
+        acc = e + u
+        vx, ix = C.topk_exact_compress(acc, k)
+        rx = acc - C.decompress(vx, ix, d)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ix))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(vx))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rx))
+
+    def test_hier_pack_large_d_ef_invariant_and_budget(self, rng):
+        """Multi-block hier path: EF invariant holds exactly; selection
+        bias (<= r per block, threshold ties) stays in the residual."""
+        d, k, bs, r_cand = 10000, 100, 1024, 8
+        u = jax.random.normal(rng, (d,))
+        e = 0.1 * jax.random.normal(jax.random.fold_in(rng, 3), (d,))
+        v, i, r = ops.ef_hier_pack(u, e, 1.0, k, block_size=bs, r=r_cand)
+        i_np, v_np = np.asarray(i), np.asarray(v)
+        assert (i_np >= 0).all() and (i_np < d).all()
+        acc = np.asarray(e + u)
+        recon = np.asarray(r).copy()
+        np.add.at(recon, i_np, v_np)
+        np.testing.assert_array_equal(recon, acc)
+        assert (v_np != 0).sum() <= -(-d // bs) * r_cand
+
+    def test_hier_pack_short_tail_block_indices_in_range(self, rng):
+        """Regression: padded tail block (d = 1026, bs = 1024) must not
+        emit candidate/selected indices >= d."""
+        d = 1026
+        u = jax.random.normal(rng, (d,))
+        e = jnp.zeros((d,))
+        _, i, _ = ops.ef_hier_pack(u, e, 1.0, 32, block_size=1024, r=8)
+        i_np = np.asarray(i)
+        assert (i_np >= 0).all() and (i_np < d).all()
+
+
 class TestHierThreshold:
     def test_threshold_reproduces_topk_count(self, rng):
         """thr from the candidate set keeps <= k elements (never more)."""
@@ -96,6 +197,16 @@ class TestHierThreshold:
             thr, _ = ops.hier_topk_threshold(x, k, block_size=1024, r=8)
             kept = int((np.abs(np.asarray(x)) >= float(thr)).sum())
             assert kept <= k + 8  # ties at thr may add a few
+
+    def test_short_tail_block_candidates_in_range(self, rng):
+        """Regression: with a padded tail block (d=1026, bs=1024) the
+        candidate indices used to run past d (base + local of the -inf
+        padding lanes); they must be clamped into range."""
+        x = jax.random.normal(rng, (1026,))
+        _, (_, cand_idx) = ops.hier_topk_threshold(x, 32, block_size=1024,
+                                                   r=8)
+        ci = np.asarray(cand_idx)
+        assert (ci >= 0).all() and (ci < 1026).all()
 
     def test_kernel_and_jnp_hier_identical(self, rng):
         from repro.core import compressors as C

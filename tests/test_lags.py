@@ -207,6 +207,116 @@ class TestSparseHierLAGS:
             exch.exchange(u, exch.init(u), None)
 
 
+class TestKernelBackendParity:
+    """selection_backend='kernel' exchange-level contract: with
+    materialized (u, e) operands the kernel-backed compressors reproduce
+    their XLA siblings BITWISE — values, indices (hence means), and EF
+    residuals.  (Inside a larger jitted program XLA may contract u's
+    producer into the accumulate — a 1-ulp drift that even makes the XLA
+    path disagree with its own eager execution; the parity contract is
+    pinned here, at the exchange boundary.)"""
+
+    def _assert_bitwise(self, pair_a, pair_b):
+        (m1, e1), (m2, e2) = pair_a, pair_b
+        for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(e1), jax.tree.leaves(e2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("xla_name,kernel_name", [
+        ("topk_exact", "topk_hier_ef_kernel"),   # small-d exact degeneracy
+        ("topk_hier", "topk_hier_kernel"),
+        ("topk_block", "topk_block_ef_kernel"),
+    ])
+    def test_lags_exchange_bitwise(self, rng, xla_name, kernel_name):
+        u = _tree(rng)
+        ks = lags.ks_from_ratio(_unstacked(u), 4.0)
+        kw = (("block_size", 32),) if "block" in xla_name else ()
+        ex_x = lags.LAGSExchange(ks=ks, compressor_name=xla_name,
+                                 compressor_kwargs=kw)
+        ex_k = lags.LAGSExchange(ks=ks, compressor_name=kernel_name,
+                                 compressor_kwargs=kw)
+        # seed both with the same nonzero residual state
+        ef0 = jax.tree.map(
+            lambda x: 0.1 * jax.random.normal(
+                jax.random.fold_in(rng, x.size), x.shape), u)
+        self._assert_bitwise(ex_x.exchange(u, ef0, None),
+                             ex_k.exchange(u, ef0, None))
+        # and under jit (materialized operands: parity must survive)
+        jx = jax.jit(lambda uu, ee: ex_x.exchange(uu, ee, None))
+        jk = jax.jit(lambda uu, ee: ex_k.exchange(uu, ee, None))
+        self._assert_bitwise(jx(u, ef0), jk(u, ef0))
+
+    def test_lags_exchange_bitwise_bf16_leaves(self, rng):
+        u = jax.tree.map(lambda x: x.astype(jnp.bfloat16), _tree(rng))
+        ks = lags.ks_from_ratio(_unstacked(u), 4.0)
+        ex_x = lags.LAGSExchange(ks=ks, compressor_name="topk_exact")
+        ex_k = lags.LAGSExchange(ks=ks,
+                                 compressor_name="topk_hier_ef_kernel")
+        ef0 = ex_x.init(u)   # f32 residuals regardless of update dtype
+        self._assert_bitwise(ex_x.exchange(u, ef0, None),
+                             ex_k.exchange(u, ef0, None))
+
+    def test_wave_grouping_bitwise(self, rng):
+        """Multi-wave exchange_bucket with a fused kernel compressor ==
+        the monolithic exchange, leaf for leaf, bit for bit."""
+        u = _tree(rng)
+        ks = lags.ks_from_ratio(_unstacked(u), 4.0)
+        exch = lags.LAGSExchange(ks=ks,
+                                 compressor_name="topk_hier_ef_kernel")
+        ef0 = exch.init(u)
+        mean_mono, ef_mono = exch.exchange(u, ef0, None)
+        flat_u, treedef = jax.tree.flatten(u)
+        flat_e = jax.tree.leaves(ef0)
+        waves = [(0, 2), (1,)]   # split + reordered leaf grouping
+        means = [None] * len(flat_u)
+        efs = [None] * len(flat_u)
+        for wave in waves:
+            ms, es = exch.exchange_bucket(
+                wave, [flat_u[i] for i in wave],
+                [flat_e[i] for i in wave], None)
+            for j, i in enumerate(wave):
+                means[i], efs[i] = ms[j], es[j]
+        self._assert_bitwise(
+            (mean_mono, ef_mono),
+            (jax.tree.unflatten(treedef, means),
+             jax.tree.unflatten(treedef, efs)))
+
+    def test_block_lags_use_kernel_bitwise(self, rng):
+        u = _tree(rng)
+        ks = lags.ks_from_ratio(_unstacked(u), 4.0)
+        ex_x = lags.BlockLAGSExchange(ks=ks, block_size=32)
+        ex_k = lags.BlockLAGSExchange(ks=ks, block_size=32,
+                                      use_kernel=True)
+        ef0 = ex_x.init(u)
+        self._assert_bitwise(ex_x.exchange(u, ef0, None),
+                             ex_k.exchange(u, ef0, None))
+
+    def test_slgs_kernel_bitwise(self, rng):
+        u = _tree(rng)
+        ex_x = lags.SLGSExchange(k_total=40)
+        ex_k = lags.SLGSExchange(k_total=40,
+                                 compressor_name="topk_hier_ef_kernel")
+        ef0 = ex_x.init(u)
+        self._assert_bitwise(ex_x.exchange(u, ef0, None),
+                             ex_k.exchange(u, ef0, None))
+
+    def test_hier2_kernel_inner_tier_bitwise(self, rng):
+        """Block-parallel (kernel) inner tier == the XLA inner tier on
+        the sim surface, both tiers' residuals included."""
+        u = _tree(rng)   # P=4 -> 2 pods x 2
+        ks = lags.ks_from_ratio(_unstacked(u), 8.0)
+        ks_in = lags.ks_from_ratio(_unstacked(u), 2.0)
+        ex_x = lags.SparseHierLAGSExchange(ks=ks, ks_inner=ks_in, n_inner=2)
+        ex_k = lags.SparseHierLAGSExchange(
+            ks=ks, ks_inner=ks_in, n_inner=2,
+            compressor_name="topk_hier_ef_kernel",
+            inner_compressor_name="topk_hier_ef_kernel")
+        ef0 = ex_x.init(u)
+        self._assert_bitwise(ex_x.exchange(u, ef0, None),
+                             ex_k.exchange(u, ef0, None))
+
+
 class TestKBookkeeping:
     def test_ks_from_ratio(self):
         tree = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((7,))}
