@@ -3,6 +3,14 @@
 Trains three model families (CNN, transformer-LM, sLSTM-LM analogue of
 LSTM-PTB) with LAGS-SGD on P simulated workers, recording the per-layer
 delta^(l) ratio each step.  Assumption 1 holds iff delta^(l) <= 1.
+
+The delta comes from the ONLINE estimator (``RunConfig.health_every``,
+``repro.observe.health`` — closed-form RandK denominator), not a
+separate offline probe; the worst-over-run values are exported through
+``observe.metrics.save_snapshot`` and every Fig.-2 assertion is read
+BACK from the loaded snapshot, so this bench gates the same
+``lags/health/...`` artifact ``repro.observe.check --require-health``
+gates in CI.
 """
 from __future__ import annotations
 
@@ -17,10 +25,15 @@ from repro.configs import base
 from repro.data import synthetic
 from repro.models import cnn as CNN
 from repro.models import transformer as T
+from repro.observe import check as OC
+from repro.observe import events as OE
+from repro.observe import metrics as OM
+from repro.observe import names as ON
 from repro.training import train_loop as TL
 
 P = 8
 STEPS = 12
+SNAP = "artifacts/assumption/metrics_snapshot"
 
 
 def _lm_workload(arch: str, ratio: float):
@@ -56,36 +69,68 @@ def run() -> int:
         "transformer_lm": _lm_workload("tinyllama_1_1b", ratio=16.0),
         "lstm_ptb_analogue": _lm_workload("paper_lstm_ptb", ratio=16.0),
     }
-    bad = 0
+    reg = OM.MetricsRegistry()
+    evs = OE.EventLog()
+    m_delta = reg.gauge(
+        "train_health_delta",
+        "Online per-leaf Assumption-1 delta (worst over the run).",
+        ("leaf", "mode"))
+    m_dmax = reg.gauge(
+        "train_health_delta_max",
+        "Online Assumption-1 delta max (worst over the run).", ("mode",))
+    sizes: dict[tuple[str, str], int] = {}
+    losses: dict[str, tuple] = {}
     for name, (params, loss_fn, data_fn, ratio) in workloads.items():
         run_cfg = api.RunConfig(mode="lags_dp", ratio=ratio, lr=0.1,
-                                measure_delta=True)
+                                health_every=1)
         tr = TL.SimTrainer(loss_fn, params, run_cfg, n_workers=P)
         hist = tr.run(data_fn, STEPS, log_every=1)
-        leaves = jax.tree_util.tree_flatten_with_path(params)[0]
-        leaf_names = ["/".join(str(getattr(q, "key", getattr(q, "idx", q)))
-                               for q in path) for path, _ in leaves]
-        leaf_sizes = [int(x.size) for _, x in leaves]
-        per_leaf = np.array([h["delta_per_leaf"] for h in hist])  # (T, L)
+        per_leaf = np.array([h["health_delta"] for h in hist])  # (T, L)
         worst = per_leaf.max(0)
-        big = [i for i, d in enumerate(leaf_sizes) if d >= MIN_LAYER_D]
-        dmax_big = float(worst[big].max())
-        dmax_all = float(worst.max())
+        leaf_sizes = [int(x.size) for x in jax.tree.leaves(params)]
+        for leaf, w, d in zip(tr.health_leaf_names, worst, leaf_sizes):
+            label = ON.health_name("delta", leaf)
+            m_delta.set(float(w), leaf=label, mode=name)
+            sizes[(name, label)] = d
+        m_dmax.set(float(worst.max()), mode=name)
+        losses[name] = (hist[0]["loss"], hist[-1]["loss"],
+                        float(per_leaf.mean()), ratio)
+    path = OM.save_snapshot(SNAP, reg, evs,
+                            meta={"bench": "assumption", "P": P,
+                                  "steps": STEPS})
+    snap = OM.load_snapshot(path)
+    # the health plane itself must pass the CI gate's structural checks
+    problems = OC.validate(snap, require_health=True)
+    for p in problems:
+        emit("assumption1/snapshot_problem", 1, p)
+    bad = len(problems)
+    # every Fig.-2 assertion reads back from the exported artifact
+    rows = [r for r in snap["metrics"] if r["name"] == "train_health_delta"]
+    for name in workloads:
+        wl = [r for r in rows if r["labels"]["mode"] == name]
+        big = [r for r in wl
+               if sizes[(name, r["labels"]["leaf"])] >= MIN_LAYER_D]
+        dmax_big = max(r["value"] for r in big)
+        dmax_all = max(r["value"] for r in wl)
         holds_big = dmax_big <= 1.0 + 1e-3
         bad += 0 if holds_big else 1
+        _, _, _, ratio = losses[name]
         emit(f"assumption1/{name}/delta_max_layers", dmax_big,
              f"holds={holds_big} over layers d>={MIN_LAYER_D} "
-             f"(P={P}, c={ratio}, {STEPS} steps)")
+             f"(P={P}, c={ratio}, {STEPS} steps, from snapshot)")
         emit(f"assumption1/{name}/delta_max_all_leaves", dmax_all,
              "incl. few-element norm scales (see note)")
-        dmean = float(np.mean([h["delta_mean"] for h in hist]))
+        l0, l1, dmean, _ = losses[name]
         emit(f"assumption1/{name}/delta_mean", dmean,
-             f"loss {hist[0]['loss']:.3f}->{hist[-1]['loss']:.3f}")
+             f"loss {l0:.3f}->{l1:.3f}")
         # attribute the worst offenders
-        order = np.argsort(-worst)[:3]
-        for i in order:
-            emit(f"assumption1/{name}/worst/{leaf_names[i][:50]}",
-                 float(worst[i]), f"d={leaf_sizes[i]}")
+        for r in sorted(wl, key=lambda r: -r["value"])[:3]:
+            leaf = r["labels"]["leaf"].removeprefix(ON.HEALTH_PREFIX)
+            emit(f"assumption1/{name}/worst/{leaf[:50]}",
+                 float(r["value"]),
+                 f"d={sizes[(name, r['labels']['leaf'])]}")
+    print(f"# snapshot: {path} (gate it with `python -m repro.observe."
+          f"check {SNAP} --require-health --max-delta 1.0`)", flush=True)
     print("# note: delta>1 occurs only on few-element scale/bias leaves "
           "whose worker gradients nearly cancel (||sum_p x^p|| -> 0 makes "
           "the RandK denominator vanish); the paper's Fig.2 layers are all "

@@ -32,19 +32,77 @@ Usage:
   PYTHONPATH=src python -m benchmarks.run assumption  # one
 Output: ``name,value,derived`` CSV rows; exit code = number of failed
 validation checks.
+
+``--summary-json`` additionally writes one ``BENCH_<name>.json`` per
+bench at the repo root (current directory): a stable, schema-versioned
+capture of that bench's CSV rows plus rc/elapsed, so CI can archive and
+diff machine-readable results without scraping logs.
 """
 from __future__ import annotations
 
+import contextlib
 import inspect
+import io
+import json
 import sys
 import time
 
 BENCHES = ("speedup_bound", "adaptive", "iteration_time", "kernels",
            "assumption", "convergence", "roofline", "stream")
 
+#: ``BENCH_<name>.json`` layout version — bump on any key change.
+SUMMARY_SCHEMA = 1
+
+
+class _Tee(io.TextIOBase):
+    """Pass-through writer that also buffers (live logs + capture)."""
+
+    def __init__(self, out):
+        self.out = out
+        self.buf = io.StringIO()
+
+    def write(self, s):
+        self.buf.write(s)
+        return self.out.write(s)
+
+    def flush(self):
+        self.out.flush()
+
+
+def _rows_from_text(text: str) -> list[dict]:
+    """The ``common.emit`` CSV rows in ``text`` (comments skipped)."""
+    rows = []
+    for line in text.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        parts = line.split(",")
+        if len(parts) < 3:      # emit() always writes name,value,derived
+            continue
+        name, value, derived = parts[0], parts[1], ",".join(parts[2:])
+        try:
+            value = float(value)
+        except ValueError:
+            pass
+        rows.append({"name": name, "value": value, "derived": derived})
+    return rows
+
+
+def _write_summary(name: str, rc: int, elapsed: float,
+                   rows: list[dict]) -> str:
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump({"schema": SUMMARY_SCHEMA, "bench": name, "rc": int(rc),
+                   "elapsed_s": round(elapsed, 3), "rows": rows},
+                  f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
 
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
+    summary = "--summary-json" in argv
+    if summary:
+        argv = [a for a in argv if a != "--summary-json"]
     names = argv or list(BENCHES)
     bad = 0
     t0 = time.time()
@@ -55,9 +113,18 @@ def main(argv=None) -> int:
         # argv-accepting benches (autotune, runtime) must not re-parse
         # THIS driver's sys.argv — hand them an empty arg list
         takes_argv = bool(inspect.signature(mod.run).parameters)
-        rc = mod.run([]) if takes_argv else mod.run()
-        print(f"# bench_{name}: rc={rc} ({time.time() - t1:.1f}s)",
-              flush=True)
+        if summary:
+            tee = _Tee(sys.stdout)
+            with contextlib.redirect_stdout(tee):
+                rc = mod.run([]) if takes_argv else mod.run()
+            rows = _rows_from_text(tee.buf.getvalue())
+        else:
+            rc = mod.run([]) if takes_argv else mod.run()
+        elapsed = time.time() - t1
+        print(f"# bench_{name}: rc={rc} ({elapsed:.1f}s)", flush=True)
+        if summary:
+            path = _write_summary(name, rc, elapsed, rows)
+            print(f"# bench_{name}: summary -> {path}", flush=True)
         bad += rc
     print(f"# total: {time.time() - t0:.1f}s, failed checks: {bad}",
           flush=True)

@@ -68,9 +68,14 @@ def main():
     chunk = min(16, args.seq)
 
     # -- train side: Session.run with the publisher attached ----------------
+    # health_every=1: the snapshot carries the convergence-health plane
+    # (online per-leaf delta + EF energy), alongside the stream codec's
+    # residual gauges the publisher emits — CI gates both with
+    # ``observe.check --require-health``
     sess = api.Session(
         cfg, api.RunConfig(mode="lags_dp", ratio=8.0, lr=args.lr,
-                           chunk=chunk, loss_chunk=chunk, donate=False),
+                           chunk=chunk, loss_chunk=chunk, donate=False,
+                           health_every=1),
         mesh=mesh)
     state, _ = sess.init_state()
     full_bytes = DeltaCodec(state["params"]).full_bytes

@@ -105,6 +105,15 @@ def main():
     ap.add_argument("--hier-schedule", default=None,
                     help="two-tier HierSchedule JSON for --method "
                          "lags_hier (from bench_runtime or the planner)")
+    ap.add_argument("--health-every", type=int, default=0,
+                    help="convergence-health cadence (repro.observe."
+                         "health): compute + emit the online per-leaf "
+                         "Assumption-1 delta / EF energy / staleness "
+                         "every N steps (0 = off)")
+    ap.add_argument("--health-threshold", type=float, default=2.0,
+                    help="absolute delta_max above which the health "
+                         "monitor raises a health_alarm (and, with "
+                         "--replan-every, a HealthTrigger re-plan)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -126,8 +135,13 @@ def main():
                       ratio_inner=args.ratio_inner, lr=args.lr,
                       schedule=schedule, pipeline=args.pipeline,
                       chunk=min(1024, args.seq),
-                      loss_chunk=min(512, args.seq), donate=False),
+                      loss_chunk=min(512, args.seq), donate=False,
+                      health_every=args.health_every),
         mesh=mesh)
+    monitor = None
+    if args.health_every > 0:
+        from repro.observe import health as OH
+        monitor = OH.HealthMonitor(threshold=args.health_threshold)
     controller = None
     if args.replan_every > 0:
         from repro.observe import triggers as TG
@@ -135,6 +149,8 @@ def main():
         trig = [TG.CadenceTrigger(args.replan_every)]
         if args.replan_on_anomaly:
             trig.append(TG.AnomalyTrigger())
+        if monitor is not None:
+            trig.append(TG.HealthTrigger(monitor))
         controller = sess.controller(
             rcfg=RuntimeConfig(replan_every=args.replan_every,
                                swap_threshold=args.swap_threshold,
@@ -159,11 +175,20 @@ def main():
         lambda t: data.batch(t, args.global_batch, args.seq),
         args.steps, controller=controller, state=state,
         log_path=log_path, log_every=10,
-        ckpt_every=args.ckpt_every, out_dir=args.out)
+        ckpt_every=args.ckpt_every, out_dir=args.out,
+        health_monitor=monitor)
     if controller is not None:
         swaps = sum(1 for e in controller.history if e.swapped)
         print(f"runtime: {len(controller.history)} re-plans, "
               f"{swaps} swaps (state saved for resume)")
+    if args.health_every > 0:
+        from repro.observe import metrics as OM
+        snap = OM.save_snapshot(
+            os.path.join(args.out, "metrics_snapshot"),
+            meta={"example": "train_e2e", "n_steps": int(args.steps),
+                  "health_every": int(args.health_every)})
+        print(f"metrics: snapshot -> {snap} (gate with `python -m "
+              f"repro.observe.check {snap} --require-health`)")
     print(f"done: {args.steps} steps, log at {log_path}")
 
 

@@ -101,6 +101,13 @@ class RunConfig:
     donate: bool = True
     # instrumentation / determinism
     measure_delta: bool = False        # Eq. 20 metric, sim path only
+    # online convergence health (repro.observe.health): 0 = off (zero
+    # graph cost — the health reductions are gated at build time);
+    # N > 0 computes per-leaf Assumption-1 delta / EF energy / staleness
+    # in-graph and Session.run reads + emits them every N steps (the
+    # fence cadence).  On the manual distributed surface the delta
+    # numerator costs one dense psum per leaf when enabled (see README).
+    health_every: int = 0
     seed: int = 0                      # PRNG stream for key-needing compressors
 
     def __post_init__(self):
@@ -114,6 +121,8 @@ class RunConfig:
             raise ValueError(
                 f"selection_backend={self.selection_backend!r} not in "
                 f"('xla', 'kernel')")
+        if self.health_every < 0:
+            raise ValueError(f"health_every={self.health_every} < 0")
         if self.pipeline == "wave" and self.momentum_correction > 0.0:
             # the wave taps form updates from raw cotangents inside
             # backprop; the DGC velocity is a post-backward recurrence

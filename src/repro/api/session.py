@@ -143,7 +143,9 @@ class Session:
     def run(self, data_fn, n_steps: int, *, controller=None, state=None,
             log_path: str | None = None, log_every: int = 10,
             ckpt_every: int = 0, out_dir: str | None = None,
-            publisher=None, metrics=None, events=None, print_fn=print):
+            publisher=None, metrics=None, events=None,
+            health_every: int | None = None, health_monitor=None,
+            print_fn=print):
         """The whole distributed training loop in one call.
 
         ``data_fn(step) -> batch`` supplies global batches;  the loop
@@ -181,6 +183,21 @@ class Session:
         ``metrics`` / ``events``: an ``observe.metrics.MetricsRegistry``
         and ``observe.events.EventLog`` (default: the process-wide
         plane) — benches pass isolated instances.
+
+        ``health_every`` (default: ``run.health_every``): every N steps
+        the convergence-health quantities the step computed in-graph
+        (``repro.observe.health`` — per-leaf Assumption-1 delta, EF
+        energy retention, async1 staleness) are read host-side
+        (piggybacking the existing loss sync) and set as
+        ``train_health_*`` gauges whose ``leaf`` label carries the
+        ``lags/health/...`` grammar.  ``health_monitor``: an optional
+        ``observe.health.HealthMonitor`` fed the delta_max stream — an
+        alarm emits a ``health_alarm`` event, bumps
+        ``train_health_alarms_total`` and (when the controller's trigger
+        set contains a ``HealthTrigger`` over the same monitor) re-plans
+        at the next step boundary.  Note the step must have been BUILT
+        with ``run.health_every > 0`` for the in-graph quantities to
+        exist at all.
 
         Returns ``(state, history)`` where ``history`` is the list of
         logged row dicts.
@@ -222,6 +239,36 @@ class Session:
             "(source=predicted: the live wave plan's timeline; "
             "source=achieved: trace attribution via repro.pipeline).",
             ("mode", "source"))
+        if health_every is None:
+            health_every = self.run_config.health_every
+        health_every = int(health_every)
+        health_leaves: list[str] = []
+        if health_every > 0:
+            from repro.observe import health as OH
+            from repro.observe import names as ON
+            health_leaves = OH.leaf_names(state["params"])
+            m_h_delta = reg.gauge(
+                "train_health_delta",
+                "Online per-leaf Assumption-1 delta (Eq. 20, closed-form "
+                "RandK denominator); leaf label = lags/health/delta/...",
+                ("leaf", "mode"))
+            m_h_dmax = reg.gauge(
+                "train_health_delta_max",
+                "Max online delta over leaves at the last health fence.",
+                ("mode",))
+            m_h_ef = reg.gauge(
+                "train_health_ef_energy",
+                "Per-leaf EF residual energy retention ||e||^2/||acc||^2 "
+                "per tier; leaf label = lags/health/ef_energy/...",
+                ("leaf", "mode", "tier"))
+            m_h_stale = reg.gauge(
+                "train_health_staleness",
+                "async1 one-step staleness gap ||u_t - u_{t-1}||/||u_t||.",
+                ("mode",))
+            m_h_alarms = reg.counter(
+                "train_health_alarms_total",
+                "Convergence-health alarms fired (threshold or drift).",
+                ("mode", "reason"))
 
         def save_ckpt(tag: str):
             if not out_dir:
@@ -258,6 +305,44 @@ class Session:
                     if waves is not None and waves.predicted:
                         m_overlap.set(float(waves.predicted["overlap"]),
                                       mode=mode, source="predicted")
+                    if (health_every > 0 and t % health_every == 0
+                            and "health_delta" in metrics_out):
+                        import numpy as _np
+                        delta = _np.asarray(metrics_out["health_delta"])
+                        dmax = float(metrics_out["health_delta_max"])
+                        for leaf, v in zip(health_leaves, delta):
+                            m_h_delta.set(
+                                float(v), mode=mode,
+                                leaf=ON.health_name("delta", leaf))
+                        m_h_dmax.set(dmax, mode=mode)
+                        for tier in ("flat", "inner", "outer"):
+                            e = metrics_out.get(f"health_ef_energy_{tier}")
+                            if e is None:
+                                continue
+                            for leaf, v in zip(health_leaves,
+                                               _np.asarray(e)):
+                                m_h_ef.set(
+                                    float(v), mode=mode, tier=tier,
+                                    leaf=ON.health_name(
+                                        "ef_energy", f"{tier}/{leaf}"))
+                        if "health_staleness" in metrics_out:
+                            m_h_stale.set(
+                                float(metrics_out["health_staleness"]),
+                                mode=mode)
+                        row["health"] = {"delta_max": dmax}
+                        if health_monitor is not None:
+                            alarm = health_monitor.observe(t, dmax)
+                            if alarm is not None:
+                                m_h_alarms.inc(mode=mode,
+                                               reason=alarm["reason"])
+                                evs.emit("health_alarm", step=t,
+                                         name=ON.health_name("delta"),
+                                         **{k: v for k, v in alarm.items()
+                                            if k != "step"})
+                                row["health"]["alarm"] = alarm
+                                print_fn(f"step {t:4d}  HEALTH ALARM "
+                                         f"[{alarm['reason']}] "
+                                         f"delta_max={dmax:.3g}")
                     if publisher is not None:
                         pkt = publisher.maybe_publish(t, state["params"])
                         if pkt is not None:

@@ -14,12 +14,16 @@ import jax.numpy as jnp
 from repro.core import compressors as C
 
 
-def delta_metric(xs: jax.Array, k: int, key: jax.Array,
+def delta_metric(xs: jax.Array, k: int, key: jax.Array | None,
                  n_rand: int = 4) -> jax.Array:
     """xs: (P, d) per-worker accumulated vectors for one layer.
 
     The RandK denominator is a random variable; Eq. 8's RHS is an
-    expectation, so we average ``n_rand`` draws."""
+    expectation, so we average ``n_rand`` draws mixed 50/50 with the
+    closed form.  ``n_rand=0`` uses the closed form alone (Stich et al.
+    2018: ``E||agg - RandK(agg,k)||^2 = (1 - k/d) ||agg||^2``) — then
+    ``key`` may be None, and the value matches the online estimator in
+    :mod:`repro.observe.health` exactly."""
     p, d = xs.shape
     agg = xs.sum(0)
 
@@ -29,24 +33,27 @@ def delta_metric(xs: jax.Array, k: int, key: jax.Array,
     topk_agg = jax.vmap(topk_one)(xs).sum(0)
     num = jnp.sum((agg - topk_agg) ** 2)
 
-    def rand_den(kk):
-        r = C.randk_dense(agg, min(k, d), kk)
-        return jnp.sum((agg - r) ** 2)
-
-    keys = jax.random.split(key, n_rand)
-    den = jax.vmap(rand_den)(keys).mean()
     # Closed form of the expectation (Stich et al. 2018): (1 - k/d) ||agg||^2
-    den_closed = (1.0 - min(k, d) / d) * jnp.sum(agg ** 2)
-    den = 0.5 * (den + den_closed)
+    den = (1.0 - min(k, d) / d) * jnp.sum(agg ** 2)
+    if n_rand > 0:
+        def rand_den(kk):
+            r = C.randk_dense(agg, min(k, d), kk)
+            return jnp.sum((agg - r) ** 2)
+
+        keys = jax.random.split(key, n_rand)
+        den = 0.5 * (jax.vmap(rand_den)(keys).mean() + den)
     return num / jnp.maximum(den, 1e-30)
 
 
-def delta_metric_tree(per_worker_acc, ks, key) -> dict:
-    """Compute delta^(l) for every leaf; leaves shaped (P, ...)."""
+def delta_metric_tree(per_worker_acc, ks, key, n_rand: int = 4) -> dict:
+    """Compute delta^(l) for every leaf; leaves shaped (P, ...).
+
+    ``n_rand=0`` (closed-form denominator only) accepts ``key=None``."""
     flat, treedef = jax.tree.flatten(per_worker_acc)
     flat_k = treedef.flatten_up_to(ks)
     out = []
     for i, (x, k) in enumerate(zip(flat, flat_k)):
         xs = x.reshape(x.shape[0], -1)
-        out.append(delta_metric(xs, int(k), jax.random.fold_in(key, i)))
+        sub = jax.random.fold_in(key, i) if n_rand > 0 else None
+        out.append(delta_metric(xs, int(k), sub, n_rand=n_rand))
     return treedef.unflatten(out)

@@ -66,6 +66,7 @@ from repro.configs import base
 from repro.core import lags
 from repro.launch import mesh as M
 from repro.models import transformer as T
+from repro.observe import health as OH
 from repro.pipeline import buckets as WB
 from repro.pipeline import step as WS
 from repro.pipeline import waves as WW
@@ -294,6 +295,19 @@ def build_train_step(cfg, mesh, run: RunConfig):
     meta["schedule"] = schedule
     meta["run"] = dataclasses.replace(run, mode=mode)
 
+    # online convergence health (repro.observe.health), build-time gated:
+    # zero graph cost when health_every == 0.  Needs per-leaf budgets, so
+    # slgs (whole-model k_total) and dense are skipped.  On this manual
+    # surface the delta numerator ||sum_w e_new||^2 costs one dense psum
+    # per leaf — cross terms are not recoverable from per-worker scalars.
+    health = (run.health_every > 0 and mode != "dense"
+              and getattr(exch, "ks", None) is not None)
+    outer_axis_h = getattr(exch, "outer_axis", "pod")
+    outer_axes_h = tuple(a for a in manual if a == outer_axis_h)
+    n_out_h = (int(math.prod(mesh.shape[a] for a in outer_axes_h))
+               if outer_axes_h else 1)
+    n_w_h = meta["n_workers"]
+
     # wave partition for the pipelined modes: a user-supplied schedule is
     # re-bound by leaf name against THIS params tree; otherwise a
     # geometry-default partition at the exchange's declared granularity
@@ -384,7 +398,55 @@ def build_train_step(cfg, mesh, run: RunConfig):
             params, mean_upd)
         if manual:
             loss = lags._psum_mean(loss, manual)
-        return new_params, new_ef, new_pending, new_extra, {"loss": loss}
+        metrics = {"loss": loss}
+        if health:
+            if ef_tiers:
+                # two-tier: delta gates the slow cross-pod (outer) wire.
+                # The outer residual is pod-replicated, so the psum over
+                # the pod axis alone is exactly sum-over-pods.
+                e_sum = (jax.lax.psum(new_ef_local["outer"], outer_axes_h)
+                         if outer_axes_h else new_ef_local["outer"])
+                delta = OH.delta_leaves_from_mean(
+                    e_sum, mean_upd, exch.ks, n_out_h)
+                agg = jax.tree.map(lambda e, m: e + n_out_h * m,
+                                   e_sum, mean_upd)
+                metrics["health_ef_energy_outer"] = OH.safe_ratio(
+                    OH.sq_leaves(e_sum), OH.sq_leaves(agg))
+                if pipeline != "wave":
+                    src = pend if pipeline == "async1" else updates
+                    acc_in = jax.tree.map(lambda e, u: e + u,
+                                          ef_local["inner"], src)
+                    metrics["health_ef_energy_inner"] = OH.safe_ratio(
+                        jax.lax.psum(OH.sq_leaves(new_ef_local["inner"]),
+                                     manual),
+                        jax.lax.psum(OH.sq_leaves(acc_in), manual))
+            else:
+                e_sum = jax.lax.psum(new_ef_local, manual)
+                delta = OH.delta_leaves_from_mean(
+                    e_sum, mean_upd, exch.ks, n_w_h)
+                if pipeline == "wave":
+                    # the wave taps consume the updates inside backprop:
+                    # fall back to the aggregate energy form
+                    agg = jax.tree.map(lambda e, m: e + n_w_h * m,
+                                       e_sum, mean_upd)
+                    metrics["health_ef_energy_flat"] = OH.safe_ratio(
+                        OH.sq_leaves(e_sum), OH.sq_leaves(agg))
+                else:
+                    src = pend if pipeline == "async1" else updates
+                    acc = jax.tree.map(lambda e, u: e + u, ef_local, src)
+                    metrics["health_ef_energy_flat"] = OH.safe_ratio(
+                        jax.lax.psum(OH.sq_leaves(new_ef_local), manual),
+                        jax.lax.psum(OH.sq_leaves(acc), manual))
+            metrics["health_delta"] = delta
+            metrics["health_delta_max"] = delta.max()
+            if pipeline == "async1":
+                u_sq = sum(OH.sq_norm(x) for x in jax.tree.leaves(updates))
+                d_sq = sum(OH.sq_norm(u - q)
+                           for u, q in zip(jax.tree.leaves(updates),
+                                           jax.tree.leaves(pend)))
+                metrics["health_staleness"] = OH.staleness_gap(
+                    jax.lax.psum(u_sq, manual), jax.lax.psum(d_sq, manual))
+        return new_params, new_ef, new_pending, new_extra, metrics
 
     if manual:
         # shard_map in_specs mention manual axes only; auto ('model', and
@@ -406,6 +468,20 @@ def build_train_step(cfg, mesh, run: RunConfig):
         # params enter replicated over manual axes
         params_in = jax.tree.map(lambda s: P(*[None] * len(s)), meta["pspecs"],
                                  is_leaf=_is_p)
+        # metrics leave the manual region replicated (every entry is a
+        # psum'd reduction); the key set must mirror worker() exactly
+        metrics_spec: dict[str, P] = {"loss": P()}
+        if health:
+            metrics_spec["health_delta"] = P()
+            metrics_spec["health_delta_max"] = P()
+            if ef_tiers:
+                metrics_spec["health_ef_energy_outer"] = P()
+                if pipeline != "wave":
+                    metrics_spec["health_ef_energy_inner"] = P()
+            else:
+                metrics_spec["health_ef_energy_flat"] = P()
+            if pipeline == "async1":
+                metrics_spec["health_staleness"] = P()
 
         def step(state, batch):
             bspecs = batch_pspec(batch, mesh, manual)
@@ -414,7 +490,7 @@ def build_train_step(cfg, mesh, run: RunConfig):
                 in_specs=(params_in, ef_in, pending_in, extra_in, bspecs,
                           P()),
                 out_specs=(params_in, ef_in, pending_in, extra_in,
-                           {"loss": P()}),
+                           metrics_spec),
                 axis_names=set(manual), check_vma=False)
             new_params, new_ef, new_pending, new_extra, metrics = sm(
                 state["params"], state["ef"], state.get("pending", ()),
@@ -483,13 +559,34 @@ def build_train_step(cfg, mesh, run: RunConfig):
             new_params = jax.tree.map(
                 lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
                 params, mean_upd)
+            metrics = {"loss": loss}
+            if health and not ef_tiers:
+                # leading-P layout under GSPMD: same form as the sim
+                # surface (the lags_hier factory builds the flat leading-P
+                # exchange; dict EF never reaches this path)
+                e_sum = jax.tree.map(lambda e: e.sum(0), new_ef)
+                delta = OH.delta_leaves_from_mean(
+                    e_sum, mean_upd, exch.ks, n_w)
+                acc = jax.tree.map(lambda e, u: e + u, ef, src)
+                metrics["health_ef_energy_flat"] = OH.energy_leaves(
+                    new_ef, acc)
+                metrics["health_delta"] = delta
+                metrics["health_delta_max"] = delta.max()
+                if pipeline == "async1":
+                    u_sq = sum(OH.sq_norm(x)
+                               for x in jax.tree.leaves(updates))
+                    d_sq = sum(OH.sq_norm(u - q)
+                               for u, q in zip(jax.tree.leaves(updates),
+                                               jax.tree.leaves(src)))
+                    metrics["health_staleness"] = OH.staleness_gap(
+                        u_sq, d_sq)
             out = {"params": new_params, "ef": new_ef,
                    "step": state["step"] + 1}
             if pipeline == "async1":
                 out["pending"] = updates
             if mc > 0.0:
                 out["extra"] = {"mom": new_mom}
-            return out, {"loss": loss}
+            return out, metrics
 
     donate_args = (0,) if run.donate else ()
     return jax.jit(step, donate_argnums=donate_args), state_specs, meta

@@ -26,6 +26,12 @@ cadence-driven into evidence-driven, in four pieces:
     the built-ins (cadence / anomaly / hardware-fingerprint drift) the
     controller ORs together; the default set reproduces the old
     ``replan_every`` semantics bit-for-bit.
+  * :mod:`~repro.observe.health` — the convergence-health plane: the
+    paper's theory quantities (Assumption-1 delta, EF residual energy,
+    async1 staleness) computed online from what the live exchange
+    already returns, plus the :class:`HealthMonitor` that turns the
+    delta stream into ``health_alarm`` events and
+    :class:`~repro.observe.triggers.HealthTrigger` re-plans.
   * :mod:`~repro.observe.metrics` / :mod:`~repro.observe.events` — the
     process-wide metrics registry (counters/gauges/histograms over the
     ``names`` grammar, Prometheus text + JSONL snapshot exporters) and
@@ -50,6 +56,8 @@ _LAZY = {
     "metrics": "repro.observe.metrics",
     "events": "repro.observe.events",
     "check": "repro.observe.check",
+    "health": "repro.observe.health",
+    "HealthMonitor": ("repro.observe.health", "HealthMonitor"),
     "MetricsRegistry": ("repro.observe.metrics", "MetricsRegistry"),
     "save_snapshot": ("repro.observe.metrics", "save_snapshot"),
     "load_snapshot": ("repro.observe.metrics", "load_snapshot"),
@@ -59,6 +67,7 @@ _LAZY = {
     "TraceEvent": ("repro.observe.trace", "TraceEvent"),
     "FakeTraceBackend": ("repro.observe.trace", "FakeTraceBackend"),
     "capture_jax_trace": ("repro.observe.trace", "capture_jax_trace"),
+    "export_chrome_trace": ("repro.observe.trace", "export_chrome_trace"),
     "AnomalyConfig": ("repro.observe.anomaly", "AnomalyConfig"),
     "StepTimeAnomalyDetector": ("repro.observe.anomaly",
                                 "StepTimeAnomalyDetector"),
@@ -67,6 +76,7 @@ _LAZY = {
     "CadenceTrigger": ("repro.observe.triggers", "CadenceTrigger"),
     "AnomalyTrigger": ("repro.observe.triggers", "AnomalyTrigger"),
     "FingerprintTrigger": ("repro.observe.triggers", "FingerprintTrigger"),
+    "HealthTrigger": ("repro.observe.triggers", "HealthTrigger"),
     "default_triggers": ("repro.observe.triggers", "default_triggers"),
 }
 

@@ -21,6 +21,16 @@ invariants:
     fraction must be ``>= R`` — the gate a wave-pipelined runtime smoke
     puts on "the overlap actually happened".
 
+  * ``--require-health`` — the run must have exported the convergence-
+    health plane (``repro.observe.health``): per-leaf online
+    Assumption-1 delta gauges (``train_health_delta``) and, when the
+    snapshot covers the stream subsystem, the stream codec's residual
+    energy-retention gauges (``publish_health_ef_energy``).
+
+  * ``--max-delta R`` — every reported online delta (per-leaf and max)
+    must be ``<= R``; ``--max-delta 1.0`` is the paper's Assumption-1
+    bound, looser values gate CI smokes against divergence.
+
 Usable as a library too: :func:`validate` returns the list of problems.
 """
 from __future__ import annotations
@@ -38,10 +48,16 @@ REQUEST_FIELDS = ("prefill_s", "decode_tok_s", "version")
 #: fresh-fit wave-plan prediction.
 OVERLAP_METRICS = ("train_overlap_frac", "replan_overlap_frac")
 
+#: Gauge families carrying the online Assumption-1 delta
+#: (``--max-delta`` bounds every sample of these).
+DELTA_METRICS = ("train_health_delta", "train_health_delta_max")
+
 
 def validate(snap: dict, require: tuple[str, ...] = (),
              max_publish_ratio: float | None = None,
-             min_overlap: float | None = None) -> list[str]:
+             min_overlap: float | None = None,
+             require_health: bool = False,
+             max_delta: float | None = None) -> list[str]:
     """Problems with a loaded snapshot (empty list = valid)."""
     problems: list[str] = []
     meta = snap.get("meta", {})
@@ -116,6 +132,33 @@ def validate(snap: dict, require: tuple[str, ...] = (),
                     f"{r['name']}{r.get('labels', {})} = "
                     f"{r.get('value', 0.0):.3f} < --min-overlap "
                     f"{min_overlap}")
+    delta_rows = [r for r in snap.get("metrics", ())
+                  if r["name"] in DELTA_METRICS]
+    if require_health:
+        if not delta_rows:
+            problems.append(
+                "--require-health given but no online delta gauges "
+                f"({'/'.join(DELTA_METRICS)}) in the snapshot — was the "
+                "run launched with health_every > 0?")
+        if "stream" in require or "stream" in covered:
+            stream_rows = [r for r in snap.get("metrics", ())
+                           if r["name"] == "publish_health_ef_energy"]
+            if not stream_rows:
+                problems.append(
+                    "--require-health: snapshot covers the stream "
+                    "subsystem but carries no publish_health_ef_energy "
+                    "gauges (stream-residual health)")
+    if max_delta is not None:
+        if not delta_rows:
+            problems.append(
+                f"--max-delta given but no online delta gauges "
+                f"({'/'.join(DELTA_METRICS)}) in the snapshot")
+        for r in delta_rows:
+            if r.get("value", 0.0) > max_delta:
+                problems.append(
+                    f"{r['name']}{r.get('labels', {})} = "
+                    f"{r.get('value', 0.0):.3g} > --max-delta "
+                    f"{max_delta}")
     return problems
 
 
@@ -133,6 +176,14 @@ def main(argv=None) -> int:
     ap.add_argument("--min-overlap", type=float, default=None,
                     help="require overlap gauges (train/replan_overlap_"
                          "frac) to be present and >= this fraction")
+    ap.add_argument("--require-health", action="store_true",
+                    help="require the convergence-health plane: online "
+                         "delta gauges (+ stream-residual energy gauges "
+                         "when the snapshot covers stream)")
+    ap.add_argument("--max-delta", type=float, default=None,
+                    help="bound every online Assumption-1 delta sample "
+                         "(train_health_delta[_max]); 1.0 = the paper's "
+                         "bound")
     args = ap.parse_args(argv)
     try:
         snap = OM.load_snapshot(args.snapshot)
@@ -141,7 +192,9 @@ def main(argv=None) -> int:
         return 1
     problems = validate(snap, require=tuple(args.require),
                         max_publish_ratio=args.max_publish_ratio,
-                        min_overlap=args.min_overlap)
+                        min_overlap=args.min_overlap,
+                        require_health=args.require_health,
+                        max_delta=args.max_delta)
     for p in problems:
         print(f"metrics-check: FAIL {p}")
     if not problems:

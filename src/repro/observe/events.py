@@ -36,6 +36,7 @@ EVENT_SCHEMA = 1
 #: Known event kinds per subsystem (producers may add more; consumers
 #: must tolerate unknown kinds within a schema version).
 EVENT_KINDS = {
+    "train": ("health_alarm",),
     "replan": ("trigger", "replan"),
     "stream": ("publish", "guard_trip", "guard_pin", "guard_resume"),
     "serve": ("apply", "resync", "request"),
@@ -80,20 +81,32 @@ class EventLog:
         self._ring: collections.deque[Event] = \
             collections.deque(maxlen=int(capacity))
         self._seq = 0
+        self._dropped = 0
         self._lock = threading.Lock()
 
     def emit(self, kind: str, *, step: int = 0, name: str = "",
              **data) -> Event:
         """Append one event; ``data`` values must be JSON-serializable
         (enforced here, not at snapshot time, so a bad producer fails at
-        its own call site)."""
+        its own call site).  A full ring drops its oldest event — counted
+        in :attr:`dropped`, never silent (the snapshot sidecar and the
+        ``observe/events/dropped_total`` counter surface it)."""
         json.dumps(data)
         with self._lock:
+            if (self._ring.maxlen is not None
+                    and len(self._ring) == self._ring.maxlen):
+                self._dropped += 1
             ev = Event(seq=self._seq, kind=str(kind), step=int(step),
                        name=str(name), data=data)
             self._seq += 1
             self._ring.append(ev)
         return ev
+
+    @property
+    def dropped(self) -> int:
+        """Events evicted by the bounded ring since the last clear."""
+        with self._lock:
+            return self._dropped
 
     def events(self, kind: str | None = None) -> list[Event]:
         with self._lock:
@@ -116,6 +129,7 @@ class EventLog:
         with self._lock:
             self._ring.clear()
             self._seq = 0
+            self._dropped = 0
 
     def to_jsonl(self) -> str:
         return "".join(json.dumps(e.to_row(), sort_keys=True,

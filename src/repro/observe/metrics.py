@@ -350,6 +350,15 @@ def save_snapshot(path: str, registry: MetricsRegistry | None = None,
     from repro.observe import events as OE
     reg = registry if registry is not None else REGISTRY
     log = events if events is not None else OE.EVENTS
+    # no silent caps: a bounded ring that evicted events must say so,
+    # both as a counter row and in the sidecar counts
+    dropped = int(getattr(log, "dropped", 0))
+    if dropped:
+        c = reg.counter("observe/events/dropped_total",
+                        "Events evicted by the bounded EventLog ring.")
+        behind = dropped - c.value()
+        if behind > 0:
+            c.inc(behind)
     rows = reg.snapshot_rows()
     ev_rows = [e.to_row() for e in log.events()]
     subsystems = set(reg.subsystems())
@@ -365,7 +374,8 @@ def save_snapshot(path: str, registry: MetricsRegistry | None = None,
     with open(base + ".prom", "w") as f:
         f.write(reg.to_prometheus())
     sidecar = {"schema": SNAPSHOT_SCHEMA,
-               "counts": {"metrics": len(rows), "events": len(ev_rows)},
+               "counts": {"metrics": len(rows), "events": len(ev_rows),
+                          "events_dropped": dropped},
                "subsystems": sorted(subsystems),
                "metadata": meta or {}}
     with open(base + ".json", "w") as f:

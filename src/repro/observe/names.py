@@ -20,6 +20,12 @@ A trace event is attributed purely from its *name*, so the exchange code
                                             ``train_overlap_comm_seconds``
                                             gauge family
                                             (``repro.pipeline.overlap``)
+  * ``lags/health/<kind>/<label>``        — convergence-health quantity
+                                            (``repro.observe.health``);
+                                            ``kind`` is one of
+                                            :data:`HEALTH_KINDS` and
+                                            ``label`` is a leaf path or a
+                                            ``<tier>/<leaf path>`` pair
   * ``serve/<kind>/<label>?version=<V>``  — serving-path work
                                             (``repro.stream``); ``kind``
                                             is one of :data:`SERVE_KINDS`
@@ -42,6 +48,7 @@ FWD = "lags/fwd"
 BWD_PREFIX = "lags/bwd/"
 COMM_PREFIX = "lags/comm/"
 OVERLAP_PREFIX = "lags/overlap/"
+HEALTH_PREFIX = "lags/health/"
 SERVE_PREFIX = "serve/"
 
 #: Tier vocabulary: flat data-parallel wire, intra-pod ICI, cross-pod DCN.
@@ -51,6 +58,11 @@ TIERS = ("flat", "inner", "outer")
 #: one-token decode, a delta-packet apply, a full-checkpoint resync, and
 #: a rollout-guard quality eval.
 SERVE_KINDS = ("prefill", "decode", "apply", "resync", "eval")
+
+#: Convergence-health kinds (``repro.observe.health``): the online
+#: per-leaf Assumption-1 ratio (Eq. 20), EF-residual energy retention,
+#: and the async1 one-step staleness gap.
+HEALTH_KINDS = ("delta", "ef_energy", "staleness")
 
 
 def bwd_name(leaf: str) -> str:
@@ -62,6 +74,13 @@ def overlap_name(label: str) -> str:
     collective's overlap attribution (``label`` is the same string the
     ``comm`` event carried)."""
     return OVERLAP_PREFIX + label
+
+
+def health_name(kind: str, label: str = "") -> str:
+    """``lags/health/<kind>/<label>`` — one convergence-health quantity.
+    ``label`` is a leaf path (``layers/0/attn/wq``) or, for tiered
+    quantities, ``<tier>/<leaf path>``."""
+    return f"{HEALTH_PREFIX}{kind}/{label}"
 
 
 def serve_name(kind: str, label: str = "", *,
@@ -86,8 +105,9 @@ def parse(name: str) -> dict | None:
     """Structured view of an annotation name, or None for foreign names.
 
     Returns ``{"type": "step" | "fwd"}``, ``{"type": "bwd", "leaf": ...}``,
-    ``{"type": "comm", "tier", "kind", "label", "nbytes", "p"}`` or
-    ``{"type": "overlap", "label": ...}``.
+    ``{"type": "comm", "tier", "kind", "label", "nbytes", "p"}``,
+    ``{"type": "overlap", "label": ...}`` or
+    ``{"type": "health", "kind", "label"}``.
     Malformed ``comm`` metadata parses as ``nbytes=0.0 / p=1`` rather
     than raising — a real profiler run may mangle suffixes, and a sample
     with no payload is simply dropped downstream.
@@ -119,6 +139,12 @@ def parse(name: str) -> dict | None:
                 "nbytes": nbytes, "p": p}
     if name.startswith(OVERLAP_PREFIX):
         return {"type": "overlap", "label": name[len(OVERLAP_PREFIX):]}
+    if name.startswith(HEALTH_PREFIX):
+        rest = name[len(HEALTH_PREFIX):]
+        kind, _, label = rest.partition("/")
+        if not kind:
+            return None
+        return {"type": "health", "kind": kind, "label": label}
     if name.startswith(SERVE_PREFIX):
         rest = name[len(SERVE_PREFIX):]
         parts = rest.split("/", 1)

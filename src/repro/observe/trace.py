@@ -69,6 +69,35 @@ class Trace:
                      meta=dict(obj.get("meta", {})))
 
 
+def export_chrome_trace(trace: Trace, path: str) -> str:
+    """Write ``trace`` as Perfetto-loadable chrome-trace-format JSON.
+
+    The inverse of :func:`_parse_chrome_trace`: every event becomes a
+    complete ``"ph": "X"`` slice with ``ts``/``dur`` in microseconds, so
+    a FakeTraceBackend synthesis (wave/overlap events included) opens in
+    ``ui.perfetto.dev`` / ``chrome://tracing`` and round-trips through
+    ``_events_from_chrome_obj`` unchanged.  Trace meta rides in
+    ``otherData``; ``.gz`` paths are gzip-compressed.  Returns ``path``.
+    """
+    obj = {
+        "traceEvents": [
+            {"name": e.name, "ph": "X", "pid": 0, "tid": 0,
+             "ts": e.t_start * 1e6, "dur": e.dur * 1e6,
+             "cat": (names.parse(e.name) or {}).get("type", "span")}
+            for e in trace.events
+        ],
+        "displayTimeUnit": "ms",
+        "otherData": dict(trace.meta),
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "wt") as f:
+        json.dump(obj, f)
+    return path
+
+
 def annotation(name: str):
     """Host-side profiler annotation (no-op when jax lacks the API)."""
     import jax

@@ -17,6 +17,11 @@ re-plan?" from the :class:`TriggerContext` the controller hands it:
     ``hardware`` fingerprint (``Schedule.hardware_drift``).  Silent
     while no schedule is installed or while the window cannot support a
     fit.
+  * :class:`HealthTrigger` — model/theory health: fires while a
+    :class:`~repro.observe.health.HealthMonitor` holds a pending
+    convergence alarm (Assumption-1 delta over threshold, or drifting),
+    so an over-aggressive compression schedule re-plans *now* instead
+    of at the next cadence boundary.
 
 Triggers are stateful; the controller calls :meth:`notify_replan` after
 every re-plan (swapped or hysteresis-rejected) so detectors can re-arm,
@@ -147,6 +152,38 @@ class FingerprintTrigger:
 
     def notify_replan(self, ctx, event) -> None:
         pass
+
+
+class HealthTrigger:
+    """Due while the convergence-health monitor holds a pending alarm.
+
+    The monitor is fed elsewhere (``api.Session.run`` at the health
+    cadence — :class:`TriggerContext` carries no health data); this
+    trigger only polls it, so it composes with the same monitor emitting
+    ``health_alarm`` events.  ``notify_replan`` re-arms the monitor: the
+    re-plan answered the alarm, and the new schedule is a new baseline.
+    """
+    name = "health"
+
+    def __init__(self, monitor):
+        self.monitor = monitor     # repro.observe.health.HealthMonitor
+        self.last: Any = None      # most recent consumed alarm payload
+
+    def due(self, ctx: TriggerContext) -> bool:
+        if not self.monitor.alarming:
+            return False
+        self.last = self.monitor.consume()
+        return True
+
+    def notify_replan(self, ctx, event) -> None:
+        self.monitor.reset()
+
+    def state_dict(self) -> dict:
+        return {"monitor": self.monitor.state_dict(), "last": self.last}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.monitor.load_state_dict(state.get("monitor", {}))
+        self.last = state.get("last")
 
 
 def default_triggers(replan_every: int) -> tuple:

@@ -68,6 +68,13 @@ class StreamPublisher:
             "What the same cadence would have cost in full checkpoints.")
         self._m_version = reg.gauge(
             "publish_version", "Latest published packet version.")
+        # convergence-health plane (repro.observe.health): per-leaf EF
+        # energy retention of the stream codec residual — the share of
+        # accumulated weight motion each packet left behind
+        self._m_health = reg.gauge(
+            "publish_health_ef_energy",
+            "Stream-residual energy retention ||res'||^2 / ||acc||^2 "
+            "per leaf.", ("leaf",))
         self.every = int(every)
         self.flush_every = int(flush_every)
         self.out_dir = out_dir
@@ -149,6 +156,7 @@ class StreamPublisher:
     def publish(self, step: int, params, *,
                 full: bool = False) -> CD.DeltaPacket:
         version = self.version + 1
+        old_res = self.residual
         if (self.published is None or full
                 or (self.flush_every and version % self.flush_every == 0)):
             payload, self.residual, nbytes = self.codec.encode_full(params)
@@ -161,6 +169,7 @@ class StreamPublisher:
                 self.published, params, self.residual, ks)
             kind = "delta"
             self.last_plan = plan
+        self._health_gauges(old_res, params, kind)
         pkt = CD.DeltaPacket(version=version, step=int(step),
                              fingerprint=self.codec.fingerprint, kind=kind,
                              payload=payload, nbytes=int(nbytes))
@@ -184,6 +193,29 @@ class StreamPublisher:
         if self.out_dir:
             self.packet_paths.append(CD.save_packet(self.out_dir, pkt))
         return pkt
+
+    def _health_gauges(self, old_res, params, kind: str) -> None:
+        """Per-leaf ``||res'||^2 / ||acc||^2`` with ``acc = res + (now -
+        published)`` — the stream tier of the ``lags/health/ef_energy``
+        family.  Host-side numpy at publish cadence only."""
+        from repro.observe import names as ON
+        if kind == "full" or self.published is None:
+            # full packets are exact: the residual drains to zero
+            for key in self.codec.keys:
+                self._m_health.set(
+                    0.0, leaf=ON.health_name("ef_energy", f"stream/{key}"))
+            return
+        now = dict(CD.leaf_items(params))
+        pub = dict(CD.leaf_items(self.published))
+        for key in self.codec.keys:
+            delta = (np.asarray(now[key], np.float32).reshape(-1)
+                     - np.asarray(pub[key], np.float32).reshape(-1))
+            acc_sq = float(np.sum(np.square(old_res[key] + delta)))
+            res_sq = float(np.sum(np.square(
+                np.asarray(self.residual[key], np.float32))))
+            self._m_health.set(
+                res_sq / max(acc_sq, 1e-30),
+                leaf=ON.health_name("ef_energy", f"stream/{key}"))
 
     def flush(self, step: int, params) -> CD.DeltaPacket:
         """Full packet now: drains the EF residual; subscribers that apply

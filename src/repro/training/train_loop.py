@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.api.config import RunConfig
 from repro.core import assumption
+from repro.observe import health as H
 from repro.optim import optimizers as opt
 
 
@@ -76,6 +77,9 @@ class SimTrainer:
         # the same source the distributed surface materializes, so both
         # agree on layout (leading (P,) axis, f32) by construction
         extra = spec.init_extra_state()
+        # label payload for the lags/health/... grammar, in the same
+        # tree-flatten order as the stacked health_delta metric
+        self.health_leaf_names = H.leaf_names(params)
         self.state = {
             "params": params,
             # the exchange owns its EF-state layout (single residual tree,
@@ -97,6 +101,14 @@ class SimTrainer:
         run = self.run_config
         measure = run.measure_delta
         mode = self.mode
+        p_workers = self.n_workers
+        # online convergence health (observe.health): build-time gate —
+        # zero graph cost when off; needs per-leaf budgets, so slgs
+        # (k_total over the concatenation) and dense are skipped
+        health = (run.health_every > 0
+                  and getattr(exchange, "ks", None) is not None)
+        from repro.api import registry as R
+        tiered = bool(R.get_exchange(mode).ef_tiers) if health else False
 
         def step(state, batch):
             params = state["params"]
@@ -133,6 +145,35 @@ class SimTrainer:
             # draw fresh indices every step, not PRNGKey(0) forever
             mean_update, new_ef = exchange.exchange(
                 updates, state["ef"], None, key=run.key_at(state["step"]))
+            if health:
+                if tiered:
+                    # two-tier (lags_hier2): delta gates the slow OUTER
+                    # wire.  The outer residual is pod-replicated, so the
+                    # leading-P sum over-counts by n_inner; p_eff = pods.
+                    n_in = max(1, int(getattr(exchange, "n_inner", 1)))
+                    n_out = p_workers // n_in
+                    e_sum = jax.tree.map(lambda e: e.sum(0) / n_in,
+                                         new_ef["outer"])
+                    delta = H.delta_leaves_from_mean(
+                        e_sum, mean_update, exchange.ks, n_out)
+                    acc_in = jax.tree.map(lambda e, u: e + u,
+                                          state["ef"]["inner"], updates)
+                    metrics["health_ef_energy_inner"] = H.energy_leaves(
+                        new_ef["inner"], acc_in)
+                    agg = jax.tree.map(lambda e, m: e + n_out * m,
+                                       e_sum, mean_update)
+                    metrics["health_ef_energy_outer"] = H.safe_ratio(
+                        H.sq_leaves(e_sum), H.sq_leaves(agg))
+                else:
+                    e_sum = jax.tree.map(lambda e: e.sum(0), new_ef)
+                    delta = H.delta_leaves_from_mean(
+                        e_sum, mean_update, exchange.ks, p_workers)
+                    acc = jax.tree.map(lambda e, u: e + u,
+                                       state["ef"], updates)
+                    metrics["health_ef_energy_flat"] = H.energy_leaves(
+                        new_ef, acc)
+                metrics["health_delta"] = delta      # (L,) = tree.leaves
+                metrics["health_delta_max"] = delta.max()
             deltas, new_opt = optimizer.update(mean_update, state["opt"],
                                                params, lr=1.0)
             new_params = opt.apply_deltas(params, deltas)

@@ -140,6 +140,41 @@ class TestEventLog:
         assert [e.step for e in log.events()] == [3, 4]
         assert log.events()[-1].seq == 4     # seq keeps counting
 
+    def test_dropped_counter_and_clear(self):
+        log = OE.EventLog(capacity=2)
+        assert log.dropped == 0
+        for i in range(5):
+            log.emit("trigger", step=i)
+        assert log.dropped == 3            # evictions counted, not silent
+        assert len(log) == 2
+        log.clear()
+        assert log.dropped == 0 and len(log) == 0
+
+    def test_dropped_surfaced_in_snapshot(self, tmp_path):
+        """A ring that evicted events must say so: counter row + sidecar,
+        and re-saving must not double-count the same evictions."""
+        reg, log = OM.MetricsRegistry(), OE.EventLog(capacity=2)
+        reg.counter("train_steps_total").inc()
+        for i in range(5):
+            log.emit("trigger", step=i)
+        path = OM.save_snapshot(str(tmp_path / "d"), reg, log)
+        snap = OM.load_snapshot(path)
+        assert snap["meta"]["counts"]["events_dropped"] == 3
+        assert OM.metric_total(snap, "observe/events/dropped_total") == 3
+        snap2 = OM.load_snapshot(OM.save_snapshot(str(tmp_path / "d2"),
+                                                  reg, log))
+        assert OM.metric_total(snap2,
+                               "observe/events/dropped_total") == 3
+
+    def test_no_drops_sidecar_reads_zero(self, tmp_path):
+        reg, log = OM.MetricsRegistry(), OE.EventLog()
+        reg.counter("train_steps_total").inc()
+        log.emit("trigger", step=0)
+        snap = OM.load_snapshot(OM.save_snapshot(str(tmp_path / "z"),
+                                                 reg, log))
+        assert snap["meta"]["counts"]["events_dropped"] == 0
+        assert OM.metric_total(snap, "observe/events/dropped_total") == 0
+
     def test_row_roundtrip(self):
         ev = OE.EventLog().emit("replan", step=7, swapped=True,
                                 trigger="anomaly[step_time]")
@@ -179,6 +214,15 @@ def _golden_plane():
         h.observe(v)
     reg.gauge("train_loss", 'Loss with a "weird" label\nvalue.',
               ("mode",)).set(1.5, mode='lags\\dp "quoted"\nnewline')
+    reg.gauge("train_health_delta",
+              "Online per-leaf Assumption-1 delta (closed-form RandK "
+              "denominator); leaf label = lags/health/delta/...",
+              ("leaf", "mode")).set(
+        0.8125, mode="lags_dp", leaf="lags/health/delta/blocks/0/wq")
+    reg.gauge("publish_health_ef_energy",
+              "Stream-residual energy retention per leaf.",
+              ("leaf",)).set(
+        0.25, leaf="lags/health/ef_energy/stream/embed")
     evs.emit("trigger", step=3, name="cadence")
     evs.emit("replan", step=3, swapped=True, improvement=0.25,
              trigger="cadence")
@@ -186,6 +230,8 @@ def _golden_plane():
              nbytes=1024)
     evs.emit("request", step=0, name="serve/request/b2xn4?version=2",
              prefill_s=0.125, decode_tok_s=64.0, version=2)
+    evs.emit("health_alarm", step=5, name="lags/health/delta/",
+             reason="threshold", delta_max=1.75, threshold=1.5)
     return reg, evs
 
 
@@ -238,20 +284,27 @@ class TestValidate:
         snap["metrics"].pop()
         assert any("sidecar counts" in p for p in check.validate(snap))
 
-    def test_missing_required_subsystem(self, tmp_path):
-        snap = self._snap(tmp_path)
+    @staticmethod
+    def _strip_train(snap):
+        # both the train_* metric rows AND the train-subsystem events
+        # (health_alarm) count as coverage — strip them together
         snap["metrics"] = [r for r in snap["metrics"]
                            if not r["name"].startswith("train")]
+        snap["events"] = [r for r in snap["events"]
+                          if r["kind"] != "health_alarm"]
         snap["meta"]["counts"]["metrics"] = len(snap["metrics"])
+        snap["meta"]["counts"]["events"] = len(snap["events"])
+
+    def test_missing_required_subsystem(self, tmp_path):
+        snap = self._snap(tmp_path)
+        self._strip_train(snap)
         snap["meta"]["subsystems"].remove("train")
         assert any("required subsystem 'train'" in p
                    for p in check.validate(snap, require=("train",)))
 
     def test_overclaimed_subsystem(self, tmp_path):
         snap = self._snap(tmp_path)
-        snap["metrics"] = [r for r in snap["metrics"]
-                           if not r["name"].startswith("train")]
-        snap["meta"]["counts"]["metrics"] = len(snap["metrics"])
+        self._strip_train(snap)
         assert any("over" in p or "uncovered" in p
                    for p in check.validate(snap))
 
@@ -276,12 +329,51 @@ class TestValidate:
         probs = check.validate(snap, require=("serve",))
         assert any("missing fields" in p for p in probs)
 
+    def test_require_health_passes_on_full_plane(self, tmp_path):
+        snap = self._snap(tmp_path)
+        assert check.validate(snap, require_health=True) == []
+
+    def test_require_health_missing_delta_gauges(self, tmp_path):
+        snap = self._snap(tmp_path)
+        snap["metrics"] = [r for r in snap["metrics"]
+                           if r["name"] not in check.DELTA_METRICS]
+        snap["meta"]["counts"]["metrics"] = len(snap["metrics"])
+        probs = check.validate(snap, require_health=True)
+        assert any("health_every" in p for p in probs)
+
+    def test_require_health_stream_needs_residual_gauges(self, tmp_path):
+        snap = self._snap(tmp_path)
+        snap["metrics"] = [r for r in snap["metrics"]
+                           if r["name"] != "publish_health_ef_energy"]
+        snap["meta"]["counts"]["metrics"] = len(snap["metrics"])
+        probs = check.validate(snap, require=("stream",),
+                               require_health=True)
+        assert any("publish_health_ef_energy" in p for p in probs)
+
+    def test_max_delta_bounds_every_delta_row(self, tmp_path):
+        snap = self._snap(tmp_path)          # golden delta = 0.8125
+        assert check.validate(snap, max_delta=1.0) == []
+        probs = check.validate(snap, max_delta=0.5)
+        assert any("train_health_delta" in p and "--max-delta" in p
+                   for p in probs)
+
+    def test_max_delta_without_gauges_is_a_problem(self, tmp_path):
+        snap = self._snap(tmp_path)
+        snap["metrics"] = [r for r in snap["metrics"]
+                           if r["name"] not in check.DELTA_METRICS]
+        snap["meta"]["counts"]["metrics"] = len(snap["metrics"])
+        assert any("--max-delta" in p
+                   for p in check.validate(snap, max_delta=1.0))
+
     def test_cli_exit_code(self, tmp_path):
         reg, evs = _golden_plane()
         path = OM.save_snapshot(str(tmp_path / "cli"), reg, evs)
         assert check.main([path, "--require", "train", "serve"]) == 0
         assert check.main([path, "--max-publish-ratio", "0.1"]) == 1
         assert check.main([str(tmp_path / "missing")]) == 1
+        assert check.main([path, "--require-health",
+                           "--max-delta", "1.0"]) == 0
+        assert check.main([path, "--max-delta", "0.5"]) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -120,6 +120,33 @@ class TestFakeTrace:
                  for e in sparse.named(names.COMM_PREFIX)}
         assert "allgather" in kinds
 
+    def test_chrome_export_roundtrips_fake_trace(self, tmp_path):
+        """export_chrome_trace is the inverse of _parse_chrome_trace:
+        every grammar-named fake-backend event (step/fwd/bwd/comm)
+        survives with name, start and duration intact."""
+        tr = _fake().capture(0)
+        path = OT.export_chrome_trace(tr, str(tmp_path / "t.trace.json"))
+        got = OT._parse_chrome_trace(path)
+        want = [e for e in tr.events if names.parse(e.name) is not None]
+        assert want                      # the fake backend speaks grammar
+        assert [e.name for e in got] == [e.name for e in want]
+        for g, w in zip(got, want):
+            assert g.t_start == pytest.approx(w.t_start, abs=1e-12)
+            assert g.dur == pytest.approx(w.dur, abs=1e-12)
+
+    def test_chrome_export_gzip_and_meta(self, tmp_path):
+        import gzip
+        import json as J
+        tr = _fake().capture(1)
+        path = OT.export_chrome_trace(tr, str(tmp_path / "t.json.gz"))
+        with gzip.open(path, "rt") as f:
+            obj = J.load(f)
+        assert obj["otherData"] == tr.meta      # provenance rides along
+        assert all(ev["ph"] == "X" for ev in obj["traceEvents"])
+        cats = {ev["cat"] for ev in obj["traceEvents"]}
+        assert {"step", "fwd", "bwd", "comm"} <= cats
+        assert OT._parse_chrome_trace(path)     # .gz parse works too
+
     def test_real_capture_smoke(self, tmp_path):
         """jax.profiler capture wrapper: runs, returns a Trace, points at
         the artifact dir even when nothing is parseable on a CPU host,
